@@ -1,0 +1,118 @@
+"""Shared benchmark fixtures: paper-shaped synthetic datasets + runners.
+
+Query shapes follow Table 3 of the paper (|V_Z|, |V_X|, k, rarity of the
+top-k) scaled to what a single CPU core processes in minutes rather than
+the authors' 30+ GiB in-memory runs. The machine-independent quantities —
+fraction of blocks/tuples read, rounds, guarantee satisfaction — are the
+reproduction targets; wall-clock ratios are reported for the same binary
+on the same box.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import numpy as np
+
+from repro.core.engine import EngineConfig, run_engine
+from repro.core.histsim import HistSimParams
+from repro.data.layout import BlockedDataset, block_layout
+from repro.data.synth import SynthSpec, make_dataset
+
+# paper defaults (Sec 5.2)
+EPS_DEFAULT = 0.06
+DELTA_DEFAULT = 0.01
+LOOKAHEAD_DEFAULT = 512
+
+# Paper-shaped queries (Table 3 analogues, scaled so that Theorem 1's
+# sample complexity is comfortably below the dataset size — the paper's
+# datasets are 380-677M tuples; ours are sized to keep CPU wall time in
+# minutes while preserving the sampling regime). Per-query eps follows
+# the paper's practice of adjusting eps per query (their q4 runs at 0.07).
+#   flights_q1: common top-k, moderate V_Z     (FLIGHTS-q1)
+#   flights_q2: rare top-k (zipf tail)         (FLIGHTS-q2/q3)
+#   flights_q4: continuum of distances         (FLIGHTS-q4, uniform target)
+#   taxi_q1:    very high V_Z                  (TAXI-q1/q2)
+#   police_q1:  tiny V_X                       (POLICE-q1/q2)
+QUERIES = {
+    "flights_q1": SynthSpec(
+        v_z=161, v_x=24, num_tuples=6_000_000, k=10, n_close=10,
+        close_distance=0.02, far_distance=0.3, zipf_a=1.0, close_rank="head", seed=42,
+    ),
+    "flights_q2": SynthSpec(
+        v_z=161, v_x=24, num_tuples=30_000_000, k=10, n_close=10,
+        close_distance=0.02, far_distance=0.3, zipf_a=1.2, close_rank="tail", seed=43,
+    ),
+    "flights_q4": SynthSpec(
+        v_z=161, v_x=24, num_tuples=6_000_000, k=5, n_close=40,
+        close_distance=0.16, far_distance=0.3, zipf_a=1.0, close_rank="head",
+        target_kind="uniform", seed=46,
+    ),
+    "taxi_q1": SynthSpec(
+        v_z=7548, v_x=24, num_tuples=32_000_000, k=10, n_close=10,
+        close_distance=0.05, far_distance=0.45, zipf_a=0.3, close_rank="head", seed=44,
+    ),
+    "police_q1": SynthSpec(
+        v_z=191, v_x=2, num_tuples=6_000_000, k=10, n_close=10,
+        close_distance=0.01, far_distance=0.35, zipf_a=0.9, close_rank="head", seed=45,
+    ),
+}
+
+# per-query eps (paper default 0.06; rare/high-V_Z queries need a larger
+# tolerance to terminate inside the dataset, exactly as the paper bumps
+# FLIGHTS-q4 to 0.07)
+QUERY_EPS = {
+    "flights_q1": 0.06,
+    "flights_q2": 0.08,
+    "flights_q4": 0.07,
+    "taxi_q1": 0.12,
+    "police_q1": 0.06,
+}
+
+
+@functools.lru_cache(maxsize=None)
+def get_query(name: str):
+    spec = QUERIES[name]
+    ds = make_dataset(spec)
+    blocked = block_layout(ds.z, ds.x, v_z=spec.v_z, v_x=spec.v_x, block_size=512, seed=spec.seed)
+    return spec, ds, blocked
+
+
+def run_variant(name: str, variant: str, *, eps=None, delta=DELTA_DEFAULT,
+                lookahead=LOOKAHEAD_DEFAULT, seed=0, warm=True):
+    eps = eps if eps is not None else QUERY_EPS.get(name, EPS_DEFAULT)
+    spec, ds, blocked = get_query(name)
+    params = HistSimParams(v_z=spec.v_z, v_x=spec.v_x, k=spec.k, eps=eps, delta=delta)
+    cfg = EngineConfig(variant=variant, lookahead=lookahead, seed=seed)
+    if warm:  # jit warmup outside the timed run
+        run_engine(blocked, ds.target, params,
+                   dataclasses.replace(cfg, max_rounds=1, seed=seed + 1))
+    t0 = time.perf_counter()
+    res = run_engine(blocked, ds.target, params, cfg)
+    wall = time.perf_counter() - t0
+    return res, wall, ds
+
+
+def delta_d(res, ds) -> float:
+    """Total relative error in visual distance (paper Sec 5.3)."""
+    true_sorted = np.sort(ds.true_dists)[: len(res.ids)]
+    got = np.sort(ds.true_dists[res.ids])
+    denom = max(true_sorted.sum(), 1e-12)
+    return max(0.0, (got.sum() - true_sorted.sum()) / denom)
+
+
+def guarantees_hold(res, ds, eps: float) -> bool:
+    """Check Guarantees 1 & 2 against planted ground truth."""
+    ids = res.ids
+    worst = max(ds.true_dists[i] for i in ids)
+    for j in set(np.argsort(ds.true_dists)[: len(ids)].tolist()) - set(ids.tolist()):
+        if worst - ds.true_dists[j] >= eps:
+            return False
+    counts = np.asarray(res.state.counts)
+    for i in ids:
+        r_hat = counts[i] / max(counts[i].sum(), 1.0)
+        if np.abs(r_hat - ds.true_hists[i]).sum() >= eps:
+            return False
+    return True

@@ -1,0 +1,31 @@
+"""Figures 10 & 11: effect of delta on latency and Delta_d.
+
+Paper claim: both are more-or-less constant in delta — inherited from
+Theorem 1's insensitivity to delta (the 1/|V_X| exponent in the log).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import delta_d, get_query, run_variant
+
+GRID = (0.001, 0.01, 0.05, 0.2)
+QUERY = "flights_q1"
+
+
+def run(csv_rows: list) -> None:
+    spec, _, blocked = get_query(QUERY)
+    for delta in GRID:
+        res, wall, ds = run_variant(QUERY, "fastmatch", delta=delta)
+        dd = delta_d(res, ds)
+        csv_rows.append(
+            dict(
+                name=f"fig10_11.delta_{delta}",
+                us_per_call=wall * 1e6,
+                derived=(
+                    f"blocks_frac={res.blocks_read / blocked.num_blocks:.3f}"
+                    f" delta_d={dd:.4f}"
+                ),
+            )
+        )

@@ -1,0 +1,39 @@
+"""Figures 7 & 8: effect of eps on latency (Fig 7) and Delta_d (Fig 8).
+
+Paper claims: latency decreases with eps; Delta_d grows with eps but
+stays small ("never more than 6% larger than optimal ... even for the
+largest values of eps").
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import delta_d, get_query, run_variant
+
+# flights_q4 has a CONTINUUM of candidate distances to the (uniform)
+# target — the regime where larger eps actually costs accuracy (Fig. 8's
+# Delta_d > 0); flights_q1's planted gap gives Delta_d = 0 at every eps.
+EPS_GRID = (0.05, 0.07, 0.1, 0.15, 0.2)
+QUERY = "flights_q4"
+ACCURACY_RUNS = 5
+
+
+def run(csv_rows: list) -> None:
+    for eps in EPS_GRID:
+        res, wall, ds = run_variant(QUERY, "fastmatch", eps=eps, seed=0)
+        dds = []
+        for s in range(ACCURACY_RUNS):
+            r, _, _ = run_variant(QUERY, "fastmatch", eps=eps, seed=100 + s, warm=False)
+            dds.append(delta_d(r, ds))
+        spec, _, blocked = get_query(QUERY)
+        csv_rows.append(
+            dict(
+                name=f"fig7_8.eps_{eps}",
+                us_per_call=wall * 1e6,
+                derived=(
+                    f"blocks_frac={res.blocks_read / blocked.num_blocks:.3f}"
+                    f" delta_d_mean={np.mean(dds):.4f} delta_d_max={np.max(dds):.4f}"
+                ),
+            )
+        )

@@ -1,0 +1,29 @@
+"""Figure 9: effect of the lookahead parameter on latency.
+
+Paper claims: latency robust to lookahead for moderate |V_Z|; large
+|V_Z| (TAXI) benefits from larger lookahead; default 512 acceptable
+everywhere.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import get_query, run_variant
+
+GRID = (32, 128, 512, 2048)
+
+
+def run(csv_rows: list) -> None:
+    for q in ("flights_q1", "taxi_q1"):
+        spec, _, blocked = get_query(q)
+        for la in GRID:
+            res, wall, _ = run_variant(q, "fastmatch", lookahead=la)
+            csv_rows.append(
+                dict(
+                    name=f"fig9.{q}.lookahead_{la}",
+                    us_per_call=wall * 1e6,
+                    derived=(
+                        f"rounds={res.rounds}"
+                        f" blocks_frac={res.blocks_read / blocked.num_blocks:.3f}"
+                    ),
+                )
+            )

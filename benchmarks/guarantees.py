@@ -1,0 +1,27 @@
+"""Sec 5.4 'Satisfaction of Guarantees': violation counting.
+
+Paper claim: guarantees held across ALL runs for all queries (delta is a
+loose upper bound on the true failure probability).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import QUERY_EPS, guarantees_hold, run_variant
+
+RUNS = 10
+
+
+def run(csv_rows: list) -> None:
+    for q in ("flights_q1", "flights_q2", "flights_q4", "police_q1"):
+        violations = 0
+        for s in range(RUNS):
+            res, _, ds = run_variant(q, "fastmatch", seed=200 + s, warm=(s == 0))
+            if not guarantees_hold(res, ds, eps=QUERY_EPS[q]):
+                violations += 1
+        csv_rows.append(
+            dict(
+                name=f"guarantees.{q}",
+                us_per_call=0.0,
+                derived=f"violations={violations}/{RUNS} (delta=0.01 bound)",
+            )
+        )

@@ -1,0 +1,55 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md source).
+
+Reads benchmarks/results/dryrun/*.json and emits one row per
+(arch x shape x mesh): the three roofline terms, the bottleneck, and the
+MODEL_FLOPS / HLO_FLOPS usefulness ratio.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).parent / "results" / "dryrun"
+
+
+def load_cells(mesh: str = None) -> list:
+    cells = []
+    for p in sorted(RESULTS.glob("*.json")):
+        d = json.loads(p.read_text())
+        if mesh and d.get("mesh") != mesh:
+            continue
+        cells.append(d)
+    return cells
+
+
+def run(csv_rows: list) -> None:
+    if not RESULTS.exists():
+        csv_rows.append(dict(name="roofline.missing", us_per_call=0.0,
+                             derived="run launch/dryrun.py --all first"))
+        return
+    for d in load_cells():
+        tag = f"roofline.{d['arch']}.{d['shape']}.{d['mesh']}"
+        if d.get("skipped"):
+            csv_rows.append(dict(name=tag, us_per_call=0.0, derived="skipped:" + d["reason"][:40]))
+            continue
+        if not d.get("ok"):
+            csv_rows.append(dict(name=tag, us_per_call=0.0, derived="FAILED " + d.get("error", "")[:60]))
+            continue
+        r = d["roofline"]
+        dominant = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        frac = r["t_compute_s"] / max(dominant, 1e-30)
+        csv_rows.append(
+            dict(
+                name=tag,
+                us_per_call=dominant * 1e6,  # roofline-projected step time
+                derived=(
+                    f"bottleneck={r['bottleneck']}"
+                    f" compute_ms={r['t_compute_s']*1e3:.2f}"
+                    f" memory_ms={r['t_memory_s']*1e3:.2f}"
+                    f" collective_ms={r['t_collective_s']*1e3:.2f}"
+                    f" roofline_frac={frac:.3f}"
+                    f" useful_flops={d['useful_flops_ratio']:.3f}"
+                ),
+            )
+        )

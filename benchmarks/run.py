@@ -1,0 +1,59 @@
+"""Benchmark aggregator: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (one per measurement) and
+writes the same to benchmarks/results/bench_results.csv.
+
+  PYTHONPATH=src python -m benchmarks.run              # everything
+  PYTHONPATH=src python -m benchmarks.run fig4 table4  # subset
+"""
+
+from __future__ import annotations
+
+import pathlib
+import sys
+import time
+
+from benchmarks import (
+    fig4_bound_ratio,
+    fig7_8_epsilon,
+    fig9_lookahead,
+    fig10_11_delta,
+    guarantees,
+    roofline_report,
+    table4_speedups,
+)
+
+SUITES = {
+    "fig4": fig4_bound_ratio.run,
+    "table4": table4_speedups.run,
+    "fig7_8": fig7_8_epsilon.run,
+    "fig9": fig9_lookahead.run,
+    "fig10_11": fig10_11_delta.run,
+    "guarantees": guarantees.run,
+    "roofline": roofline_report.run,
+}
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(SUITES)
+    rows: list = []
+    for name in wanted:
+        if name not in SUITES:
+            raise SystemExit(f"unknown suite {name!r}; have {list(SUITES)}")
+        t0 = time.time()
+        SUITES[name](rows)
+        print(f"# suite {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+    print("name,us_per_call,derived")
+    lines = []
+    for r in rows:
+        line = f"{r['name']},{r['us_per_call']:.1f},{r['derived']}"
+        print(line)
+        lines.append(line)
+    out = pathlib.Path(__file__).parent / "results"
+    out.mkdir(exist_ok=True)
+    (out / "bench_results.csv").write_text("name,us_per_call,derived\n" + "\n".join(lines) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Quickstart: top-k histogram matching with HistSim/FastMatch.
+
+Recreates the paper's running example (Q1): "which countries have income
+distributions most similar to Greece's?" on a synthetic census, and shows
+the engine touching a small fraction of the data while satisfying the
+separation/reconstruction guarantees.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core.engine import EngineConfig, run_engine
+from repro.core.histsim import HistSimParams
+from repro.data.layout import block_layout
+from repro.data.synth import SynthSpec, make_dataset
+
+
+def main():
+    # A census-like table: Z = country (161 of them), X = income bracket
+    # (7 brackets, paper Fig. 1), ~6M rows. Ten countries are planted with
+    # income distributions close to the target country's.
+    spec = SynthSpec(
+        v_z=161, v_x=7, num_tuples=6_000_000, k=10, n_close=10,
+        close_distance=0.02, far_distance=0.3, zipf_a=1.0, seed=0,
+    )
+    print("generating synthetic census ...")
+    ds = make_dataset(spec)
+    blocked = block_layout(ds.z, ds.x, v_z=spec.v_z, v_x=spec.v_x, seed=0)
+
+    # "Greece" = the planted target distribution; eps/delta = paper defaults
+    params = HistSimParams(v_z=spec.v_z, v_x=spec.v_x, k=10, eps=0.06, delta=0.01)
+    print(f"matching against target across {blocked.num_blocks} blocks ...")
+    res = run_engine(blocked, ds.target, params, EngineConfig(variant="fastmatch"))
+
+    print(f"\ntop-{params.k} matching countries (ids): {sorted(res.ids.tolist())}")
+    print(f"planted ground truth:                    {sorted(ds.true_top_k.tolist())}")
+    print(
+        f"\nread {res.blocks_read}/{blocked.num_blocks} blocks "
+        f"({res.blocks_read / blocked.num_blocks:.1%}) in {res.rounds} rounds, "
+        f"{res.wall_time_s:.2f}s wall"
+    )
+    print(f"certified failure probability delta_upper = {res.delta_upper:.2e} (< 0.01)")
+    est = np.asarray(res.state.tau)[res.ids]
+    true = ds.true_dists[res.ids]
+    print("\n  id   est-dist  true-dist")
+    for i, e, t in zip(res.ids, est, true):
+        print(f"  {i:4d}  {e:.4f}    {t:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from repro.configs.base import (
+    ModelConfig,
+    Shape,
+    SHAPES,
+    get_config,
+    get_smoke_config,
+    list_archs,
+)

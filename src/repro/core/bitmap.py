@@ -1,0 +1,68 @@
+"""Packed per-block candidate-presence bitmaps (paper Sec 4.1).
+
+The paper stores, per attribute value, one bit per 4 KiB disk block
+("orders-of-magnitude cheaper than a bit per tuple"). We keep the same
+layout transposed for SIMD/VPU access: a (num_blocks, W) uint32 matrix
+with W = ceil(V_Z / 32); bit j of word (b, w) says whether data block b
+contains at least one tuple of candidate 32w + j.
+
+Bitmaps are built once per (dataset, candidate attribute) as a
+preprocessing step — the analogue of the paper's index build.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["words_for", "build_block_bitmap", "pack_active_mask", "unpack_mask"]
+
+
+def words_for(v_z: int) -> int:
+    return -(-v_z // 32)
+
+
+def build_block_bitmap(z_blocks: np.ndarray, v_z: int) -> np.ndarray:
+    """Build the packed bitmap from blocked candidate ids.
+
+    Args:
+      z_blocks: (num_blocks, block_size) int array of candidate ids per
+        tuple; ids < 0 (padding) are ignored.
+      v_z: number of candidates.
+
+    Returns:
+      (num_blocks, W) uint32 packed presence bitmap.
+    """
+    z_blocks = np.asarray(z_blocks)
+    nb = z_blocks.shape[0]
+    w = words_for(v_z)
+    present = np.zeros((nb, v_z), dtype=bool)
+    rows = np.repeat(np.arange(nb), z_blocks.shape[1])
+    vals = z_blocks.reshape(-1)
+    ok = (vals >= 0) & (vals < v_z)
+    present[rows[ok], vals[ok]] = True
+    # pack: candidate c -> word c//32, bit c%32
+    padded = np.zeros((nb, w * 32), dtype=bool)
+    padded[:, :v_z] = present
+    bits = padded.reshape(nb, w, 32).astype(np.uint32)
+    weights = (np.uint32(1) << np.arange(32, dtype=np.uint32))[None, None, :]
+    return (bits * weights).sum(axis=2, dtype=np.uint32)
+
+
+def pack_active_mask(active: jax.Array) -> jax.Array:
+    """Pack a (V_Z,) bool active mask into (W,) uint32 words (jit-safe)."""
+    v_z = active.shape[0]
+    w = words_for(v_z)
+    padded = jnp.zeros((w * 32,), jnp.uint32).at[: v_z].set(active.astype(jnp.uint32))
+    bits = padded.reshape(w, 32)
+    weights = jnp.left_shift(jnp.uint32(1), jnp.arange(32, dtype=jnp.uint32))[None, :]
+    return jnp.sum(bits * weights, axis=1, dtype=jnp.uint32)
+
+
+def unpack_mask(words: jax.Array, v_z: int) -> jax.Array:
+    """Inverse of pack_active_mask (for tests)."""
+    w = words.shape[0]
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, :]
+    bits = jnp.right_shift(words[:, None], shifts) & jnp.uint32(1)
+    return bits.reshape(w * 32)[:v_z].astype(bool)

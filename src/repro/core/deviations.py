@@ -1,0 +1,165 @@
+"""Deviation selection (Sec 3.3 of the paper) — the heart of HistSim.
+
+Given per-candidate distance estimates tau_i and sample counts n_i,
+choose per-candidate deviations eps_i that satisfy the constraints of
+Lemma 2 (so that eps_i-deviation for all i implies Guarantees 1 and 2)
+while making each eps_i as large as possible (so the failure bound
+delta_i = 2^V_X exp(-eps_i^2 n_i / 2) is as small as possible):
+
+  * split point  s = midpoint between the k-th and (k+1)-th smallest tau
+  * i in M (top-k):   eps_i = min(eps, s + eps/2 - tau_i)
+  * j not in M:       eps_j = tau_j - max(s - eps/2, 0)
+
+Then delta_upper = sum_i delta_i and the active set is
+{i : delta_i > delta / V_Z} (the AnyActive threshold, Sec 4.2).
+
+Everything here is branch-free, fixed-shape JAX, usable inside jit and
+under shard_map (candidate-sharded with a tiny all-gather of tau).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bounds
+
+__all__ = ["DeviationState", "assign_deviations", "split_point", "top_k_mask"]
+
+
+class DeviationState(NamedTuple):
+    """Result of one statistics-engine iteration (Alg. 1 lines 8-14)."""
+
+    tau: jax.Array  # (V_Z,) f32 — distance estimates d(r_hat_i, Q_hat)
+    in_top_k: jax.Array  # (V_Z,) bool — membership in M
+    split: jax.Array  # () f32 — split point s
+    eps_i: jax.Array  # (V_Z,) f32 — assigned deviations
+    log_delta_i: jax.Array  # (V_Z,) f32 — log failure bounds
+    delta_upper: jax.Array  # () f32 — sum_i delta_i
+    active: jax.Array  # (V_Z,) bool — delta_i > delta/V_Z
+
+
+def top_k_mask(tau: jax.Array, k: int) -> jax.Array:
+    """Boolean mask of the k smallest entries of tau (ties broken by index).
+
+    Uses a rank-based construction rather than a threshold comparison so
+    exactly k entries are selected even under ties — HistSim's M must have
+    |M| = k (Definition 3).
+    """
+    v_z = tau.shape[0]
+    order = jnp.argsort(tau, stable=True)  # ascending
+    ranks = jnp.zeros((v_z,), jnp.int32).at[order].set(jnp.arange(v_z, dtype=jnp.int32))
+    return ranks < k
+
+
+def split_point(tau: jax.Array, k: int) -> jax.Array:
+    """Midpoint between the furthest in-M and closest out-of-M candidate.
+
+    s = (tau_(k) + tau_(k+1)) / 2 in sorted order (paper Sec 3.3: "the
+    midpoint halfway between the furthest candidate in M and the closest
+    candidate not in M").
+    """
+    v_z = tau.shape[0]
+    if k >= v_z:  # degenerate: everything matches
+        return jnp.max(tau)
+    neg_top = jax.lax.top_k(-tau, k + 1)[0]  # k+1 smallest tau, descending in -tau
+    kth = -neg_top[k - 1] if k >= 1 else jnp.asarray(0.0, tau.dtype)
+    k1th = -neg_top[k]
+    return 0.5 * (kth + k1th)
+
+
+def assign_deviations(
+    tau: jax.Array,
+    n: jax.Array,
+    *,
+    k: int,
+    eps: float,
+    delta: float,
+    v_x: int,
+) -> DeviationState:
+    """One statistics iteration: eps_i, delta_i, delta_upper, active set.
+
+    Args:
+      tau: (V_Z,) distance estimates.
+      n: (V_Z,) samples taken per candidate.
+      k/eps/delta: user parameters of Problem 1.
+      v_x: histogram support size |V_X|.
+    """
+    tau = jnp.asarray(tau, jnp.float32)
+    v_z = tau.shape[0]
+    in_m = top_k_mask(tau, k)
+    s = split_point(tau, k)
+
+    # Sec 3.3: in-M candidates must not cross s + eps/2 and must have
+    # eps_i <= eps (reconstruction); out-of-M must not cross s - eps/2
+    # (clamped at 0: no negative distances).
+    eps_in = jnp.minimum(eps, s + 0.5 * eps - tau)
+    eps_out = tau - jnp.maximum(s - 0.5 * eps, 0.0)
+    eps_i = jnp.where(in_m, eps_in, eps_out)
+    # Guard: deviations are widths, never negative. (Ties at the boundary
+    # can produce 0; delta_i then saturates at 1, which is conservative.)
+    eps_i = jnp.maximum(eps_i, 0.0)
+
+    log_delta_i = bounds.theorem1_log_delta(eps_i, n, v_x)
+    # Sum of deltas in plain space is fine: each delta_i <= 1 and V_Z is
+    # at most a few tens of thousands, so no overflow; underflow to 0 is
+    # exactly what we want for long-pruned candidates.
+    delta_i = jnp.exp(log_delta_i)
+    delta_upper = jnp.sum(delta_i)
+
+    log_threshold = jnp.log(jnp.asarray(delta / float(v_z), jnp.float32))
+    active = log_delta_i > log_threshold
+    return DeviationState(
+        tau=tau,
+        in_top_k=in_m,
+        split=s,
+        eps_i=eps_i,
+        log_delta_i=log_delta_i,
+        delta_upper=delta_upper,
+        active=active,
+    )
+
+
+def slowmatch_deviations(
+    tau: jax.Array,
+    n: jax.Array,
+    *,
+    k: int,
+    eps: float,
+    delta: float,
+    v_x: int,
+) -> DeviationState:
+    """SlowMatch's termination state (paper Sec 5.2).
+
+    Fixed-confidence intervals of width w_i = theorem1_epsilon(n_i,
+    delta/V_Z, V_X) around every candidate; terminate iff
+      (a) no top-k interval is wider than eps, and
+      (b) no top-k interval overlaps a non-top-k interval by more than eps.
+    Equivalent to requiring max_i delta_i <= delta/V_Z for the HistSim
+    deviation assignment; we expose it in the same DeviationState shape by
+    reporting delta_upper = V_Z * max_i delta_i so that the shared
+    termination test `delta_upper < delta` implements the SlowMatch rule.
+    """
+    tau = jnp.asarray(tau, jnp.float32)
+    v_z = tau.shape[0]
+    in_m = top_k_mask(tau, k)
+    s = split_point(tau, k)
+    eps_in = jnp.minimum(eps, s + 0.5 * eps - tau)
+    eps_out = tau - jnp.maximum(s - 0.5 * eps, 0.0)
+    eps_i = jnp.maximum(jnp.where(in_m, eps_in, eps_out), 0.0)
+    log_delta_i = bounds.theorem1_log_delta(eps_i, n, v_x)
+    # SlowMatch: every candidate individually at confidence delta/V_Z.
+    delta_upper = float(v_z) * jnp.exp(jnp.max(log_delta_i))
+    log_threshold = jnp.log(jnp.asarray(delta / float(v_z), jnp.float32))
+    active = log_delta_i > log_threshold
+    return DeviationState(
+        tau=tau,
+        in_top_k=in_m,
+        split=s,
+        eps_i=eps_i,
+        log_delta_i=log_delta_i,
+        delta_upper=delta_upper,
+        active=active,
+    )

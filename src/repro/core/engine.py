@@ -1,0 +1,227 @@
+"""The FastMatch engine: HistSim + block policies + lookahead staleness.
+
+This is the executable analogue of the paper's Figure 5 architecture.
+The three components map onto the execution model as follows:
+
+  I/O manager        — gathers marked blocks from the blocked dataset
+                       (host memory here; disk/remote-FS in production)
+  sampling engine    — AnyActive marking of a lookahead window of blocks
+                       against the packed bitmap, using the FRESHEST
+                       delta_i posted so far (which is one window stale —
+                       the paper's asynchronous relaxation, Sec 4.2)
+  statistics engine  — the jitted HistSim ingest+stats round
+
+Variants (paper Sec 5.2) are configuration points of this single engine:
+
+  variant     policy      lookahead   stats cadence        criterion
+  ---------   ---------   ---------   ------------------   ---------
+  fastmatch   anyactive   L (512)     once per window      histsim
+  syncmatch   anyactive   1           once per block       histsim
+  scanmatch   scan        L           once per window      histsim
+  slowmatch   scan        L           once per window      slowmatch
+  scan        scan        —           exact full pass      —
+
+Sampling is WITHOUT replacement from a random start position in the
+pre-shuffled layout. A pass visits every not-yet-read block in cyclic
+order; AnyActive may skip blocks, and skipped blocks remain eligible for
+later passes (candidates can re-activate when the split point moves).
+If a whole pass reads nothing and HistSim still has not terminated, the
+engine completes exactly (reads the remainder) — at that point empirical
+counts equal the true ones and the guarantees hold deterministically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import histsim
+from repro.core.histsim import HistSimParams, HistSimState
+from repro.core.policies import mark_window
+from repro.data.layout import BlockedDataset
+
+__all__ = ["EngineConfig", "MatchResult", "run_engine", "VARIANTS"]
+
+VARIANTS = ("fastmatch", "syncmatch", "scanmatch", "slowmatch", "scan")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    variant: str = "fastmatch"
+    lookahead: int = 512
+    seed: int = 0
+    max_rounds: int = 1_000_000
+    max_passes: int = 4
+    start_block: Optional[int] = None  # None -> random
+
+    def __post_init__(self):
+        if self.variant not in VARIANTS:
+            raise ValueError(f"unknown variant {self.variant!r}")
+
+    @property
+    def policy(self) -> str:
+        return "anyactive" if self.variant in ("fastmatch", "syncmatch") else "scan"
+
+    @property
+    def window(self) -> int:
+        return 1 if self.variant == "syncmatch" else self.lookahead
+
+    @property
+    def criterion(self) -> str:
+        return "slowmatch" if self.variant == "slowmatch" else "histsim"
+
+
+@dataclasses.dataclass
+class MatchResult:
+    ids: np.ndarray  # (k,) matching candidate ids, closest first
+    state: HistSimState
+    rounds: int
+    blocks_read: int
+    blocks_considered: int
+    tuples_read: int
+    wall_time_s: float
+    exact: bool  # True if the engine fell back to a complete read
+    passes: int
+
+    @property
+    def delta_upper(self) -> float:
+        return float(self.state.delta_upper)
+
+
+def _run_exact_scan(dataset: BlockedDataset, state, params, t0) -> "MatchResult":
+    """The paper's Scan baseline: complete heap scan, exact answer."""
+    z_blocks = jnp.asarray(dataset.z_blocks)
+    x_blocks = jnp.asarray(dataset.x_blocks)
+    nb = dataset.num_blocks
+    chunk = 4096
+    for s in range(0, nb, chunk):
+        cj = jnp.arange(s, min(s + chunk, nb), dtype=jnp.int32)
+        state = histsim.ingest(
+            state, z_blocks[cj].reshape(-1), x_blocks[cj].reshape(-1), params=params
+        )
+    state = histsim.stats_step(state, params=params)
+    ids = np.asarray(histsim.top_k_ids(state, params.k))
+    return MatchResult(
+        ids=ids,
+        state=state,
+        rounds=-(-nb // chunk),
+        blocks_read=nb,
+        blocks_considered=nb,
+        tuples_read=dataset.num_tuples,
+        wall_time_s=time.perf_counter() - t0,
+        exact=True,
+        passes=1,
+    )
+
+
+def _ingest_window(state, z_blocks, x_blocks, win_j, marks, params):
+    """Gather marked blocks (unmarked -> padding) and run one round."""
+    zw = jnp.where(marks[:, None], z_blocks[win_j], jnp.int32(-1))
+    xw = jnp.where(marks[:, None], x_blocks[win_j], jnp.int32(-1))
+    return histsim.run_round(state, zw.reshape(-1), xw.reshape(-1), params=params)
+
+
+def run_engine(
+    dataset: BlockedDataset,
+    target: np.ndarray,
+    params: HistSimParams,
+    config: EngineConfig = EngineConfig(),
+) -> MatchResult:
+    """Run one matching query to termination. Returns the top-k + stats."""
+    if params.v_z != dataset.v_z or params.v_x != dataset.v_x:
+        raise ValueError("params/dataset dimension mismatch")
+    if config.criterion != params.criterion:
+        params = dataclasses.replace(params, criterion=config.criterion)
+
+    t0 = time.perf_counter()
+    rng = np.random.default_rng(config.seed)
+    nb = dataset.num_blocks
+    window = min(config.window, nb)
+
+    state = histsim.init_state(params, jnp.asarray(target))
+
+    if config.variant == "scan":
+        return _run_exact_scan(dataset, state, params, t0)
+
+    start = config.start_block if config.start_block is not None else int(rng.integers(nb))
+    order = np.roll(np.arange(nb), -start)  # cyclic visit order
+    read_mask = np.zeros(nb, dtype=bool)
+
+    z_blocks = jnp.asarray(dataset.z_blocks)
+    x_blocks = jnp.asarray(dataset.x_blocks)
+    bitmap = jnp.asarray(dataset.bitmap)
+    tuples_per_block = (dataset.z_blocks >= 0).sum(axis=1)
+
+    rounds = blocks_read = blocks_considered = tuples_read = passes = 0
+    terminated = False
+
+    while not terminated and passes < config.max_passes:
+        pass_order = order[~read_mask[order]]
+        if pass_order.size == 0:
+            break
+        passes += 1
+        read_this_pass = 0
+        pos = 0
+        while pos < pass_order.size and not terminated:
+            win = pass_order[pos : pos + window]
+            pos += len(win)
+            blocks_considered += len(win)
+            win_j = jnp.asarray(win, jnp.int32)
+
+            # sampling engine: mark with the freshest (= one-round-stale) delta
+            marks = mark_window(bitmap[win_j], state.active_words, policy=config.policy)
+            marks_np = np.asarray(marks)
+            n_marked = int(marks_np.sum())
+            if n_marked:
+                state = _ingest_window(state, z_blocks, x_blocks, win_j, marks, params)
+                read = win[marks_np]
+                read_mask[read] = True
+                blocks_read += n_marked
+                read_this_pass += n_marked
+                tuples_read += int(tuples_per_block[read].sum())
+            else:
+                # nothing to read: statistics unchanged, no stats step needed
+                pass
+            rounds += 1
+            if n_marked and histsim.should_terminate(state, params):
+                terminated = True
+            if rounds >= config.max_rounds:
+                terminated = True  # budget cut; result is best-effort
+        if read_this_pass == 0:
+            break  # no unread block can help; fall through to exact fallback
+
+    exact = False
+    if not terminated or not histsim.should_terminate(state, params):
+        # Exact completion: read everything left, answer becomes exact.
+        remaining = np.where(~read_mask)[0]
+        if remaining.size:
+            exact = True
+            for s in range(0, remaining.size, max(window, 1)):
+                chunk = remaining[s : s + window]
+                cj = jnp.asarray(chunk, jnp.int32)
+                state = histsim.ingest(
+                    state, z_blocks[cj].reshape(-1), x_blocks[cj].reshape(-1), params=params
+                )
+                blocks_read += len(chunk)
+                tuples_read += int(tuples_per_block[chunk].sum())
+            read_mask[remaining] = True
+            state = histsim.stats_step(state, params=params)
+        exact = True  # all data read either way
+
+    ids = np.asarray(histsim.top_k_ids(state, params.k))
+    return MatchResult(
+        ids=ids,
+        state=state,
+        rounds=rounds,
+        blocks_read=blocks_read,
+        blocks_considered=blocks_considered,
+        tuples_read=tuples_read,
+        wall_time_s=time.perf_counter() - t0,
+        exact=exact,
+        passes=passes,
+    )

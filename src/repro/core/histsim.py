@@ -1,0 +1,135 @@
+"""HistSim (Algorithm 1): round-based top-k histogram matching.
+
+The algorithm state is a fixed-shape pytree; each round is one jitted
+function application:
+
+    ingest   — accumulate a (padded) batch of (z, x) samples into the
+               per-candidate counts matrix (one-hot-matmul histogram)
+    stats    — distances tau_i, deviation assignment eps_i, failure
+               bounds delta_i, delta_upper, active set (Sec 3.2-3.4)
+
+Termination (`delta_upper < delta`) is a host-side decision, mirroring
+the paper's statistics engine deciding when it may "safely terminate".
+The sampling policies that decide WHICH samples each round ingests live
+in policies.py / engine.py; HistSim itself is sampling-agnostic
+(paper: "Our HistSim algorithm is agnostic to the sampling approach").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import deviations as dev
+from repro.core.bitmap import pack_active_mask
+from repro.kernels import ops
+
+__all__ = ["HistSimParams", "HistSimState", "init_state", "ingest", "stats_step", "run_round"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HistSimParams:
+    """Static configuration of Problem 1 (k, eps, delta) plus dimensions."""
+
+    v_z: int  # number of candidates |V_Z|
+    v_x: int  # histogram support |V_X|
+    k: int  # matches to return
+    eps: float = 0.06  # paper default
+    delta: float = 0.01  # paper default
+    criterion: str = "histsim"  # "histsim" (sum delta_i) | "slowmatch" (max delta_i)
+
+    def __post_init__(self):
+        if not (0 < self.k <= self.v_z):
+            raise ValueError(f"need 0 < k <= V_Z, got k={self.k} V_Z={self.v_z}")
+        if self.criterion not in ("histsim", "slowmatch"):
+            raise ValueError(self.criterion)
+
+
+class HistSimState(NamedTuple):
+    counts: jax.Array  # (V_Z, V_X) f32 empirical counts r_i
+    n: jax.Array  # (V_Z,) f32 samples per candidate n_i
+    q_hat: jax.Array  # (V_X,) f32 normalized target
+    tau: jax.Array  # (V_Z,) f32 distance estimates
+    eps_i: jax.Array  # (V_Z,) f32 assigned deviations
+    log_delta_i: jax.Array  # (V_Z,) f32
+    delta_upper: jax.Array  # () f32
+    active: jax.Array  # (V_Z,) bool — AnyActive candidates
+    active_words: jax.Array  # (W,) uint32 — packed active mask for block policies
+    in_top_k: jax.Array  # (V_Z,) bool — current matching set M
+    round_idx: jax.Array  # () i32
+
+
+def init_state(params: HistSimParams, target: jax.Array) -> HistSimState:
+    """Fresh state from an (unnormalized or normalized) target histogram."""
+    target = jnp.asarray(target, jnp.float32)
+    q_hat = target / jnp.maximum(jnp.sum(target), 1e-30)
+    v_z, v_x = params.v_z, params.v_x
+    w = -(-v_z // 32)
+    return HistSimState(
+        counts=jnp.zeros((v_z, v_x), jnp.float32),
+        n=jnp.zeros((v_z,), jnp.float32),
+        q_hat=q_hat,
+        tau=jnp.full((v_z,), jnp.sum(q_hat), jnp.float32),
+        eps_i=jnp.zeros((v_z,), jnp.float32),
+        log_delta_i=jnp.zeros((v_z,), jnp.float32),
+        delta_upper=jnp.asarray(float(v_z), jnp.float32),
+        active=jnp.ones((v_z,), bool),
+        active_words=pack_active_mask(jnp.ones((v_z,), bool)),
+        in_top_k=jnp.zeros((v_z,), bool),
+        round_idx=jnp.asarray(0, jnp.int32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def ingest(state: HistSimState, z_idx: jax.Array, x_idx: jax.Array, *, params: HistSimParams) -> HistSimState:
+    """Accumulate a padded batch of samples (line 7-8 of Alg. 1).
+
+    z_idx/x_idx: (N,) int32; entries < 0 are padding.
+    """
+    delta_counts = ops.histogram(z_idx, x_idx, v_z=params.v_z, v_x=params.v_x)
+    counts = state.counts + delta_counts
+    n = state.n + jnp.sum(delta_counts, axis=1)
+    return state._replace(counts=counts, n=n)
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def stats_step(state: HistSimState, *, params: HistSimParams) -> HistSimState:
+    """One statistics-engine iteration (lines 8-14 of Alg. 1)."""
+    tau = ops.l1_distance(state.counts, state.q_hat)
+    assign = dev.assign_deviations if params.criterion == "histsim" else dev.slowmatch_deviations
+    d = assign(tau, state.n, k=params.k, eps=params.eps, delta=params.delta, v_x=params.v_x)
+    return state._replace(
+        tau=d.tau,
+        eps_i=d.eps_i,
+        log_delta_i=d.log_delta_i,
+        delta_upper=d.delta_upper,
+        active=d.active,
+        active_words=pack_active_mask(d.active),
+        in_top_k=d.in_top_k,
+        round_idx=state.round_idx + 1,
+    )
+
+
+def run_round(
+    state: HistSimState,
+    z_idx: jax.Array,
+    x_idx: jax.Array,
+    *,
+    params: HistSimParams,
+) -> HistSimState:
+    """ingest + stats in sequence — one full HistSim round."""
+    return stats_step(ingest(state, z_idx, x_idx, params=params), params=params)
+
+
+def should_terminate(state: HistSimState, params: HistSimParams) -> bool:
+    """delta_upper < delta (line 6 of Alg. 1). Host-side decision."""
+    return bool(state.delta_upper < params.delta)
+
+
+def top_k_ids(state: HistSimState, k: int) -> jax.Array:
+    """The k candidate ids of M, closest-first."""
+    return jax.lax.top_k(-state.tau, k)[1]

@@ -1,0 +1,38 @@
+"""Block-selection policies (paper Sec 4.2 & 5.2).
+
+A policy decides, given the current HistSim statistics and a window of
+upcoming block positions, which blocks the I/O manager should read:
+
+  * scan      — read every block (ScanMatch / SlowMatch / Scan)
+  * anyactive — read a block iff it contains a tuple of an active
+                candidate (delta_i > delta/|V_Z|), evaluated over a whole
+                lookahead window against the packed bitmap (Alg. 3)
+
+The *staleness* of the statistics a policy sees is the engine's concern
+(engine.py): FastMatch evaluates AnyActive with the freshest delta
+posted by the statistics engine, which is one lookahead-window old —
+exactly the paper's asynchronous relaxation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+__all__ = ["mark_window"]
+
+
+def mark_window(
+    bitmap_window: jax.Array,
+    active_words: jax.Array,
+    *,
+    policy: str,
+) -> jax.Array:
+    """(L,) bool read-marks for a lookahead window of L blocks."""
+    if policy == "scan":
+        return jnp.ones((bitmap_window.shape[0],), bool)
+    if policy == "anyactive":
+        return ops.anyactive(bitmap_window, active_words)
+    raise ValueError(f"unknown policy {policy!r}")

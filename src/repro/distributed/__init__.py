@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (
+    param_pspecs,
+    param_shardings,
+    batch_pspec,
+    guard_pspec,
+    data_axes,
+    cache_pspecs,
+)

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: AnyActive block marking over a packed bitmap.
+
+The paper's Algorithm 3 marks a lookahead batch of data blocks for
+:read/:skip by testing, per block, whether ANY active candidate has a
+tuple in it — and observes that evaluating whole batches at once is what
+makes the policy cheap (one cache line of bitmap bits serves many
+blocks). The TPU translation is direct: the bitmap is packed 32
+candidates per uint32 lane, a VMEM tile covers thousands of data blocks,
+and the mark is a bitwise AND with the packed active mask followed by a
+lane-reduction OR. One tile = one VPU pass over (B_TILE x W) words.
+
+bitmap[b, w] bit j  <=>  data block b contains a tuple of candidate 32w+j.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["anyactive_pallas"]
+
+_B_TILE = 1024
+
+
+def _anyactive_kernel(bitmap_ref, mask_ref, out_ref):
+    bits = bitmap_ref[...]  # (B_TILE, W) uint32
+    mask = mask_ref[...]  # (1, W) uint32
+    hits = jnp.bitwise_and(bits, mask)
+    out_ref[...] = jnp.any(hits != 0, axis=1)
+
+
+def anyactive_pallas(
+    bitmap: jax.Array,
+    active_words: jax.Array,
+    *,
+    b_tile: int = _B_TILE,
+    interpret: bool = False,
+) -> jax.Array:
+    """(num_blocks,) bool marks: True = :read, False = :skip.
+
+    Args:
+      bitmap: (num_blocks, W) uint32 packed candidate-presence bitmap.
+      active_words: (W,) uint32 packed active mask.
+    """
+    nb, w = bitmap.shape
+    b_tile = min(b_tile, nb)
+    nb_pad = -(-nb // b_tile) * b_tile
+    w_pad = max(8, -(-w // 8) * 8)
+    if (nb_pad, w_pad) != (nb, w):
+        bitmap = jnp.pad(bitmap, ((0, nb_pad - nb), (0, w_pad - w)))
+        active_words = jnp.pad(active_words, (0, w_pad - w))
+    mask2d = active_words.reshape(1, w_pad)
+
+    out = pl.pallas_call(
+        _anyactive_kernel,
+        grid=(nb_pad // b_tile,),
+        in_specs=[
+            pl.BlockSpec((b_tile, w_pad), lambda bb: (bb, 0)),
+            pl.BlockSpec((1, w_pad), lambda bb: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b_tile,), lambda bb: (bb,)),
+        out_shape=jax.ShapeDtypeStruct((nb_pad,), jnp.bool_),
+        interpret=interpret,
+    )(bitmap, mask2d)
+    return out[:nb]

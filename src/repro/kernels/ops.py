@@ -1,0 +1,86 @@
+"""Public jit'd entry points for the kernels package.
+
+Dispatch policy: on TPU backends the Pallas kernels run compiled; on CPU
+(this container) the pure-jnp oracles from ref.py are used — they are the
+same math and XLA:CPU executes them far faster than interpret-mode
+Pallas. Tests force ``impl="pallas"`` with ``interpret=True`` to validate
+the kernels themselves against the oracles.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.anyactive import anyactive_pallas
+from repro.kernels.histogram import histogram_pallas
+from repro.kernels.l1_distance import l1_distance_pallas
+
+__all__ = ["histogram", "l1_distance", "anyactive", "default_impl"]
+
+Impl = Literal["auto", "pallas", "ref"]
+
+
+def default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _resolve(impl: Impl) -> str:
+    return default_impl() if impl == "auto" else impl
+
+
+@functools.partial(jax.jit, static_argnames=("v_z", "v_x", "impl", "interpret", "onehot_dtype"))
+def histogram(
+    z_idx: jax.Array,
+    x_idx: jax.Array,
+    *,
+    v_z: int,
+    v_x: int,
+    impl: Impl = "auto",
+    interpret: bool = False,
+    onehot_dtype=jnp.float32,
+) -> jax.Array:
+    """(V_Z, V_X) f32 histogram of (z, x) pairs; negative ids dropped.
+
+    impl: "pallas" (TPU kernel) | "ref" (scatter-add) | "matmul"
+    (chunked one-hot contraction — the MXU formulation in plain jnp).
+    """
+    if _resolve(impl) == "pallas":
+        return histogram_pallas(z_idx, x_idx, v_z=v_z, v_x=v_x, interpret=interpret)
+    if impl == "matmul":
+        return ref.histogram_matmul(
+            z_idx, x_idx, v_z=v_z, v_x=v_x, onehot_dtype=onehot_dtype
+        )
+    return ref.histogram_ref(z_idx, x_idx, v_z=v_z, v_x=v_x)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+def l1_distance(
+    counts: jax.Array,
+    q_hat: jax.Array,
+    *,
+    impl: Impl = "auto",
+    interpret: bool = False,
+) -> jax.Array:
+    """(V_Z,) f32 distances tau_i = ||normalize(counts_i) - q_hat||_1."""
+    if _resolve(impl) == "pallas":
+        return l1_distance_pallas(counts, q_hat, interpret=interpret)
+    return ref.l1_distance_ref(counts, q_hat)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+def anyactive(
+    bitmap: jax.Array,
+    active_words: jax.Array,
+    *,
+    impl: Impl = "auto",
+    interpret: bool = False,
+) -> jax.Array:
+    """(num_blocks,) bool AnyActive marks from a packed bitmap."""
+    if _resolve(impl) == "pallas":
+        return anyactive_pallas(bitmap, active_words, interpret=interpret)
+    return ref.anyactive_ref(bitmap, active_words)

@@ -1,0 +1,374 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the production meshes need 512 placeholder host devices. Do not
+set this flag globally — smoke tests and benches should see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b --shape train_4k --mesh pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out benchmarks/results/dryrun
+
+Compile strategy per cell (single CPU core; XLA:CPU compile of deep
+unrolled backward graphs takes minutes):
+  * train cells of scan-able families (dense/moe/vlm) — the MAIN compile
+    uses the production path, jax.lax.scan over layers (the full config
+    lowers+compiles in seconds; memory_analysis is exact). Because XLA's
+    cost_analysis counts a loop body ONCE (verified empirically), FLOPs /
+    bytes / collective bytes are then made exact by compiling 1-layer and
+    2-layer UNROLLED variants and extrapolating linearly:
+        total(L) = f(1) + (L-1) * (f(2) - f(1))
+    (unrolled cost_analysis matches analytic FLOPs within 1%).
+  * everything else (prefill/decode/long cells; train of hybrid/ssm/audio)
+    — fully UNROLLED main compile; costs are exact, no extrapolation.
+
+Each cell prints compiled.memory_analysis() + cost_analysis(), parses
+collective bytes from post-SPMD HLO, derives the three roofline terms,
+and writes one JSON under --out.
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import ALIASES, SHAPES, ModelConfig, get_config, list_archs
+from repro.launch.hlo_parse import parse_hlo_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_case
+from repro.models import layers as Lyr
+
+# v5e hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+SCANNABLE = ("dense", "moe", "vlm")
+
+
+def cell_supported(arch: str, shape_name: str) -> tuple:
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return False, "long_500k skipped: full-attention arch (see DESIGN.md)"
+    return True, ""
+
+
+def _compile_once(arch, shape_name, mesh, cfg, profile="baseline"):
+    case = build_case(arch, shape_name, mesh, cfg=cfg, profile=profile)
+    with mesh:
+        jitted = jax.jit(
+            case.fn,
+            in_shardings=case.in_shardings,
+            out_shardings=case.out_shardings,
+            donate_argnums=case.donate_argnums,
+        )
+        lowered = jitted.lower(*case.args)
+        compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    hlo = compiled.as_text()
+    colls = parse_hlo_collectives(hlo)
+    return {
+        "case": case,
+        "compiled": compiled,
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "colls": colls,
+        "hlo_chars": len(hlo),
+    }
+
+
+def _extrapolate(f1: dict, f2: dict, L: int) -> dict:
+    """total(L) = f(1) + (L-1) * (f(2) - f(1)), per metric and per
+    collective kind."""
+    out = {
+        "flops": f1["flops"] + (L - 1) * (f2["flops"] - f1["flops"]),
+        "bytes": f1["bytes"] + (L - 1) * (f2["bytes"] - f1["bytes"]),
+    }
+    kinds = set(f1["colls"]) | set(f2["colls"])
+    colls = {}
+    for k in kinds:
+        b1 = f1["colls"].get(k, {"bytes": 0, "count": 0})
+        b2 = f2["colls"].get(k, {"bytes": 0, "count": 0})
+        colls[k] = {
+            "bytes": max(0.0, b1["bytes"] + (L - 1) * (b2["bytes"] - b1["bytes"])),
+            "count": max(0, b1["count"] + (L - 1) * (b2["count"] - b1["count"])),
+        }
+    out["colls"] = colls
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, verbose: bool = True, profile: str = "baseline") -> dict:
+    multi_pod = mesh_kind == "multipod"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(mesh.devices.size)
+    Lyr.set_sharding_rules(None, mesh.axis_names, mesh)
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    use_scan = shape.kind == "train" and cfg.family in SCANNABLE
+
+    t0 = time.time()
+    main_cfg = dataclasses.replace(cfg, scan_layers=True) if use_scan else cfg
+    main = _compile_once(arch, shape_name, mesh, main_cfg, profile)
+    t_main = time.time() - t0
+
+    if use_scan:
+        c1 = dataclasses.replace(cfg, num_layers=1, scan_layers=False)
+        c2 = dataclasses.replace(cfg, num_layers=2, scan_layers=False)
+        f1 = _compile_once(arch, shape_name, mesh, c1, profile)
+        f2 = _compile_once(arch, shape_name, mesh, c2, profile)
+        costs = _extrapolate(f1, f2, cfg.num_layers)
+        cost_method = "scan-main + unrolled-1/2-layer extrapolation"
+    else:
+        costs = {"flops": main["flops"], "bytes": main["bytes"], "colls": main["colls"]}
+        cost_method = "unrolled-exact"
+    t_total = time.time() - t0
+
+    mem = main["compiled"].memory_analysis()
+    coll_bytes = sum(v["bytes"] for v in costs["colls"].values())
+    flops_dev = costs["flops"]
+    bytes_dev = costs["bytes"]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_bytes / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    case = main["case"]
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "chips": n_chips,
+        "profile": profile,
+        "ok": True,
+        "cost_method": cost_method,
+        "compile_s": round(t_total, 2),
+        "main_compile_s": round(t_main, 2),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_bytes,
+        "collectives": costs["colls"],
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "roofline": {
+            "t_compute_s": t_compute,
+            "t_memory_s": t_memory,
+            "t_collective_s": t_coll,
+            "bottleneck": bottleneck,
+        },
+        "model_flops_total": case.model_flops,
+        "model_flops_per_device": case.model_flops / n_chips,
+        "useful_flops_ratio": (case.model_flops / n_chips) / max(flops_dev, 1.0),
+        "hlo_chars": main["hlo_chars"],
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} x {mesh_kind} ({n_chips} chips) [{cost_method}] ==")
+        print(f"memory_analysis: {mem}")
+        print(
+            f"cost_analysis (corrected): flops/dev={flops_dev:.4g} "
+            f"bytes/dev={bytes_dev:.4g} coll_bytes/dev={coll_bytes:.4g}"
+        )
+        print(
+            f"roofline: compute={t_compute*1e3:.2f}ms memory={t_memory*1e3:.2f}ms "
+            f"collective={t_coll*1e3:.2f}ms -> {bottleneck}-bound"
+        )
+        print(
+            f"useful-FLOPs ratio (model/HLO): {result['useful_flops_ratio']:.3f}; "
+            f"compile {t_total:.1f}s"
+        )
+    return result
+
+
+def run_fastmatch_cell(mesh_kind: str, profile: str = "baseline", verbose: bool = True) -> dict:
+    """Dry-run the paper's own hot loop: one distributed HistSim round.
+
+    Production-scale query: |V_Z|=7548 (TAXI), |V_X|=128, 2^21 tuples
+    ingested per round, samples sharded over the data axes, counts matrix
+    sharded over "model". This is the cell most representative of the
+    paper's technique for §Perf.
+    """
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.distributed import (
+        ShardedHistSimState,
+        init_sharded_state,
+        make_distributed_round,
+        state_pspecs,
+    )
+    from repro.core.histsim import HistSimParams
+
+    import jax.numpy as _jnp
+
+    multi_pod = mesh_kind == "multipod"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(mesh.devices.size)
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    n_data_shards = 1
+    for a in data_axes:
+        n_data_shards *= mesh.shape[a]
+
+    # per-shard round = the paper's lookahead geometry: 512 blocks x 512
+    # tuples; the one-hot-contraction (MXU) histogram formulation so the
+    # dry-run costs the real TPU math, not a scatter.
+    v_z, v_x = 7552, 128  # TAXI-scale, V_Z padded to /16
+    n_samples = 512 * 512 * n_data_shards
+    params = HistSimParams(v_z=v_z, v_x=v_x, k=10)
+    rnd = make_distributed_round(
+        mesh, params, data_axes=data_axes,
+        histogram_impl="matmul",
+        onehot_dtype=_jnp.bfloat16 if profile == "opt" else _jnp.float32,
+    )
+
+    specs = state_pspecs(data_axes=data_axes)
+    state_shapes = jax.eval_shape(lambda: init_sharded_state(params, jnp.ones((v_x,))))
+    state_sharding = jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+    sample_sharding = NamedSharding(mesh, P(data_axes))
+    z = jax.ShapeDtypeStruct((n_samples,), jnp.int32)
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(
+            rnd, in_shardings=(state_sharding, sample_sharding, sample_sharding)
+        ).lower(state_shapes, z, z)
+        compiled = lowered.compile()
+    t_total = time.time() - t0
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    colls = parse_hlo_collectives(compiled.as_text())
+    coll_bytes = sum(v["bytes"] for v in colls.values())
+    flops_dev = float(ca.get("flops", 0.0))
+    bytes_dev = float(ca.get("bytes accessed", 0.0))
+    t_compute, t_memory, t_coll = flops_dev / PEAK_FLOPS, bytes_dev / HBM_BW, coll_bytes / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    mem = compiled.memory_analysis()
+    result = {
+        "arch": "fastmatch_round",
+        "shape": f"taxi_vz{v_z}_n{n_samples}",
+        "mesh": mesh_kind,
+        "chips": n_chips,
+        "profile": profile,
+        "ok": True,
+        "cost_method": "exact",
+        "compile_s": round(t_total, 2),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_bytes,
+        "collectives": colls,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "roofline": {
+            "t_compute_s": t_compute,
+            "t_memory_s": t_memory,
+            "t_collective_s": t_coll,
+            "bottleneck": max(terms, key=terms.get),
+        },
+        "model_flops_total": 0.0,
+        "model_flops_per_device": 0.0,
+        "useful_flops_ratio": 0.0,
+    }
+    if verbose:
+        print(f"== fastmatch_round x {mesh_kind} ({n_chips} chips) ==")
+        print(f"memory_analysis: {mem}")
+        print(
+            f"roofline: compute={t_compute*1e3:.3f}ms memory={t_memory*1e3:.3f}ms "
+            f"collective={t_coll*1e3:.3f}ms -> {result['roofline']['bottleneck']}-bound; "
+            f"compile {t_total:.1f}s"
+        )
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", type=str, default="pod", choices=("pod", "multipod", "both"))
+    ap.add_argument("--all", action="store_true", help="run every supported cell")
+    ap.add_argument("--out", type=str, default="benchmarks/results/dryrun")
+    ap.add_argument("--profile", type=str, default="baseline", choices=("baseline", "opt"))
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    meshes = ("pod", "multipod") if args.mesh == "both" else (args.mesh,)
+
+    if args.arch == "fastmatch_round":
+        for mesh_kind in meshes:
+            res = run_fastmatch_cell(mesh_kind, args.profile)
+            tag = f"fastmatch_round_{mesh_kind}"
+            if args.profile != "baseline":
+                tag += f"_{args.profile}"
+            (outdir / f"{tag}.json").write_text(json.dumps(res, indent=1))
+        return 0
+
+    if args.all:
+        archs = list_archs()
+        shapes = list(SHAPES)
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        archs = [ALIASES.get(args.arch, args.arch)]
+        shapes = [args.shape]
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            ok, why = cell_supported(arch, shape_name)
+            for mesh_kind in meshes:
+                tag = f"{arch}_{shape_name}_{mesh_kind}"
+                if args.profile != "baseline":
+                    tag += f"_{args.profile}"
+                path = outdir / f"{tag}.json"
+                if args.skip_existing and path.exists():
+                    try:
+                        if json.loads(path.read_text()).get("ok"):
+                            print(f"-- {tag}: cached OK")
+                            continue
+                    except Exception:
+                        pass
+                if not ok:
+                    path.write_text(
+                        json.dumps({"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                                    "ok": False, "skipped": True, "reason": why})
+                    )
+                    print(f"-- {tag}: SKIP ({why})")
+                    continue
+                try:
+                    res = run_cell(arch, shape_name, mesh_kind, profile=args.profile)
+                    path.write_text(json.dumps(res, indent=1))
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    traceback.print_exc()
+                    failures.append(tag)
+                    path.write_text(
+                        json.dumps({"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                                    "ok": False, "error": repr(e)})
+                    )
+    if failures:
+        print("FAILURES:", failures)
+        return 1
+    print("all requested cells compiled OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

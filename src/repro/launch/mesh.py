@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+`make_production_mesh` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state. The production
+topology is a v5e pod of 256 chips arranged (16, 16) = ("data", "model"),
+and the 2-pod job (2, 16, 16) = ("pod", "data", "model").
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_mesh_for"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == ndev:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"need {ndev} devices for mesh {shape}, have {len(devices)} — "
+            "run under dryrun.py (it forces 512 host devices)"
+        )
+    # more devices than needed (e.g. 512 host devices, single-pod mesh):
+    # use a prefix slice so both meshes can be built in one process.
+    return Mesh(np.asarray(devices[:ndev]).reshape(shape), axes)
+
+
+def make_mesh_for(shape: tuple, axes: tuple) -> Mesh:
+    """Arbitrary mesh over a device prefix (tests, elastic restarts)."""
+    ndev = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < ndev:
+        raise RuntimeError(f"need {ndev} devices, have {len(devices)}")
+    return Mesh(np.asarray(devices[:ndev]).reshape(shape), axes)

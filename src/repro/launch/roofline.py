@@ -1,0 +1,69 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from dry-run JSONs.
+
+  PYTHONPATH=src python -m repro.launch.roofline [--mesh pod] [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+RESULTS = pathlib.Path("benchmarks/results/dryrun")
+
+
+def fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def load(mesh: str):
+    rows = []
+    for p in sorted(RESULTS.glob(f"*_{mesh}.json")):
+        d = json.loads(p.read_text())
+        if d.get("mesh") == mesh:
+            rows.append(d)
+    return rows
+
+
+def render(mesh: str, md: bool = True) -> str:
+    rows = load(mesh)
+    out = []
+    header = (
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | bound | "
+        "roofline-frac | model/HLO flops | HBM/dev |"
+    )
+    out.append(header)
+    out.append("|" + "---|" * 9)
+    for d in rows:
+        if d.get("skipped"):
+            out.append(f"| {d['arch']} | {d['shape']} | — | — | — | skipped | — | — | — |")
+            continue
+        if not d.get("ok"):
+            out.append(f"| {d['arch']} | {d['shape']} | — | — | — | FAILED | — | — | — |")
+            continue
+        r = d["roofline"]
+        tc, tm, tl = r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]
+        dom = max(tc, tm, tl)
+        frac = tc / dom if dom > 0 else 0.0
+        hbm = d["memory"]["argument_bytes"] + d["memory"]["temp_bytes"] + d["memory"]["output_bytes"]
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {tc*1e3:.2f} | {tm*1e3:.2f} | {tl*1e3:.2f} "
+            f"| {r['bottleneck']} | {frac:.3f} | {d['useful_flops_ratio']:.3f} "
+            f"| {fmt_bytes(hbm)} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod", choices=("pod", "multipod"))
+    args = ap.parse_args()
+    print(render(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,248 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every dry-run case.
+
+Weak-type-correct, shardable, zero allocation — the compile-only analogue
+of the real training/serving inputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+from repro.configs.base import SHAPES, ModelConfig, Shape, get_config
+from repro.distributed import sharding as shr
+from repro.models.model_zoo import Model, get_model
+from repro.optimizer import get_optimizer
+from repro.train.step import make_train_step
+from repro.train.train_state import TrainState
+
+__all__ = ["DryRunCase", "build_case", "input_specs"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: Shape) -> Dict[str, Any]:
+    """Model inputs for one (arch x shape) cell, as ShapeDtypeStructs."""
+    b = shape.global_batch
+    if shape.kind == "train":
+        d = {"tokens": _sds((b, shape.seq_len), jnp.int32)}
+        model = get_model(cfg)
+        d.update(model.extra_input_shapes(b, shape.seq_len))
+        return d
+    if shape.kind == "prefill":
+        d = {"tokens": _sds((b, shape.seq_len), jnp.int32)}
+        model = get_model(cfg)
+        extras = model.extra_input_shapes(b, shape.seq_len)
+        if "encoder_frames" in extras:
+            d["encoder_frames"] = extras["encoder_frames"]
+        return d
+    # decode: one new token against a seq_len-deep cache
+    return {"token": _sds((b,), jnp.int32)}
+
+
+@dataclasses.dataclass
+class DryRunCase:
+    name: str
+    fn: Callable
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: tuple = ()
+    model_flops: float = 0.0  # 6*N*D (dense) / 6*N_active*D (MoE) per step
+
+
+def _flatten_pspec_index(tree):
+    """dict: path-name-tuple -> PartitionSpec."""
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        names = tuple(
+            str(k.key) if isinstance(k, DictKey) else f"[{k.idx}]"
+            for k in path
+            if isinstance(k, (DictKey, SequenceKey))
+        )
+        out[names] = leaf
+    return out
+
+
+def opt_state_pspecs(opt_shapes, params_pspecs):
+    """Shard optimizer state congruent with its parameters.
+
+    AdamW: state['mu'|'nu'][<param path>] -> param spec.
+    Adafactor: state[<param path>]['row'|'col'|'nu'] -> derived spec.
+    """
+    index = _flatten_pspec_index(params_pspecs)
+
+    def per_leaf(path, leaf):
+        names = tuple(
+            str(k.key) if isinstance(k, DictKey) else f"[{k.idx}]"
+            for k in path
+            if isinstance(k, (DictKey, SequenceKey))
+        )
+        shape = leaf.shape
+        # AdamW layout: ('mu'|'nu', *param_path)
+        if names and names[0] in ("mu", "nu") and names[1:] in index:
+            spec = index[names[1:]]
+            return shr.guard_pspec(shape, spec, _MESH[0])
+        # Adafactor layout: (*param_path, 'row'|'col'|'nu')
+        if names and names[-1] in ("row", "col", "nu") and names[:-1] in index:
+            spec = index[names[:-1]]
+            entries = list(spec)
+            if names[-1] == "row":
+                entries = entries[:-1]
+            elif names[-1] == "col":
+                entries = entries[:-2] + entries[-1:]
+            return shr.guard_pspec(shape, P(*entries), _MESH[0])
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(per_leaf, opt_shapes)
+
+
+_MESH = [None]  # set by build_case; avoids threading mesh through tree_map
+
+
+def build_case(
+    arch: str,
+    shape_name: str,
+    mesh: Mesh,
+    *,
+    lr: float = 3e-4,
+    cfg: ModelConfig = None,
+    profile: str = "baseline",
+) -> DryRunCase:
+    """Construct (fn, specs, shardings) for one dry-run cell.
+
+    profile: "baseline" = one layout for everything (FSDP x TP);
+             "opt"      = §Perf optimizations (TP-only weights at serving).
+    """
+    from repro.models import layers as Lyr
+
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    tp = mesh.shape.get("model", 1)
+    if profile == "opt":
+        # local MoE dispatch at train/decode; prefill keeps the gather
+        # path (the dropless per-shard capacity of serving would blow the
+        # dispatch buffers to T_local x topk at 32k prompts — measured
+        # 2.5x regression; a sort-based dropless dispatch is future work)
+        if cfg.num_experts > 0 and shape.kind != "prefill":
+            cfg = dataclasses.replace(cfg, moe_impl="local")
+        # flash-decoding only where head-sharding is impossible: MHA archs
+        # (codeqwen, whisper) shard kv heads over TP just fine, and the
+        # seq-sharded layout is strictly worse there (measured 0.78x)
+        if shape.kind == "decode" and cfg.num_kv_heads % tp != 0:
+            cfg = dataclasses.replace(cfg, decode_seq_shard=True)
+        # grouped-GQA only at decode: there q is explicitly replicated so
+        # the grouped einsum removes the KV gather; at train/prefill q
+        # inherits the TP head-sharding and the (hkv, group) reshape makes
+        # SPMD gather q/k/v instead (measured neutral on train, 2.5x WORSE
+        # on mixtral prefill) — ring/sequence-parallel attention is the
+        # right prefill fix, left as future work.
+        if shape.kind == "decode":
+            cfg = dataclasses.replace(cfg, attn_gqa_grouped=True)
+        Lyr.set_tp_reduce_dtype(jnp.bfloat16)  # bf16 TP partial reductions
+    else:
+        Lyr.set_tp_reduce_dtype(None)
+    model = get_model(cfg)
+    _MESH[0] = mesh
+
+    rng = jax.random.PRNGKey(0)
+    params_shapes = jax.eval_shape(model.init, rng)
+    # TP-only weights at DECODE only: at prefill the FSDP layout is fine
+    # (weight gathers amortize over 32k tokens of compute) and the MoE
+    # gather dispatch interacts badly with replicated-over-data experts
+    # (measured 2.5x collective regression on mixtral prefill).
+    if profile == "opt" and shape.kind == "decode":
+        p_pspecs = shr.serving_param_pspecs(params_shapes, mesh)
+    else:
+        p_pspecs = shr.param_pspecs(params_shapes, mesh)
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_pspecs)
+    ins = input_specs(cfg, shape)
+    bspec = shr.batch_pspec(mesh, shape.global_batch)
+    token_shard = {
+        k: NamedSharding(mesh, shr.guard_pspec(v.shape, P(bspec[0], *([None] * (len(v.shape) - 1))), mesh))
+        for k, v in ins.items()
+    }
+    n_active = float(cfg.active_param_count)
+
+    if shape.kind == "train":
+        optimizer = get_optimizer(cfg.optimizer, lr)
+        opt_shapes = jax.eval_shape(optimizer.init, params_shapes)
+        o_pspecs = opt_state_pspecs(opt_shapes, p_pspecs)
+        o_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), o_pspecs)
+        state = TrainState(
+            params=params_shapes, opt_state=opt_shapes, step=_sds((), jnp.int32)
+        )
+        state_shard = TrainState(
+            params=p_shard, opt_state=o_shard, step=NamedSharding(mesh, P())
+        )
+        train_step = make_train_step(model, optimizer)
+        metrics_shapes = jax.eval_shape(train_step, state, ins)[1]
+        metrics_shard = jax.tree.map(lambda _: NamedSharding(mesh, P()), metrics_shapes)
+        return DryRunCase(
+            name=f"{arch}.{shape_name}",
+            fn=train_step,
+            args=(state, ins),
+            in_shardings=(state_shard, token_shard),
+            out_shardings=(state_shard, metrics_shard),
+            donate_argnums=(0,),
+            model_flops=6.0 * n_active * shape.global_batch * shape.seq_len,
+        )
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            tokens = batch["tokens"]
+            extras = {k: v for k, v in batch.items() if k != "tokens"}
+            return model.prefill(params, tokens, shape.seq_len, **extras)
+
+        out_shapes = jax.eval_shape(prefill_fn, params_shapes, ins)
+        logits_shard = NamedSharding(
+            mesh, shr.guard_pspec(out_shapes[0].shape, P(bspec[0], None, "model"), mesh)
+        )
+        cache_shard = jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            shr.cache_pspecs(out_shapes[1], mesh, shape.global_batch),
+        )
+        return DryRunCase(
+            name=f"{arch}.{shape_name}",
+            fn=prefill_fn,
+            args=(params_shapes, ins),
+            in_shardings=(p_shard, token_shard),
+            out_shardings=(logits_shard, cache_shard),
+            model_flops=2.0 * n_active * shape.global_batch * shape.seq_len,  # fwd only
+        )
+
+    # decode
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len)
+    )
+    cache_shapes = jax.tree.map(
+        lambda x: _sds(x.shape, x.dtype), cache_shapes
+    )
+    cache_pspec = shr.cache_pspecs(
+        cache_shapes, mesh, shape.global_batch, seq_shard=cfg.decode_seq_shard
+    )
+    cache_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), cache_pspec)
+
+    def serve_step(params, cache, token):
+        return model.decode_step(params, cache, token)
+
+    out_shapes = jax.eval_shape(serve_step, params_shapes, cache_shapes, ins["token"])
+    logits_shard = NamedSharding(
+        mesh, shr.guard_pspec(out_shapes[0].shape, P(bspec[0], "model"), mesh)
+    )
+    return DryRunCase(
+        name=f"{arch}.{shape_name}",
+        fn=serve_step,
+        args=(params_shapes, cache_shapes, ins["token"]),
+        in_shardings=(p_shard, cache_shard, token_shard["token"]),
+        out_shardings=(logits_shard, cache_shard),
+        donate_argnums=(1,),
+        model_flops=2.0 * n_active * shape.global_batch,  # 2N per new token
+    )

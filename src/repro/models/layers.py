@@ -1,0 +1,500 @@
+"""Shared model layers: norms, RoPE, GQA attention (direct + online-softmax
+chunked), SwiGLU/GeGLU MLPs, sharding-constraint helpers.
+
+All layers are pure functions over explicit param pytrees (no framework).
+Parameters are created by `init_*` functions and consumed by matching
+`apply`-style functions. dtype policy: params in config dtype (bf16),
+matmuls accumulate in f32 (`preferred_element_type`), softmax/norm in f32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# logical axis -> mesh axis mapping (MaxText-style logical axis rules)
+# ---------------------------------------------------------------------------
+
+# logical axes used in sharding constraints throughout the models
+#   "batch"   -> data-parallel axes ("pod","data")
+#   "seq"     -> optional sequence sharding (prefill)
+#   "embed"   -> FSDP axis ("data")      [weights' d_model dim]
+#   "heads"   -> tensor-parallel ("model")
+#   "ff"      -> tensor-parallel ("model")
+#   "vocab"   -> tensor-parallel ("model")
+#   "expert"  -> None (experts iterate locally; ff dim is TP-sharded)
+_DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "vocab": "model",
+    "expert": None,
+    "lru": "model",
+    "kv_seq": "model",  # flash-decoding: cache sequence dim over TP axis
+}
+
+_ACTIVE_RULES = dict(_DEFAULT_RULES)
+_ACTIVE_MESH_AXES: tuple = ()  # axis names present in the active mesh
+_ACTIVE_MESH = None  # the Mesh object itself (for NamedSharding constraints)
+
+
+def set_sharding_rules(rules: Optional[dict], mesh_axis_names, mesh=None) -> None:
+    """Install logical->mesh rules for subsequent shard() calls."""
+    global _ACTIVE_RULES, _ACTIVE_MESH_AXES, _ACTIVE_MESH
+    _ACTIVE_RULES = dict(_DEFAULT_RULES)
+    if rules:
+        _ACTIVE_RULES.update(rules)
+    _ACTIVE_MESH_AXES = tuple(mesh_axis_names)
+    _ACTIVE_MESH = mesh
+
+
+def clear_sharding_rules() -> None:
+    global _ACTIVE_MESH_AXES, _ACTIVE_MESH
+    _ACTIVE_MESH_AXES = ()
+    _ACTIVE_MESH = None
+
+
+def logical_to_pspec(logical_axes) -> P:
+    """Resolve logical axis names to a PartitionSpec under active rules."""
+    spec = []
+    for ax in logical_axes:
+        if ax is None:
+            spec.append(None)
+            continue
+        mesh_ax = _ACTIVE_RULES.get(ax)
+        if mesh_ax is None:
+            spec.append(None)
+        elif isinstance(mesh_ax, tuple):
+            present = tuple(m for m in mesh_ax if m in _ACTIVE_MESH_AXES)
+            spec.append(present if present else None)
+        else:
+            spec.append(mesh_ax if mesh_ax in _ACTIVE_MESH_AXES else None)
+    return P(*spec)
+
+
+_MANUAL_DEPTH = [0]  # >0 inside shard_map regions: constraints are no-ops
+
+# dtype used as the accumulation/partial dtype of TP OUTPUT projections
+# (wo / w_down). f32 partials make XLA's TP all-reduce move f32 activations
+# (measured: 3 x 4.3GB f32 all-reduces per mixtral layer). Setting bf16
+# halves that wire traffic; per-device accumulation error over the K/TP
+# shard (<= 3.5k elements) is the standard mixed-precision trade — the
+# same one compress_gradients makes for DP gradients. (§Perf "opt")
+_TP_REDUCE_DTYPE = [None]  # None -> f32 accumulation (baseline)
+
+
+def set_tp_reduce_dtype(dtype) -> None:
+    _TP_REDUCE_DTYPE[0] = dtype
+
+
+def _out_proj_dtype():
+    return _TP_REDUCE_DTYPE[0] or jnp.float32
+
+
+def boundary_cast(t: jax.Array, dtype) -> jax.Array:
+    """Cast an activation at a dot boundary when bf16-TP-reduce is on.
+
+    Keeping gate/up outputs f32 through the nonlinearity makes their
+    COTANGENTS f32, so the transposed dots (contraction over the
+    TP-sharded ff dim) emit f32 partials and the backward all-reduce moves
+    f32 activations (measured: the dominant residual collective of the
+    mixtral train cell). A bf16 boundary makes fwd+bwd reductions bf16.
+    """
+    return t.astype(dtype) if _TP_REDUCE_DTYPE[0] is not None else t
+
+
+class manual_mode:
+    """Context manager disabling shard() inside shard_map manual regions."""
+
+    def __enter__(self):
+        _MANUAL_DEPTH[0] += 1
+
+    def __exit__(self, *exc):
+        _MANUAL_DEPTH[0] -= 1
+
+
+def shard(x: jax.Array, *logical_axes) -> jax.Array:
+    """Sharding constraint by logical axes; no-op outside a mesh context."""
+    if not _ACTIVE_MESH_AXES or _ACTIVE_MESH is None or _MANUAL_DEPTH[0]:
+        return x
+    spec = logical_to_pspec(logical_axes)
+    # guard divisibility: drop axes that do not divide the dim
+    clean = []
+    for i, ax in enumerate(spec):
+        if ax is None:
+            clean.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= _ACTIVE_MESH.shape[a]
+        clean.append(ax if (i < x.ndim and x.shape[i] % size == 0) else None)
+    from jax.sharding import NamedSharding, PartitionSpec as _P
+
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_ACTIVE_MESH, _P(*clean)))
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float = 1.0):
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+    std = scale / (fan_in ** 0.5)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(params: dict, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layer_norm(params: dict, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    freqs = rope_freqs(x.shape[-1], theta)  # (half,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    causal: bool = True
+    sliding_window: int = 0  # 0 = unbounded
+    chunk: int = 1024
+    impl: str = "auto"  # auto | direct | chunked
+    decode_seq_shard: bool = False  # flash-decoding cache layout (§Perf)
+    gqa_grouped: bool = False  # grouped einsum instead of kv-repeat (§Perf)
+
+
+def init_attention(key, d_model: int, spec: AttnSpec, dtype, qkv_bias: bool) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    h, kvh, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    p = {
+        "wq": dense_init(kq, (d_model, h * hd), dtype),
+        "wk": dense_init(kk, (d_model, kvh * hd), dtype),
+        "wv": dense_init(kv, (d_model, kvh * hd), dtype),
+        "wo": dense_init(ko, (h * hd, d_model), dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kvh * hd,), dtype)
+        p["bv"] = jnp.zeros((kvh * hd,), dtype)
+    return p
+
+
+def qkv_proj(params: dict, x: jax.Array, spec: AttnSpec):
+    """(B,S,D) -> q (B,S,H,hd), k/v (B,S,Hkv,hd)."""
+    b, s, _ = x.shape
+    q = jnp.dot(x, params["wq"], preferred_element_type=jnp.float32)
+    k = jnp.dot(x, params["wk"], preferred_element_type=jnp.float32)
+    v = jnp.dot(x, params["wv"], preferred_element_type=jnp.float32)
+    if "bq" in params:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    q = q.astype(x.dtype).reshape(b, s, spec.num_heads, spec.head_dim)
+    k = k.astype(x.dtype).reshape(b, s, spec.num_kv_heads, spec.head_dim)
+    v = v.astype(x.dtype).reshape(b, s, spec.num_kv_heads, spec.head_dim)
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int) -> jax.Array:
+    """(Sq, Sk) additive f32 bias: 0 allowed, -inf masked."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def attention_direct(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    spec: AttnSpec,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+) -> jax.Array:
+    """Materialized-scores attention. q:(B,Sq,H,hd) k/v:(B,Sk,Hkv,hd)."""
+    groups = spec.num_heads // spec.num_kv_heads
+    scale = spec.head_dim ** -0.5
+    if spec.gqa_grouped and groups > 1:
+        # grouped einsum: contract each q-head group against its kv head
+        # directly — no repeated K/V materialization, and under SPMD the
+        # partitioner no longer all-gathers K/V to the q-head sharding
+        # (measured: 2 x 0.27 GB f32 gathers per mixtral layer gone).
+        b, sq, h, hd = q.shape
+        q5 = q.reshape(b, sq, spec.num_kv_heads, groups, hd)
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", q5, k, preferred_element_type=jnp.float32)
+        scores = scores * scale
+        scores = scores + _mask_bias(q_pos, k_pos, spec.causal, spec.sliding_window)[None, None, None]
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v, preferred_element_type=jnp.float32)
+        return out.astype(q.dtype).reshape(b, sq, h, hd)
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32) * scale
+    scores = scores + _mask_bias(q_pos, k_pos, spec.causal, spec.sliding_window)[None, None]
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v, preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def attention_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    spec: AttnSpec,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+) -> jax.Array:
+    """Online-softmax attention, scanning over KV chunks (flash-style).
+
+    Never materializes the (Sq, Sk) score matrix: peak extra memory is
+    (B, H, Sq, chunk). Exact same math as attention_direct.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    groups = spec.num_heads // spec.num_kv_heads
+    chunk = min(spec.chunk, sk)
+    n_chunks = -(-sk // chunk)
+    pad = n_chunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+
+    kc = k.reshape(b, n_chunks, chunk, spec.num_kv_heads, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, spec.num_kv_heads, hd).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(n_chunks, chunk)
+    scale = hd ** -0.5
+    qf = q  # keep dtype; accumulate f32
+
+    grouped = spec.gqa_grouped and groups > 1
+    hkv = spec.num_kv_heads
+
+    def body(carry, xs):
+        m, l, acc = carry  # (B,H,Sq), (B,H,Sq), (B,Sq,H,hd) f32
+        kci, vci, pci = xs
+        if grouped:
+            q5 = qf.reshape(b, sq, hkv, groups, hd)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q5, kci, preferred_element_type=jnp.float32)
+            s = (s * scale).reshape(b, h, sq, kci.shape[1])
+        else:
+            kci = _repeat_kv(kci, groups)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qf, kci, preferred_element_type=jnp.float32) * scale
+        s = s + _mask_bias(q_pos, pci, spec.causal, spec.sliding_window)[None, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows: m_new may be -inf; exp(-inf - -inf)=nan
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        alpha = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_safe))
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        if grouped:
+            p5 = p.astype(qf.dtype).reshape(b, hkv, groups, sq, -1)
+            pv = jnp.einsum("bhgqk,bkhd->bqhgd", p5, vci, preferred_element_type=jnp.float32)
+            pv = pv.reshape(b, sq, h, hd)
+        else:
+            vci = _repeat_kv(vci, groups)
+            pv = jnp.einsum("bhqk,bkhd->bqhd", p.astype(qf.dtype), vci, preferred_element_type=jnp.float32)
+        acc_new = acc * alpha.transpose(0, 2, 1)[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = jnp.zeros((b, sq, h, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kc, vc, pc))
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l.transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    spec: AttnSpec,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+) -> jax.Array:
+    impl = spec.impl
+    if impl == "auto":
+        impl = "chunked" if k.shape[1] > 2048 else "direct"
+    fn = attention_chunked if impl == "chunked" else attention_direct
+    return fn(q, k, v, spec, q_pos, k_pos)
+
+
+def attention_out(params: dict, attn: jax.Array) -> jax.Array:
+    b, s, h, hd = attn.shape
+    out = jnp.dot(
+        attn.reshape(b, s, h * hd), params["wo"], preferred_element_type=_out_proj_dtype()
+    )
+    return out.astype(attn.dtype)
+
+
+def decode_attention(
+    params: dict,
+    x: jax.Array,
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    pos: jax.Array,
+    spec: AttnSpec,
+    rope_theta: float = 0.0,
+) -> tuple:
+    """Single-token decode. x:(B,1,D); cache:(B,Smax,Hkv,hd); pos:(B,) int32.
+
+    Returns (attn_out (B,1,H*hd pre-wo-proj applied), new_k, new_v).
+    """
+    b = x.shape[0]
+    q, k, v = qkv_proj(params, x, spec)
+    if rope_theta:
+        q = apply_rope(q, pos[:, None], rope_theta)
+        k = apply_rope(k, pos[:, None], rope_theta)
+    # write new kv at pos (per-batch positions identical in our serving engine)
+    idx = pos[0]
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, idx, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, idx, axis=1)
+    groups = spec.num_heads // spec.num_kv_heads
+    scale = spec.head_dim ** -0.5
+    k_pos = jnp.arange(cache_k.shape[1], dtype=jnp.int32)
+    valid = k_pos[None, :] <= pos[:, None]
+    if spec.sliding_window > 0:
+        valid &= k_pos[None, :] > (pos[:, None] - spec.sliding_window)
+
+    if spec.decode_seq_shard:
+        # flash-decoding path (§Perf): grouped-GQA einsum straight against
+        # the cache (no materialized head-repeat), cache sequence dim
+        # sharded over "model"; only softmax stats / output partials hit
+        # the wire. Heads stay replicated at decode (q is tiny).
+        bq, hk = q.shape[0], spec.num_kv_heads
+        q5 = shard(q.reshape(bq, 1, hk, groups, spec.head_dim), "batch", None, None, None, None)
+        ck = shard(cache_k, "batch", "kv_seq", None, None)
+        cv = shard(cache_v, "batch", "kv_seq", None, None)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q5, ck, preferred_element_type=jnp.float32)
+        s = s * scale
+        s = jnp.where(valid[:, None, None, None, :], s, -jnp.inf)
+        s = shard(s, "batch", None, None, None, "kv_seq")
+        p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, cv, preferred_element_type=jnp.float32)
+        out = o.astype(x.dtype).reshape(bq, 1, spec.num_heads, spec.head_dim)
+        return attention_out(params, out), cache_k, cache_v
+
+    kk = _repeat_kv(cache_k, groups)
+    vv = _repeat_kv(cache_v, groups)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk, preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vv, preferred_element_type=jnp.float32).astype(x.dtype)
+    return attention_out(params, out), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def mlp_swiglu(params: dict, x: jax.Array) -> jax.Array:
+    g = boundary_cast(jnp.dot(x, params["w_gate"], preferred_element_type=jnp.float32), x.dtype)
+    u = boundary_cast(jnp.dot(x, params["w_up"], preferred_element_type=jnp.float32), x.dtype)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    h = shard(h, "batch", None, "ff")
+    out = jnp.dot(h, params["w_down"], preferred_element_type=_out_proj_dtype())
+    return out.astype(x.dtype)
+
+
+def mlp_geglu(params: dict, x: jax.Array) -> jax.Array:
+    g = boundary_cast(jnp.dot(x, params["w_gate"], preferred_element_type=jnp.float32), x.dtype)
+    u = boundary_cast(jnp.dot(x, params["w_up"], preferred_element_type=jnp.float32), x.dtype)
+    h = (jax.nn.gelu(g) * u).astype(x.dtype)
+    h = shard(h, "batch", None, "ff")
+    out = jnp.dot(h, params["w_down"], preferred_element_type=_out_proj_dtype())
+    return out.astype(x.dtype)
+
+
+def init_mlp_gelu(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2 = jax.random.split(key, 2)
+    return {
+        "w_up": dense_init(k1, (d_model, d_ff), dtype),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": dense_init(k2, (d_ff, d_model), dtype),
+        "b_down": jnp.zeros((d_model,), dtype),
+    }
+
+
+def mlp_gelu(params: dict, x: jax.Array) -> jax.Array:
+    h = jnp.dot(x, params["w_up"], preferred_element_type=jnp.float32) + params["b_up"].astype(jnp.float32)
+    h = jax.nn.gelu(h).astype(x.dtype)
+    h = shard(h, "batch", None, "ff")
+    out = jnp.dot(h, params["w_down"], preferred_element_type=jnp.float32) + params["b_down"].astype(jnp.float32)
+    return out.astype(x.dtype)

@@ -1,0 +1,80 @@
+"""Unified model interface over all assigned architecture families.
+
+    model = get_model(cfg)
+    params = model.init(rng)
+    logits, aux = model.forward(params, tokens, **extras)
+    cache = model.init_cache(batch, max_len)
+    logits, cache = model.decode_step(params, cache, token)
+    extras = model.extra_inputs(batch, seq)   # frontend stubs (vlm/audio)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import rglru, transformer, whisper, xlstm
+
+__all__ = ["Model", "get_model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable  # rng -> params
+    forward: Callable  # (params, tokens, **extras) -> (logits, aux)
+    prefill: Callable  # (params, tokens, max_len, **extras) -> (logits, cache)
+    decode_step: Callable  # (params, cache, token) -> (logits, cache)
+    init_cache: Callable  # (batch, max_len) -> cache
+    extra_input_shapes: Callable  # (batch, seq) -> {name: ShapeDtypeStruct}
+
+
+def _stub_extras(cfg: ModelConfig):
+    """ShapeDtypeStructs for the modality-frontend stub inputs."""
+    dt = jnp.dtype(cfg.dtype)
+
+    def fn(batch: int, seq: int):
+        if cfg.frontend == "vision_stub" and cfg.vision_tokens:
+            return {
+                "vision_embeds": jax.ShapeDtypeStruct(
+                    (batch, cfg.vision_tokens, cfg.d_model), dt
+                )
+            }
+        if cfg.frontend == "audio_stub":
+            return {
+                "encoder_frames": jax.ShapeDtypeStruct(
+                    (batch, cfg.encoder_seq, cfg.d_model), dt
+                )
+            }
+        return {}
+
+    return fn
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        mod = transformer
+    elif cfg.family == "hybrid":
+        mod = rglru
+    elif cfg.family == "ssm":
+        mod = xlstm
+    elif cfg.family == "audio":
+        mod = whisper
+    else:
+        raise ValueError(f"unknown family {cfg.family!r}")
+
+    return Model(
+        cfg=cfg,
+        init=lambda rng: mod.init_params(rng, cfg),
+        forward=lambda params, tokens, **kw: mod.forward(params, tokens, cfg, **kw),
+        prefill=lambda params, tokens, max_len, **kw: mod.prefill(
+            params, tokens, cfg, max_len, **kw
+        ),
+        decode_step=lambda params, cache, token: mod.decode_step(params, cache, token, cfg),
+        init_cache=lambda batch, max_len: mod.init_cache(cfg, batch, max_len),
+        extra_input_shapes=_stub_extras(cfg),
+    )

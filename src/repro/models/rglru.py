@@ -1,0 +1,346 @@
+"""RecurrentGemma-style hybrid: RG-LRU recurrent blocks + local attention.
+
+Block pattern (config.block_pattern, default "rra"): two RG-LRU
+recurrence blocks followed by one local (sliding-window) MQA attention
+block, cycled over layers — the Griffin 2:1 temporal-mixing pattern.
+
+RG-LRU (Real-Gated Linear Recurrent Unit, De et al. 2024):
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            input gate
+    a_t = exp(c * softplus(Lambda) * (-r_t))   per-channel decay in (0,1)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is evaluated with `jax.lax.associative_scan` for
+training/prefill (log-depth on TPU) and as a single fused step for
+decode — O(1) state, which is why this arch runs the 500k-context shape.
+A short depthwise temporal conv (width 4) precedes the RG-LRU, as in
+the paper.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import AttnSpec, shard
+
+__all__ = [
+    "init_params",
+    "forward",
+    "init_cache",
+    "prefill",
+    "decode_step",
+    "block_kind",
+]
+
+_C = 8.0  # RG-LRU decay sharpness constant (Griffin)
+
+
+def block_kind(cfg: ModelConfig, layer_idx: int) -> str:
+    pattern = cfg.block_pattern or "a"
+    return {"r": "recurrent", "a": "attention"}[pattern[layer_idx % len(pattern)]]
+
+
+def _lru_width(cfg: ModelConfig) -> int:
+    return cfg.lru_width or cfg.d_model
+
+
+def _attn_spec(cfg: ModelConfig) -> AttnSpec:
+    return AttnSpec(
+        num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.head_dim,
+        causal=True,
+        sliding_window=cfg.local_window,
+        chunk=cfg.attn_chunk,
+        impl=cfg.attn_impl,
+    )
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_recurrent_block(key, cfg: ModelConfig, dt) -> dict:
+    d, w = cfg.d_model, _lru_width(cfg)
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    return {
+        "w_in": L.dense_init(k1, (d, w), dt),  # branch input proj
+        "w_gate_branch": L.dense_init(k2, (d, w), dt),  # GeLU gating branch
+        "conv_w": (jax.random.normal(k3, (cfg.conv_width, w), jnp.float32) * 0.02).astype(dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "w_a": L.dense_init(k4, (w, w), dt),  # recurrence gate
+        "b_a": jnp.zeros((w,), dt),
+        "w_x": L.dense_init(k5, (w, w), dt),  # input gate
+        "b_x": jnp.zeros((w,), dt),
+        "lam": jnp.full((w,), 2.0, jnp.float32),  # softplus(2)≈2.1 -> slow decay
+        "w_out": L.dense_init(k6, (w, d), dt),
+    }
+
+
+def init_layer(key, cfg: ModelConfig, layer_idx: int) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    ka, km = jax.random.split(key)
+    p = {
+        "temporal_norm": L.init_rmsnorm(cfg.d_model, dt),
+        "mlp_norm": L.init_rmsnorm(cfg.d_model, dt),
+        "mlp": L.init_mlp(km, cfg.d_model, cfg.d_ff, dt),  # GeGLU applied below
+    }
+    if block_kind(cfg, layer_idx) == "attention":
+        p["attn"] = L.init_attention(ka, cfg.d_model, _attn_spec(cfg), dt, False)
+    else:
+        p["rglru"] = init_recurrent_block(ka, cfg, dt)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    keys = jax.random.split(key, cfg.num_layers + 2)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "embed": {"table": L.embed_init(keys[0], (cfg.vocab_size, cfg.d_model), dt)},
+        "final_norm": L.init_rmsnorm(cfg.d_model, dt),
+        "layers": [init_layer(keys[i + 1], cfg, i) for i in range(cfg.num_layers)],
+        # RecurrentGemma ties embeddings (2B model); keep a separate head
+        # only if config says so.
+    }
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU core
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, state: Optional[jax.Array] = None):
+    """Depthwise causal temporal conv. x: (B,S,W); w: (K,W).
+
+    With `state` (B, K-1, W) this is the streaming form (decode): returns
+    (y, new_state). Without, the full-sequence form with left padding.
+    """
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+        y = sum(
+            xp[:, i : i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+            for i in range(k)
+        )
+        return y + b.astype(x.dtype), None
+    xs = jnp.concatenate([state, x], axis=1)  # (B, K-1+1, W)
+    y = sum(xs[:, i : i + 1, :] * w[i][None, None, :].astype(x.dtype) for i in range(k))
+    return y + b.astype(x.dtype), xs[:, 1:, :]
+
+
+def _rg_lru_scan(x: jax.Array, a: jax.Array, h0: Optional[jax.Array] = None):
+    """h_t = a_t h_{t-1} + x_t via associative scan over seq. (B,S,W) f32."""
+    if h0 is not None:
+        # fold initial state into the first input
+        x = x.at[:, 0, :].add(a[:, 0, :] * h0)
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, x), axis=1)
+    return h
+
+
+def rg_lru_block(p: dict, x: jax.Array, *, decode_state=None):
+    """The full recurrent temporal-mixing block.
+
+    train/prefill: decode_state=None -> returns (y, (h_last, conv_state)).
+    decode: decode_state=(h, conv_state), x is (B,1,D) -> (y, new_state).
+    """
+    dt = x.dtype
+    branch = jnp.dot(x, p["w_in"], preferred_element_type=jnp.float32).astype(dt)
+    gate = jnp.dot(x, p["w_gate_branch"], preferred_element_type=jnp.float32)
+    gate = jax.nn.gelu(gate).astype(dt)
+
+    if decode_state is None:
+        u, _ = _causal_conv(branch, p["conv_w"], p["conv_b"])
+        conv_tail = branch[:, -(p["conv_w"].shape[0] - 1) :, :]
+        h_prev = None
+    else:
+        h_prev, conv_state = decode_state
+        u, conv_tail = _causal_conv(branch, p["conv_w"], p["conv_b"], conv_state)
+
+    r = jax.nn.sigmoid(
+        jnp.dot(u, p["w_a"], preferred_element_type=jnp.float32) + p["b_a"].astype(jnp.float32)
+    )
+    i = jax.nn.sigmoid(
+        jnp.dot(u, p["w_x"], preferred_element_type=jnp.float32) + p["b_x"].astype(jnp.float32)
+    )
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r  # (B,S,W) f32, <= 0
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u.astype(jnp.float32))
+
+    if decode_state is None:
+        h = _rg_lru_scan(gated_in, a)
+        new_state = (h[:, -1, :], conv_tail)
+    else:
+        h = a * h_prev[:, None, :] + gated_in  # single step, (B,1,W)
+        new_state = (h[:, -1, :], conv_tail)
+
+    y = (h.astype(dt) * gate)
+    y = jnp.dot(y, p["w_out"], preferred_element_type=jnp.float32).astype(dt)
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def _mlp(p, x):
+    return L.mlp_geglu(p, x)
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ModelConfig, **_) -> tuple:
+    b, s = tokens.shape
+    x = params["embed"]["table"][tokens]
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = shard(x, "batch", "seq", None)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    spec = _attn_spec(cfg)
+
+    for li, lp in enumerate(params["layers"]):
+        h = L.rms_norm(lp["temporal_norm"], x, cfg.norm_eps)
+        if block_kind(cfg, li) == "attention":
+            q, k, v = L.qkv_proj(lp["attn"], h, spec)
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+            y = L.attention_out(lp["attn"], L.attention(q, k, v, spec, positions[0], positions[0]))
+        else:
+            y, _ = rg_lru_block(lp["rglru"], h)
+        x = x + y
+        h = L.rms_norm(lp["mlp_norm"], x, cfg.norm_eps)
+        x = x + _mlp(lp["mlp"], h)
+        x = shard(x, "batch", "seq", None)
+
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.dot(
+        x, params["embed"]["table"].T, preferred_element_type=jnp.float32
+    )  # tied embeddings
+    return shard(logits, "batch", "seq", "vocab"), {}
+
+
+class HybridCache(NamedTuple):
+    """Per-layer state: KV cache for attention layers, (h, conv) for LRU."""
+
+    attn_k: list
+    attn_v: list
+    lru_h: list  # (B, W) f32 per recurrent layer (None slots for attn layers)
+    conv: list  # (B, K-1, W)
+    length: jax.Array
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> HybridCache:
+    dt = jnp.dtype(cfg.dtype)
+    w = _lru_width(cfg)
+    # attention layers only cache the local window (sub-quadratic memory!)
+    window = min(cfg.local_window, max_len)
+    kshape = (batch, window, cfg.num_kv_heads, cfg.head_dim)
+    attn_k, attn_v, lru_h, conv = [], [], [], []
+    for li in range(cfg.num_layers):
+        if block_kind(cfg, li) == "attention":
+            attn_k.append(jnp.zeros(kshape, dt))
+            attn_v.append(jnp.zeros(kshape, dt))
+            lru_h.append(jnp.zeros((batch, 0), jnp.float32))
+            conv.append(jnp.zeros((batch, 0, w), dt))
+        else:
+            attn_k.append(jnp.zeros((batch, 0, cfg.num_kv_heads, cfg.head_dim), dt))
+            attn_v.append(jnp.zeros((batch, 0, cfg.num_kv_heads, cfg.head_dim), dt))
+            lru_h.append(jnp.zeros((batch, w), jnp.float32))
+            conv.append(jnp.zeros((batch, cfg.conv_width - 1, w), dt))
+    return HybridCache(attn_k, attn_v, lru_h, conv, jnp.asarray(0, jnp.int32))
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig, max_len: int) -> tuple:
+    """Prefill: full forward, capturing terminal recurrent/conv/KV state."""
+    b, s = tokens.shape
+    x = params["embed"]["table"][tokens] * jnp.asarray(cfg.d_model ** 0.5, jnp.dtype(cfg.dtype))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    spec = _attn_spec(cfg)
+    window = min(cfg.local_window, max_len)
+    cache = init_cache(cfg, b, max_len)
+    attn_k, attn_v = list(cache.attn_k), list(cache.attn_v)
+    lru_h, conv = list(cache.lru_h), list(cache.conv)
+
+    for li, lp in enumerate(params["layers"]):
+        h = L.rms_norm(lp["temporal_norm"], x, cfg.norm_eps)
+        if block_kind(cfg, li) == "attention":
+            q, k, v = L.qkv_proj(lp["attn"], h, spec)
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+            y = L.attention_out(lp["attn"], L.attention(q, k, v, spec, positions[0], positions[0]))
+            # keep only the trailing window in the cache
+            tail = min(window, s)
+            attn_k[li] = attn_k[li].at[:, :tail].set(k[:, -tail:])
+            attn_v[li] = attn_v[li].at[:, :tail].set(v[:, -tail:])
+        else:
+            y, (h_last, conv_tail) = rg_lru_block(lp["rglru"], h)
+            lru_h[li] = h_last
+            kw = cfg.conv_width - 1
+            conv[li] = conv_tail[:, -kw:, :] if s >= kw else jnp.pad(
+                conv_tail, ((0, 0), (kw - s, 0), (0, 0))
+            )
+        x = x + y
+        h = L.rms_norm(lp["mlp_norm"], x, cfg.norm_eps)
+        x = x + _mlp(lp["mlp"], h)
+
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.dot(x, params["embed"]["table"].T, preferred_element_type=jnp.float32)
+    return logits, HybridCache(attn_k, attn_v, lru_h, conv, jnp.asarray(s, jnp.int32))
+
+
+def decode_step(params: dict, cache: HybridCache, token: jax.Array, cfg: ModelConfig) -> tuple:
+    b = token.shape[0]
+    dt = jnp.dtype(cfg.dtype)
+    x = params["embed"]["table"][token[:, None]] * jnp.asarray(cfg.d_model ** 0.5, dt)
+    pos = jnp.broadcast_to(cache.length, (b,))
+    spec = _attn_spec(cfg)
+    window = cache.attn_k[_first_attn_idx(cfg)].shape[1] if _first_attn_idx(cfg) >= 0 else 0
+
+    attn_k, attn_v = list(cache.attn_k), list(cache.attn_v)
+    lru_h, conv = list(cache.lru_h), list(cache.conv)
+    for li, lp in enumerate(params["layers"]):
+        h = L.rms_norm(lp["temporal_norm"], x, cfg.norm_eps)
+        if block_kind(cfg, li) == "attention":
+            # ring-buffer local window: slot = pos % window
+            q, k, v = L.qkv_proj(lp["attn"], h, spec)
+            q = L.apply_rope(q, pos[:, None], cfg.rope_theta)
+            k = L.apply_rope(k, pos[:, None], cfg.rope_theta)
+            slot = pos[0] % window
+            attn_k[li] = jax.lax.dynamic_update_slice_in_dim(attn_k[li], k, slot, axis=1)
+            attn_v[li] = jax.lax.dynamic_update_slice_in_dim(attn_v[li], v, slot, axis=1)
+            kk = jnp.repeat(attn_k[li], spec.num_heads // spec.num_kv_heads, axis=2)
+            vv = jnp.repeat(attn_v[li], spec.num_heads // spec.num_kv_heads, axis=2)
+            s = jnp.einsum("bqhd,bkhd->bhqk", q, kk, preferred_element_type=jnp.float32)
+            s = s * (spec.head_dim ** -0.5)
+            ring_pos = jnp.arange(window, dtype=jnp.int32)
+            # a ring slot holds position p iff p <= pos and p > pos - window;
+            # recover the stored position from the slot index
+            stored = pos[:, None] - ((pos[:, None] - ring_pos[None, :]) % window)
+            valid = (stored >= 0) & (stored <= pos[:, None])
+            s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+            p_ = jax.nn.softmax(s, axis=-1).astype(dt)
+            o = jnp.einsum("bhqk,bkhd->bqhd", p_, vv, preferred_element_type=jnp.float32)
+            y = L.attention_out(lp["attn"], o.astype(dt))
+        else:
+            y, (h_new, conv_new) = rg_lru_block(
+                lp["rglru"], h, decode_state=(lru_h[li], conv[li])
+            )
+            lru_h[li], conv[li] = h_new, conv_new
+        x = x + y
+        h = L.rms_norm(lp["mlp_norm"], x, cfg.norm_eps)
+        x = x + _mlp(lp["mlp"], h)
+
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.dot(x, params["embed"]["table"].T, preferred_element_type=jnp.float32)[:, 0]
+    return logits, HybridCache(attn_k, attn_v, lru_h, conv, cache.length + 1)
+
+
+def _first_attn_idx(cfg: ModelConfig) -> int:
+    for li in range(cfg.num_layers):
+        if block_kind(cfg, li) == "attention":
+            return li
+    return -1

@@ -1,0 +1,282 @@
+"""Decoder-only transformer LM (dense GQA and MoE variants).
+
+Covers: qwen2.5-3b, granite-8b, llama3-405b, codeqwen1.5-7b,
+internvl2-76b (text backbone + vision-stub prefix), mixtral-8x7b,
+grok-1-314b.
+
+Three entry points per model:
+  forward(params, tokens[, vision_embeds]) -> logits        (teacher-forced)
+  prefill(params, tokens) -> (logits, cache)                (serving)
+  decode_step(params, cache, token, pos) -> (logits, cache) (serving)
+
+Layers run unrolled (exact dry-run accounting) or under jax.lax.scan
+(production training; config.scan_layers) over stacked per-layer params.
+Remat policy applies per layer.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import AttnSpec, shard
+from repro.models.moe import init_moe, moe_ffn, moe_ffn_local
+
+__all__ = ["init_params", "forward", "prefill", "decode_step", "init_cache"]
+
+
+def _attn_spec(cfg: ModelConfig) -> AttnSpec:
+    return AttnSpec(
+        num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.head_dim,
+        causal=True,
+        sliding_window=cfg.sliding_window,
+        chunk=cfg.attn_chunk,
+        impl=cfg.attn_impl,
+        decode_seq_shard=cfg.decode_seq_shard,
+        gqa_grouped=cfg.attn_gqa_grouped,
+    )
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig) -> dict:
+    ka, km = jax.random.split(key)
+    dt = _dtype(cfg)
+    p = {
+        "attn_norm": L.init_rmsnorm(cfg.d_model, dt),
+        "attn": L.init_attention(ka, cfg.d_model, _attn_spec(cfg), dt, cfg.qkv_bias),
+        "mlp_norm": L.init_rmsnorm(cfg.d_model, dt),
+    }
+    if cfg.num_experts > 0:
+        p["moe"] = init_moe(km, cfg.d_model, cfg.d_ff, cfg.num_experts, dt)
+    else:
+        p["mlp"] = L.init_mlp(km, cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    keys = jax.random.split(key, cfg.num_layers + 2)
+    dt = _dtype(cfg)
+    params = {
+        "embed": {"table": L.embed_init(keys[0], (cfg.vocab_size, cfg.d_model), dt)},
+        "final_norm": L.init_rmsnorm(cfg.d_model, dt),
+        "layers": [init_layer(keys[i + 1], cfg) for i in range(cfg.num_layers)],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": L.dense_init(keys[-1], (cfg.d_model, cfg.vocab_size), dt)}
+    if cfg.scan_layers:
+        params["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *params["layers"])
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _layer_fn(p: dict, x: jax.Array, positions: jax.Array, cfg: ModelConfig):
+    """One transformer block; returns (x, aux)."""
+    spec = _attn_spec(cfg)
+    h = L.rms_norm(p["attn_norm"], x, cfg.norm_eps)
+    q, k, v = L.qkv_proj(p["attn"], h, spec)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    attn = L.attention(q, k, v, spec, positions[0], positions[0])
+    x = x + L.attention_out(p["attn"], attn)
+    x = shard(x, "batch", "seq", None)
+
+    h = L.rms_norm(p["mlp_norm"], x, cfg.norm_eps)
+    if cfg.num_experts > 0:
+        ffn = moe_ffn_local if cfg.moe_impl == "local" else moe_ffn
+        y, aux = ffn(
+            p["moe"], h,
+            num_experts=cfg.num_experts,
+            top_k=cfg.experts_per_token,
+            capacity_factor=cfg.expert_capacity_factor,
+        )
+    else:
+        y, aux = L.mlp_swiglu(p["mlp"], h), {}
+    x = x + y
+    x = shard(x, "batch", "seq", None)
+    return x, aux
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return fn
+
+
+def embed_tokens(params: dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = params["embed"]["table"][tokens]
+    return x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+
+def unembed(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"].T
+    else:
+        w = params["lm_head"]["w"]
+    logits = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def forward(
+    params: dict,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    *,
+    vision_embeds: Optional[jax.Array] = None,
+) -> tuple:
+    """(B, S) tokens -> ((B, S, V) f32 logits, aux dict).
+
+    For VLM configs, `vision_embeds` (B, vision_tokens, D) replaces the
+    embeddings of the first `vision_tokens` positions (the stub frontend).
+    """
+    b, s = tokens.shape
+    x = embed_tokens(params, tokens, cfg)
+    if cfg.vision_tokens and vision_embeds is not None:
+        nv = cfg.vision_tokens
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x[:, nv:]], axis=1)
+    x = shard(x, "batch", "seq", None)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    layer = _maybe_remat(functools.partial(_layer_fn, positions=positions, cfg=cfg), cfg)
+    aux_sum = {}
+    if cfg.scan_layers:
+        def body(carry, lp):
+            y, aux = layer(lp, carry)
+            return y, aux
+        x, auxes = jax.lax.scan(lambda c, lp: body(c, lp), x, params["layers"])
+        aux_sum = jax.tree.map(jnp.sum, auxes) if auxes else {}
+    else:
+        auxes = []
+        for lp in params["layers"]:
+            x, aux = layer(lp, x)
+            if aux:
+                auxes.append(aux)
+        if auxes:
+            aux_sum = jax.tree.map(lambda *xs: jnp.sum(jnp.stack(xs)), *auxes)
+
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return unembed(params, x, cfg), aux_sum
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: list  # per layer (B, S_max, Hkv, hd)
+    v: list
+    length: jax.Array  # () int32 — tokens already written
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> KVCache:
+    dt = _dtype(cfg)
+    shape = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(
+        k=[jnp.zeros(shape, dt) for _ in range(cfg.num_layers)],
+        v=[jnp.zeros(shape, dt) for _ in range(cfg.num_layers)],
+        length=jnp.asarray(0, jnp.int32),
+    )
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig, max_len: int) -> tuple:
+    """Run the prompt through the model, returning logits + filled cache."""
+    b, s = tokens.shape
+    x = embed_tokens(params, tokens, cfg)
+    x = shard(x, "batch", "seq", None)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    spec = _attn_spec(cfg)
+
+    ks, vs = [], []
+    layer_params = params["layers"]
+    if cfg.scan_layers:
+        layer_params = [
+            jax.tree.map(lambda a, i=i: a[i], params["layers"]) for i in range(cfg.num_layers)
+        ]
+    for lp in layer_params:
+        h = L.rms_norm(lp["attn_norm"], x, cfg.norm_eps)
+        q, k, v = L.qkv_proj(lp["attn"], h, spec)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        attn = L.attention(q, k, v, spec, positions[0], positions[0])
+        x = x + L.attention_out(lp["attn"], attn)
+        h = L.rms_norm(lp["mlp_norm"], x, cfg.norm_eps)
+        if cfg.num_experts > 0:
+            # serving uses dropless capacity: at cf = E the buffers can
+            # absorb the worst-case routing, so no token is ever dropped
+            y, _ = moe_ffn(
+                lp["moe"], h,
+                num_experts=cfg.num_experts,
+                top_k=cfg.experts_per_token,
+                capacity_factor=float(cfg.num_experts),
+            )
+        else:
+            y = L.mlp_swiglu(lp["mlp"], h)
+        x = x + y
+        pad = max_len - s
+        ks.append(jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))))
+        vs.append(jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))))
+
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params, x, cfg)
+    cache = KVCache(k=ks, v=vs, length=jnp.asarray(s, jnp.int32))
+    return logits, cache
+
+
+def decode_step(params: dict, cache: KVCache, token: jax.Array, cfg: ModelConfig) -> tuple:
+    """One decode step. token: (B,) int32. Returns (logits (B, V), cache)."""
+    b = token.shape[0]
+    x = embed_tokens(params, token[:, None], cfg)
+    pos = jnp.broadcast_to(cache.length, (b,))
+    spec = _attn_spec(cfg)
+
+    layer_params = params["layers"]
+    if cfg.scan_layers:
+        layer_params = [
+            jax.tree.map(lambda a, i=i: a[i], params["layers"]) for i in range(cfg.num_layers)
+        ]
+    new_k, new_v = [], []
+    for li, lp in enumerate(layer_params):
+        h = L.rms_norm(lp["attn_norm"], x, cfg.norm_eps)
+        attn_out, ck, cv = L.decode_attention(
+            lp["attn"], h, cache.k[li], cache.v[li], pos, spec, cfg.rope_theta
+        )
+        new_k.append(ck)
+        new_v.append(cv)
+        x = x + attn_out
+        h = L.rms_norm(lp["mlp_norm"], x, cfg.norm_eps)
+        if cfg.num_experts > 0:
+            y, _ = moe_ffn(
+                lp["moe"], h,
+                num_experts=cfg.num_experts,
+                top_k=cfg.experts_per_token,
+                capacity_factor=float(cfg.num_experts),  # dropless at decode
+            )
+        else:
+            y = L.mlp_swiglu(lp["mlp"], h)
+        x = x + y
+
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params, x, cfg)[:, 0]
+    return logits, KVCache(k=new_k, v=new_v, length=cache.length + 1)

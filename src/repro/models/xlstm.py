@@ -1,0 +1,390 @@
+"""xLSTM: mLSTM (matrix-memory) + sLSTM (scalar-memory) blocks.
+
+Faithful to Beck et al. 2024 at block granularity:
+
+* mLSTM block — up-projection (factor 2), short causal conv feeding q/k,
+  matrix memory C_t = f_t C_{t-1} + i_t v_t k_t^T with exponential gating
+  and max-stabilizer m_t, gated output, down-projection. Implemented in
+  the CHUNK-RECURRENT form: a lax.scan over chunks carries (C, n, m);
+  within a chunk everything is parallel einsum work (the TPU-friendly
+  evaluation — quadratic only within the chunk). Decode is the O(1)
+  single-step recurrence, which is why this arch runs `long_500k`.
+* sLSTM block — scalar memory with hidden-to-gate recurrence; inherently
+  sequential, evaluated with lax.scan over time (per the paper: "the
+  sLSTM has memory mixing and is not parallelizable").
+
+Layer pattern: one sLSTM block every `cfg.slstm_every` blocks (the paper's
+xLSTM[7:1] ratio), mLSTM elsewhere.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import shard
+
+__all__ = ["init_params", "forward", "init_cache", "prefill", "decode_step", "is_slstm"]
+
+
+def is_slstm(cfg: ModelConfig, layer_idx: int) -> bool:
+    if cfg.slstm_every <= 0:
+        return False
+    return layer_idx % cfg.slstm_every == cfg.slstm_every - 1
+
+
+def _dims(cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner = int(cfg.proj_factor_mlstm * d)
+    h = cfg.num_heads
+    dh = d_inner // h
+    return d, d_inner, h, dh
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_mlstm_block(key, cfg: ModelConfig, dt) -> dict:
+    d, d_inner, h, dh = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": L.dense_init(ks[0], (d, 2 * d_inner), dt),
+        "conv_w": (jax.random.normal(ks[1], (4, d_inner), jnp.float32) * 0.02).astype(dt),
+        "conv_b": jnp.zeros((d_inner,), dt),
+        "wq": L.dense_init(ks[2], (d_inner, d_inner), dt),
+        "wk": L.dense_init(ks[3], (d_inner, d_inner), dt),
+        "wv": L.dense_init(ks[4], (d_inner, d_inner), dt),
+        "w_if": L.dense_init(ks[5], (d_inner, 2 * h), jnp.float32),
+        "b_i": jnp.zeros((h,), jnp.float32),
+        "b_f": jnp.full((h,), 3.0, jnp.float32),  # forget-dominant init
+        "mix_norm": L.init_rmsnorm(d_inner, dt),
+        "w_down": L.dense_init(ks[6], (d_inner, d), dt),
+    }
+
+
+def init_slstm_block(key, cfg: ModelConfig, dt) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    ff = int(cfg.proj_factor_slstm * d)
+    ks = jax.random.split(key, 6)
+    return {
+        # gates z,i,f,o each (d -> d) input + (dh -> dh per head) recurrent
+        "w_gates": L.dense_init(ks[0], (d, 4 * d), dt),
+        "r_gates": (jax.random.normal(ks[1], (4, h, dh, dh), jnp.float32) * 0.02).astype(dt),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((2 * d,)), jnp.full((d,), 3.0), jnp.zeros((d,))]
+        ).astype(jnp.float32),  # z,i | f (high) | o
+        "group_norm": L.init_rmsnorm(d, dt),
+        "w_ff_gate": L.dense_init(ks[2], (d, ff), dt),
+        "w_ff_up": L.dense_init(ks[3], (d, ff), dt),
+        "w_ff_down": L.dense_init(ks[4], (ff, d), dt),
+    }
+
+
+def init_layer(key, cfg: ModelConfig, li: int) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    p = {"norm": L.init_rmsnorm(cfg.d_model, dt)}
+    if is_slstm(cfg, li):
+        p["slstm"] = init_slstm_block(key, cfg, dt)
+    else:
+        p["mlstm"] = init_mlstm_block(key, cfg, dt)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    keys = jax.random.split(key, cfg.num_layers + 2)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "embed": {"table": L.embed_init(keys[0], (cfg.vocab_size, cfg.d_model), dt)},
+        "final_norm": L.init_rmsnorm(cfg.d_model, dt),
+        "lm_head": {"w": L.dense_init(keys[-1], (cfg.d_model, cfg.vocab_size), dt)},
+        "layers": [init_layer(keys[i + 1], cfg, i) for i in range(cfg.num_layers)],
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — chunk-recurrent evaluation
+# ---------------------------------------------------------------------------
+
+class MLSTMState(NamedTuple):
+    c: jax.Array  # (B,H,dh,dh) f32 matrix memory
+    n: jax.Array  # (B,H,dh) f32 normalizer
+    m: jax.Array  # (B,H) f32 stabilizer
+    conv: jax.Array  # (B,K-1,d_inner) streaming causal-conv state
+
+
+def _mlstm_chunk_scan(q, k, v, log_i, log_f, chunk: int, state: MLSTMState):
+    """q,k,v: (B,S,H,dh); log_i/log_f: (B,S,H). Returns (h (B,S,H,dh), state)."""
+    b, s, h, dh = q.shape
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+
+    def to_chunks(x):
+        return x.reshape(b, nc, chunk, *x.shape[2:]).transpose(1, 0, 2, *range(3, x.ndim + 1))
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    lic, lfc = to_chunks(log_i), to_chunks(log_f)
+    scale = dh ** -0.5
+
+    def body(carry, xs):
+        c_mat, n_vec, m = carry  # (B,H,dh,dh), (B,H,dh), (B,H)
+        qi, ki, vi, li, lf = xs  # (B,Cn,H,dh) / (B,Cn,H)
+        bcum = jnp.cumsum(lf, axis=1)  # inclusive cumsum of log f
+        g = li - bcum  # (B,Cn,H)
+        gmax = jax.lax.cummax(g, axis=1)
+        m_t = bcum + jnp.maximum(m[:, None, :], gmax)  # (B,Cn,H)
+
+        # inter-chunk: q_t C_prev, scaled exp(m_prev - (m_t - b_t))
+        inter_scale = jnp.exp(m[:, None, :] + bcum - m_t)  # (B,Cn,H)
+        inter = jnp.einsum("bthd,bhde->bthe", qi * scale, c_mat) * inter_scale[..., None]
+        inter_n = jnp.einsum("bthd,bhd->bth", qi * scale, n_vec) * inter_scale
+
+        # intra-chunk: D[t,s] = exp(g_s - max(m_prev, gmax_t)) for s<=t
+        mt_rel = m_t - bcum  # = max(m_prev, gmax_t)
+        dmat = jnp.exp(g[:, None, :, :] - mt_rel[:, :, None, :])  # (B,t,s,H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dmat = jnp.where(tri[None, :, :, None], dmat, 0.0)
+        qk = jnp.einsum("bthd,bshd->btsh", qi * scale, ki)  # (B,t,s,H)
+        w = qk * dmat
+        intra = jnp.einsum("btsh,bshd->bthd", w, vi)
+        intra_n = jnp.sum(w, axis=2)  # (B,t,H)
+
+        num = inter + intra  # (B,Cn,H,dh)
+        den = inter_n + intra_n
+        denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        h_out = num / denom[..., None]
+
+        # carry update to end of chunk
+        b_tot = bcum[:, -1, :]  # (B,H)
+        m_last = m_t[:, -1, :]
+        c_scale = jnp.exp(m[:, :] + b_tot - m_last)  # (B,H)
+        kv_scale = jnp.exp(g + (b_tot[:, None, :] - m_last[:, None, :]))  # (B,Cn,H)
+        c_new = c_mat * c_scale[..., None, None] + jnp.einsum(
+            "bshd,bsh,bshe->bhde", ki, kv_scale, vi
+        )
+        n_new = n_vec * c_scale[..., None] + jnp.einsum("bshd,bsh->bhd", ki, kv_scale)
+        return (c_new, n_new, m_last), h_out
+
+    (c, n, m), hs = jax.lax.scan(body, (state.c, state.n, state.m), (qc, kc, vc, lic, lfc))
+    h_full = hs.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, h, dh)[:, :s]
+    return h_full, MLSTMState(c, n, m, state.conv)
+
+
+def _mlstm_step(q, k, v, log_i, log_f, state: MLSTMState):
+    """Single-token recurrence. q,k,v: (B,H,dh); log_i/f: (B,H)."""
+    dh = q.shape[-1]
+    scale = dh ** -0.5
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    i_p = jnp.exp(log_i - m_new)
+    f_p = jnp.exp(log_f + state.m - m_new)
+    c = state.c * f_p[..., None, None] + i_p[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n = state.n * f_p[..., None] + i_p[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q * scale, c)
+    den = jnp.einsum("bhd,bhd->bh", q * scale, n)
+    denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_new))
+    return num / denom[..., None], MLSTMState(c, n, m_new, state.conv)
+
+
+def mlstm_block(p: dict, x: jax.Array, cfg: ModelConfig, *, state=None, single_step=False):
+    """x: (B,S,D). Returns (y (B,S,D), MLSTMState)."""
+    d, d_inner, h, dh = _dims(cfg)
+    dt = x.dtype
+    b, s, _ = x.shape
+    up = jnp.dot(x, p["w_up"], preferred_element_type=jnp.float32).astype(dt)
+    inner, z = up[..., :d_inner], up[..., d_inner:]
+
+    # short causal conv on the q/k path (streaming form carries K-1 taps)
+    kw = p["conv_w"].shape[0]
+    if single_step:
+        xs_cat = jnp.concatenate([state.conv.astype(dt), inner], axis=1)  # (B,K,d)
+        conv = sum(
+            xs_cat[:, i : i + 1, :] * p["conv_w"][i][None, None, :].astype(dt)
+            for i in range(kw)
+        ) + p["conv_b"].astype(dt)
+        new_conv_state = xs_cat[:, 1:, :]
+    else:
+        xp = jnp.pad(inner, ((0, 0), (kw - 1, 0), (0, 0)))
+        conv = sum(
+            xp[:, i : i + s, :] * p["conv_w"][i][None, None, :].astype(dt) for i in range(kw)
+        ) + p["conv_b"].astype(dt)
+        new_conv_state = xp[:, kw - 1 + s - (kw - 1) : kw - 1 + s, :]  # last K-1 inputs
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(dt)
+
+    q = jnp.dot(conv, p["wq"], preferred_element_type=jnp.float32).astype(dt).reshape(b, s, h, dh)
+    k = jnp.dot(conv, p["wk"], preferred_element_type=jnp.float32).astype(dt).reshape(b, s, h, dh)
+    v = jnp.dot(inner, p["wv"], preferred_element_type=jnp.float32).astype(dt).reshape(b, s, h, dh)
+    gates = jnp.dot(inner.astype(jnp.float32), p["w_if"])  # (B,S,2H)
+    log_i = gates[..., :h] + p["b_i"]
+    log_f = jax.nn.log_sigmoid(gates[..., h:] + p["b_f"])
+
+    if state is None:
+        state = MLSTMState(
+            c=jnp.zeros((b, h, dh, dh), jnp.float32),
+            n=jnp.zeros((b, h, dh), jnp.float32),
+            m=jnp.zeros((b, h), jnp.float32),
+            conv=jnp.zeros((b, kw - 1, d_inner), dt),
+        )
+    if single_step:
+        h_out, state = _mlstm_step(
+            q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+            v[:, 0].astype(jnp.float32), log_i[:, 0], log_f[:, 0], state
+        )
+        h_out = h_out[:, None]
+    else:
+        h_out, state = _mlstm_chunk_scan(
+            q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+            log_i, log_f, cfg.mlstm_chunk, state
+        )
+    state = state._replace(conv=new_conv_state)
+    h_mixed = L.rms_norm(p["mix_norm"], h_out.reshape(b, s, d_inner).astype(dt), cfg.norm_eps)
+    y = h_mixed * jax.nn.silu(z.astype(jnp.float32)).astype(dt)
+    return jnp.dot(y, p["w_down"], preferred_element_type=jnp.float32).astype(dt), state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM cell — sequential scan
+# ---------------------------------------------------------------------------
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B,D) f32
+    n: jax.Array  # (B,D) f32
+    h: jax.Array  # (B,D) f32
+    m: jax.Array  # (B,D) f32
+
+
+def _slstm_scan(p, x_gates, cfg: ModelConfig, state: SLSTMState):
+    """x_gates: (B,S,4D) input contributions to z,i,f,o gates."""
+    b, s, _ = x_gates.shape
+    d = cfg.d_model
+    h_heads = cfg.num_heads
+    dh = d // h_heads
+    r = p["r_gates"].astype(jnp.float32)  # (4,H,dh,dh)
+
+    def step(st: SLSTMState, xg):
+        hprev = st.h.reshape(b, h_heads, dh)
+        rec = jnp.einsum("bhd,ghde->gbhe", hprev, r).reshape(4, b, d)
+        zi = xg[:, 0 * d : 1 * d] + rec[0]
+        ii = xg[:, 1 * d : 2 * d] + rec[1]
+        ff = xg[:, 2 * d : 3 * d] + rec[2]
+        oo = xg[:, 3 * d : 4 * d] + rec[3]
+        z = jnp.tanh(zi)
+        o = jax.nn.sigmoid(oo)
+        log_f = jax.nn.log_sigmoid(ff)
+        m_new = jnp.maximum(log_f + st.m, ii)
+        i_p = jnp.exp(ii - m_new)
+        f_p = jnp.exp(log_f + st.m - m_new)
+        c = f_p * st.c + i_p * z
+        n = f_p * st.n + i_p
+        h = o * c / jnp.maximum(n, 1.0)
+        return SLSTMState(c, n, h, m_new), h
+
+    state, hs = jax.lax.scan(step, state, x_gates.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2), state  # (B,S,D)
+
+
+def slstm_block(p: dict, x: jax.Array, cfg: ModelConfig, *, state=None):
+    b, s, d = x.shape
+    dt = x.dtype
+    xg = jnp.dot(x, p["w_gates"], preferred_element_type=jnp.float32) + p["b_gates"]
+    if state is None:
+        z = jnp.zeros((b, d), jnp.float32)
+        state = SLSTMState(z, z, z, z)
+    h, state = _slstm_scan(p, xg, cfg, state)
+    h = L.rms_norm(p["group_norm"], h.astype(dt), cfg.norm_eps)
+    g = jnp.dot(h, p["w_ff_gate"], preferred_element_type=jnp.float32)
+    u = jnp.dot(h, p["w_ff_up"], preferred_element_type=jnp.float32)
+    y = (jax.nn.gelu(g) * u).astype(dt)
+    return jnp.dot(y, p["w_ff_down"], preferred_element_type=jnp.float32).astype(dt), state
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+class XLSTMCache(NamedTuple):
+    mlstm: list  # MLSTMState or None per layer
+    slstm: list  # SLSTMState or None per layer
+    length: jax.Array
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ModelConfig, **_) -> tuple:
+    x = params["embed"]["table"][tokens]
+    x = shard(x, "batch", "seq", None)
+    for li, lp in enumerate(params["layers"]):
+        h = L.rms_norm(lp["norm"], x, cfg.norm_eps)
+        if is_slstm(cfg, li):
+            y, _ = slstm_block(lp["slstm"], h, cfg)
+        else:
+            y, _ = mlstm_block(lp["mlstm"], h, cfg)
+        x = x + y
+        x = shard(x, "batch", "seq", None)
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.dot(x, params["lm_head"]["w"], preferred_element_type=jnp.float32)
+    return shard(logits, "batch", "seq", "vocab"), {}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> XLSTMCache:
+    d, d_inner, h, dh = _dims(cfg)
+    ms, ss = [], []
+    for li in range(cfg.num_layers):
+        if is_slstm(cfg, li):
+            z = jnp.zeros((batch, cfg.d_model), jnp.float32)
+            ss.append(SLSTMState(z, z, z, z))
+            ms.append(None)
+        else:
+            ms.append(
+                MLSTMState(
+                    c=jnp.zeros((batch, h, dh, dh), jnp.float32),
+                    n=jnp.zeros((batch, h, dh), jnp.float32),
+                    m=jnp.zeros((batch, h), jnp.float32),
+                    conv=jnp.zeros((batch, 3, d_inner), jnp.dtype(cfg.dtype)),
+                )
+            )
+            ss.append(None)
+    return XLSTMCache(ms, ss, jnp.asarray(0, jnp.int32))
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig, max_len: int) -> tuple:
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, max_len)
+    ms, ss = list(cache.mlstm), list(cache.slstm)
+    x = params["embed"]["table"][tokens]
+    for li, lp in enumerate(params["layers"]):
+        h = L.rms_norm(lp["norm"], x, cfg.norm_eps)
+        if is_slstm(cfg, li):
+            y, ss[li] = slstm_block(lp["slstm"], h, cfg, state=ss[li])
+        else:
+            y, ms[li] = mlstm_block(lp["mlstm"], h, cfg, state=ms[li])
+        x = x + y
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.dot(x, params["lm_head"]["w"], preferred_element_type=jnp.float32)
+    return logits, XLSTMCache(ms, ss, jnp.asarray(s, jnp.int32))
+
+
+def decode_step(params: dict, cache: XLSTMCache, token: jax.Array, cfg: ModelConfig) -> tuple:
+    x = params["embed"]["table"][token[:, None]]
+    ms, ss = list(cache.mlstm), list(cache.slstm)
+    for li, lp in enumerate(params["layers"]):
+        h = L.rms_norm(lp["norm"], x, cfg.norm_eps)
+        if is_slstm(cfg, li):
+            y, ss[li] = slstm_block(lp["slstm"], h, cfg, state=ss[li])
+        else:
+            y, ms[li] = mlstm_block(lp["mlstm"], h, cfg, state=ms[li], single_step=True)
+        x = x + y
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.dot(x, params["lm_head"]["w"], preferred_element_type=jnp.float32)[:, 0]
+    return logits, XLSTMCache(ms, ss, cache.length + 1)

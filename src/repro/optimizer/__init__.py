@@ -1,0 +1,12 @@
+from repro.optimizer.adamw import adamw
+from repro.optimizer.adafactor import adafactor
+from repro.optimizer.base import Optimizer, clip_by_global_norm
+from repro.optimizer.compress import compress_gradients
+
+
+def get_optimizer(name: str, lr, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,82 @@
+"""Adafactor (Shazeer & Stern 2018) with factored second moments.
+
+Used for the 405B/314B/76B configs: the factored statistics need
+O(rows + cols) memory instead of O(rows * cols), which is what lets the
+optimizer state of a 405B model fit 16 GiB/chip at 256 chips
+(see DESIGN.md Sec 7). Relative step sizes and update clipping per the
+paper; momentum off (memory).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optimizer.base import Optimizer
+
+__all__ = ["adafactor"]
+
+
+def adafactor(
+    lr,
+    *,
+    decay: float = 0.8,  # beta2 exponent: 1 - step^-decay
+    eps1: float = 1e-30,
+    eps2: float = 1e-3,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params):
+        def per_param(p):
+            if _factored(p):
+                return {
+                    "row": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"nu": jnp.zeros(p.shape, jnp.float32)}
+
+        return jax.tree.map(per_param, params)
+
+    def update(grads, state, params, step):
+        stepf = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - stepf ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(g, st, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps1
+            if _factored(p):
+                row = beta2 * st["row"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                col = beta2 * st["col"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                row_mean = jnp.mean(row, axis=-1, keepdims=True)
+                r = row / jnp.maximum(row_mean, eps1)
+                v = r[..., None] * col[..., None, :]
+                new_st = {"row": row, "col": col}
+            else:
+                v = beta2 * st["nu"] + (1 - beta2) * g2
+                new_st = {"nu": v}
+            u = g * jax.lax.rsqrt(jnp.maximum(v, eps1))
+            # update clipping by RMS
+            rms_u = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            # relative step scale
+            scale = jnp.maximum(
+                jnp.sqrt(jnp.mean(jnp.square(p.astype(jnp.float32)))), eps2
+            )
+            du = -lr_t * scale * u
+            if weight_decay and p.ndim >= 2:
+                du = du - lr_t * weight_decay * p.astype(jnp.float32)
+            return du.astype(p.dtype), new_st
+
+        out = jax.tree.map(upd, grads, state, params, is_leaf=lambda x: isinstance(x, dict) and ("row" in x or "nu" in x))
+        # out is a tree of (update, state) tuples at param positions
+        updates = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_state = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, new_state
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,56 @@
+"""AdamW with decoupled weight decay and bias correction.
+
+Moments are kept in f32 regardless of param dtype (mixed-precision
+training with bf16 params). The update is returned in param dtype.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optimizer.base import Optimizer
+
+__all__ = ["adamw"]
+
+
+def adamw(
+    lr,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params, step):
+        stepf = step.astype(jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * g * g
+            mu_hat = mu / (1 - b1 ** stepf)
+            nu_hat = nu / (1 - b2 ** stepf)
+            u = mu_hat / (jnp.sqrt(nu_hat) + eps)
+            # decoupled weight decay on matrices only (ndim >= 2)
+            if p.ndim >= 2:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype), mu, nu
+
+        out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        updates = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"mu": mu, "nu": nu}
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,65 @@
+"""Gradient compression for cross-pod all-reduce.
+
+Two schemes, both with the all-reduce-friendly property that compression
+commutes with summation:
+
+* bf16 — cast gradients to bf16 before the (pod-crossing) reduction.
+  With pjit this is what `cast_grads_dtype` achieves: the SPMD
+  partitioner then moves bf16, halving DCI/ICI gradient bytes.
+* int8 + error feedback — per-tensor max-abs scaling to int8 with a
+  persistent residual (the classic EF-SGD trick) so quantization error
+  is fed back rather than lost. Exposed for the shard_map training path
+  where the reduction is explicit.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_gradients", "init_error_feedback", "quantize_int8", "dequantize_int8"]
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_gradients(grads, *, scheme: str = "bf16", error_feedback=None):
+    """Returns (compressed_grads, new_error_feedback).
+
+    scheme="bf16": plain cast (residual unused).
+    scheme="int8": quantize(g + residual); residual = (g + residual) - dq.
+    scheme="none": passthrough.
+    """
+    if scheme == "none":
+        return grads, error_feedback
+    if scheme == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads), error_feedback
+    if scheme == "int8":
+        if error_feedback is None:
+            error_feedback = init_error_feedback(grads)
+
+        def q(g, r):
+            tot = g.astype(jnp.float32) + r
+            qv, scale = quantize_int8(tot)
+            dq = dequantize_int8(qv, scale)
+            return dq.astype(g.dtype), tot - dq
+
+        out = jax.tree.map(q, grads, error_feedback)
+        newg = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        newr = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return newg, newr
+    raise ValueError(f"unknown scheme {scheme!r}")

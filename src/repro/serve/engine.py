@@ -1,0 +1,108 @@
+"""Batched serving engine: continuous prefill + decode over a request queue.
+
+A deliberately compact production shape: fixed decode batch of `slots`,
+each slot holding one active request. Incoming prompts are prefilled
+(padded to a bucket) and their KV state inserted into the batch cache;
+every decode tick advances all live slots by one token; finished slots
+(EOS or max_tokens) are released and refilled from the queue.
+
+This is the component the `decode_32k` / `long_500k` dry-run shapes
+lower: `serve_step` = one decode tick against a seq_len-deep cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model_zoo import Model
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 32
+    eos_id: int = -1  # -1 = never
+    # filled by the engine:
+    output: Optional[list] = None
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        model: Model,
+        params,
+        *,
+        slots: int = 8,
+        max_len: int = 512,
+        greedy: bool = True,
+        seed: int = 0,
+    ):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.greedy = greedy
+        self.rng = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(model.decode_step)
+        self.queue: List[Request] = []
+        self.active: List[Optional[Request]] = [None] * slots
+        self.metrics = {"prefills": 0, "decode_ticks": 0, "tokens_out": 0}
+
+    def submit(self, req: Request):
+        req.output = []
+        self.queue.append(req)
+
+    # -- single-sequence serving path (one cache per slot batch) ----------
+    def run(self, budget_ticks: int = 10_000) -> List[Request]:
+        """Drain the queue: batch prompts of equal length, prefill, decode."""
+        done: List[Request] = []
+        while self.queue and budget_ticks > 0:
+            batch = self.queue[: self.slots]
+            self.queue = self.queue[self.slots :]
+            # bucket-pad prompts to the longest in batch
+            plen = max(len(r.prompt) for r in batch)
+            toks = np.zeros((len(batch), plen), np.int32)
+            for i, r in enumerate(batch):
+                toks[i, plen - len(r.prompt) :] = r.prompt  # left-pad
+            logits, cache = self.model.prefill(self.params, jnp.asarray(toks), self.max_len)
+            self.metrics["prefills"] += 1
+            last = np.asarray(jnp.argmax(logits[:, -1], axis=-1)).astype(np.int32)
+            live = np.ones(len(batch), bool)
+            # the prefill's last logits produce the FIRST new token
+            for i, r in enumerate(batch):
+                r.output.append(int(last[i]))
+                self.metrics["tokens_out"] += 1
+                if len(r.output) >= r.max_new_tokens or last[i] == r.eos_id:
+                    live[i] = False
+                    r.done = True
+            steps = max(r.max_new_tokens for r in batch) - 1
+            for _ in range(steps):
+                if budget_ticks <= 0 or not live.any():
+                    break
+                logits_t, cache = self._decode(self.params, cache, jnp.asarray(last))
+                self.metrics["decode_ticks"] += 1
+                budget_ticks -= 1
+                nxt = np.asarray(jnp.argmax(logits_t, axis=-1)).astype(np.int32)
+                for i, r in enumerate(batch):
+                    if not live[i]:
+                        continue
+                    r.output.append(int(nxt[i]))
+                    self.metrics["tokens_out"] += 1
+                    if len(r.output) >= r.max_new_tokens or nxt[i] == r.eos_id:
+                        live[i] = False
+                        r.done = True
+                last = nxt
+            for r in batch:
+                r.done = True
+                done.append(r)
+        return done

@@ -1,0 +1,20 @@
+"""Training state: params + optimizer state + step, as a plain pytree."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["TrainState"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array  # () int32
+
+    @classmethod
+    def create(cls, params, optimizer):
+        return cls(params=params, opt_state=optimizer.init(params), step=jnp.asarray(0, jnp.int32))

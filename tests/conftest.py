@@ -1,0 +1,10 @@
+# NOTE: deliberately NO --xla_force_host_platform_device_count here —
+# smoke tests and benches must see 1 device (multi-device tests spawn
+# subprocesses that set their own XLA_FLAGS; the dry-run sets its own).
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,61 @@
+"""Packed bitmap index: build/query/pack/unpack properties."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitmap
+
+
+class TestPackUnpack:
+    @given(seed=st.integers(0, 500), v_z=st.integers(1, 300))
+    @settings(deadline=None, max_examples=100)
+    def test_roundtrip(self, seed, v_z):
+        rng = np.random.default_rng(seed)
+        active = rng.random(v_z) < 0.3
+        words = bitmap.pack_active_mask(jnp.asarray(active))
+        back = np.asarray(bitmap.unpack_mask(words, v_z))
+        np.testing.assert_array_equal(back, active)
+
+    def test_words_for(self):
+        assert bitmap.words_for(1) == 1
+        assert bitmap.words_for(32) == 1
+        assert bitmap.words_for(33) == 2
+        assert bitmap.words_for(7548) == 236
+
+
+class TestBuildBitmap:
+    @given(seed=st.integers(0, 200))
+    @settings(deadline=None, max_examples=50)
+    def test_presence_semantics(self, seed):
+        rng = np.random.default_rng(seed)
+        nb, bs, v_z = 20, 16, 50
+        z = rng.integers(-1, v_z, size=(nb, bs)).astype(np.int32)
+        bm = bitmap.build_block_bitmap(z, v_z)
+        assert bm.shape == (nb, bitmap.words_for(v_z))
+        for b in range(nb):
+            present = np.asarray(bitmap.unpack_mask(jnp.asarray(bm[b]), v_z))
+            expected = np.zeros(v_z, bool)
+            vals = z[b][(z[b] >= 0) & (z[b] < v_z)]
+            expected[vals] = True
+            np.testing.assert_array_equal(present, expected)
+
+    def test_padding_ignored(self):
+        z = np.full((3, 8), -1, np.int32)
+        bm = bitmap.build_block_bitmap(z, 40)
+        assert (bm == 0).all()
+
+    def test_anyactive_consistency(self):
+        """bitmap AND active-mask must equal per-block set intersection."""
+        rng = np.random.default_rng(3)
+        nb, bs, v_z = 50, 32, 100
+        z = rng.integers(0, v_z, size=(nb, bs)).astype(np.int32)
+        bm = bitmap.build_block_bitmap(z, v_z)
+        active = rng.random(v_z) < 0.1
+        words = bitmap.pack_active_mask(jnp.asarray(active))
+        from repro.kernels import ref
+
+        marks = np.asarray(ref.anyactive_ref(jnp.asarray(bm), words))
+        for b in range(nb):
+            expect = bool(np.intersect1d(z[b], np.where(active)[0]).size)
+            assert marks[b] == expect

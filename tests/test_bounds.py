@@ -1,0 +1,104 @@
+"""Theorem 1 bound: algebraic properties + empirical coverage."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bounds
+
+
+class TestTheorem1Algebra:
+    @given(
+        n=st.integers(1, 10**9),
+        delta=st.floats(1e-9, 0.5),
+        v_x=st.integers(2, 4096),
+    )
+    @settings(deadline=None, max_examples=200)
+    def test_epsilon_delta_inverse(self, n, delta, v_x):
+        """theorem1_delta(theorem1_epsilon(n, d)) == d (when delta < 1)."""
+        eps = float(bounds.theorem1_epsilon(n, delta, v_x))
+        back = float(bounds.theorem1_delta(eps, n, v_x))
+        assert back == pytest.approx(delta, rel=2e-2)
+
+    @given(n=st.integers(1, 10**7), v_x=st.integers(2, 512))
+    @settings(deadline=None, max_examples=100)
+    def test_monotone_in_n(self, n, v_x):
+        e1 = float(bounds.theorem1_epsilon(n, 0.01, v_x))
+        e2 = float(bounds.theorem1_epsilon(2 * n, 0.01, v_x))
+        assert e2 < e1
+
+    @given(eps=st.floats(0.01, 1.0), v_x=st.integers(2, 512))
+    @settings(deadline=None, max_examples=100)
+    def test_delta_monotone_in_eps(self, eps, v_x):
+        n = 10_000
+        d1 = float(bounds.theorem1_delta(eps, n, v_x))
+        d2 = float(bounds.theorem1_delta(min(eps * 2, 2.0), n, v_x))
+        assert d2 <= d1 + 1e-12
+
+    def test_samples_formula_matches_paper(self):
+        # n = (2 V_X / eps^2) log(2 / delta^(1/V_X))
+        v_x, eps, delta = 24, 0.06, 0.01
+        n = bounds.theorem1_samples(eps, delta, v_x)
+        eps_back = float(bounds.theorem1_epsilon(n, delta, v_x))
+        assert eps_back <= eps <= eps_back * 1.001
+
+    def test_delta_never_above_one(self):
+        assert float(bounds.theorem1_delta(0.0, 0, 1000)) == 1.0
+        assert float(bounds.theorem1_delta(1e-9, 1, 4096)) == 1.0
+
+
+class TestFig4BoundComparison:
+    def test_tighter_than_waggoner_in_paper_regime(self):
+        """Fig. 4: our bound needs ~half the samples of Waggoner'15 for
+        moderate |V_X| — equivalently eps_ours < eps_waggoner at fixed n."""
+        delta = 0.01
+        for v_x in (7, 24, 161, 2110):
+            n = 50_000
+            ours = float(bounds.theorem1_epsilon(n, delta, v_x))
+            wagg = float(bounds.waggoner_epsilon(n, delta, v_x))
+            assert ours < wagg, (v_x, ours, wagg)
+
+    def test_ratio_improves_with_vx(self):
+        delta, n = 0.01, 100_000
+        ratios = [
+            float(bounds.theorem1_epsilon(n, delta, v)) / float(bounds.waggoner_epsilon(n, delta, v))
+            for v in (4, 16, 64, 256)
+        ]
+        # sample-complexity ratio = eps_ratio^2; paper reports <= ~0.5
+        assert all(r < 0.85 for r in ratios)
+
+
+class TestEmpiricalCoverage:
+    @pytest.mark.parametrize("v_x", [4, 24])
+    def test_deviation_bound_holds(self, v_x, rng):
+        """P(||r_hat - r*||_1 >= eps) <= delta, measured over trials."""
+        delta = 0.2
+        n = 2_000
+        eps = float(bounds.theorem1_epsilon(n, delta, v_x))
+        trials, violations = 300, 0
+        p = rng.dirichlet(np.ones(v_x))
+        for _ in range(trials):
+            counts = rng.multinomial(n, p)
+            r_hat = counts / n
+            if np.abs(r_hat - p).sum() >= eps:
+                violations += 1
+        # the bound is conservative: observed rate should be well below delta
+        assert violations / trials <= delta
+
+    def test_bound_is_not_vacuous(self, rng):
+        """eps at paper-scale parameters is small enough to be useful."""
+        eps = float(bounds.theorem1_epsilon(50_000, 0.01 / 161, 24))
+        assert eps < 0.06
+
+
+class TestSlowMatchBound:
+    def test_slowmatch_wider_than_histsim_budget(self):
+        # the per-candidate fixed budget delta/V_Z makes eps wider than a
+        # HistSim assignment that can concentrate budget
+        n, v_x, v_z, delta = 10_000, 24, 161, 0.01
+        w = float(bounds.slowmatch_epsilon(n, delta, v_z, v_x))
+        e = float(bounds.theorem1_epsilon(n, delta, v_x))
+        assert w > e

@@ -1,0 +1,103 @@
+"""Deviation selection (Sec 3.3): split point + eps assignment invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import deviations as dev
+
+taus = st.lists(st.floats(0.0, 2.0), min_size=4, max_size=64).map(np.asarray)
+
+
+class TestTopKMask:
+    @given(tau=taus, k_frac=st.floats(0.1, 0.9))
+    @settings(deadline=None, max_examples=150)
+    def test_exactly_k_selected(self, tau, k_frac):
+        k = max(1, int(len(tau) * k_frac))
+        m = np.asarray(dev.top_k_mask(jnp.asarray(tau, jnp.float32), k))
+        assert m.sum() == k
+
+    @given(tau=taus)
+    @settings(deadline=None, max_examples=100)
+    def test_selected_are_smallest(self, tau):
+        k = len(tau) // 2
+        m = np.asarray(dev.top_k_mask(jnp.asarray(tau, jnp.float32), k))
+        inside = np.sort(tau[m])
+        outside = np.sort(tau[~m])
+        if len(inside) and len(outside):
+            assert inside[-1] <= outside[0] + 1e-6
+
+
+class TestSplitPoint:
+    def test_midpoint(self):
+        tau = jnp.asarray([0.1, 0.2, 0.5, 0.9])
+        s = float(dev.split_point(tau, 2))
+        assert s == pytest.approx((0.2 + 0.5) / 2)
+
+    @given(tau=taus)
+    @settings(deadline=None, max_examples=100)
+    def test_between_boundary_candidates(self, tau):
+        k = max(1, len(tau) // 3)
+        t = np.sort(tau)
+        s = float(dev.split_point(jnp.asarray(tau, jnp.float32), k))
+        assert t[k - 1] - 1e-5 <= s <= t[k] + 1e-5
+
+
+class TestAssignDeviations:
+    @given(tau=taus, seed=st.integers(0, 1000))
+    @settings(deadline=None, max_examples=150)
+    def test_lemma2_constraints(self, tau, seed):
+        """The chosen eps_i must satisfy Lemma 2's constraint (1) & (2)."""
+        rng = np.random.default_rng(seed)
+        eps, delta, v_x = 0.06, 0.01, 24
+        k = max(1, len(tau) // 3)
+        n = rng.integers(1, 10**6, size=len(tau))
+        d = dev.assign_deviations(
+            jnp.asarray(tau, jnp.float32), jnp.asarray(n, jnp.float32),
+            k=k, eps=eps, delta=delta, v_x=v_x,
+        )
+        tau_j = np.asarray(d.tau)
+        eps_i = np.asarray(d.eps_i)
+        in_m = np.asarray(d.in_top_k)
+        # constraint (2): eps_i <= eps for i in M (reconstruction)
+        assert (eps_i[in_m] <= eps + 1e-6).all()
+        # constraint (1): max_{i in M}(tau_i + eps_i) - max(min_{j notin M}(tau_j - eps_j), 0) < eps
+        if in_m.any() and (~in_m).any():
+            lhs = (tau_j[in_m] + eps_i[in_m]).max() - max(
+                (tau_j[~in_m] - eps_i[~in_m]).min(), 0.0
+            )
+            assert lhs < eps + 1e-5
+
+    @given(tau=taus)
+    @settings(deadline=None, max_examples=100)
+    def test_delta_upper_is_sum(self, tau):
+        n = np.full(len(tau), 10_000)
+        d = dev.assign_deviations(
+            jnp.asarray(tau, jnp.float32), jnp.asarray(n, jnp.float32),
+            k=max(1, len(tau) // 4), eps=0.06, delta=0.01, v_x=24,
+        )
+        assert float(d.delta_upper) == pytest.approx(
+            float(np.exp(np.asarray(d.log_delta_i)).sum()), rel=1e-4
+        )
+
+    def test_more_samples_smaller_delta_upper(self):
+        tau = jnp.asarray([0.02, 0.03, 0.4, 0.5, 0.6], jnp.float32)
+        d1 = dev.assign_deviations(tau, jnp.full((5,), 1e3), k=2, eps=0.06, delta=0.01, v_x=24)
+        d2 = dev.assign_deviations(tau, jnp.full((5,), 1e5), k=2, eps=0.06, delta=0.01, v_x=24)
+        assert float(d2.delta_upper) < float(d1.delta_upper)
+
+    def test_active_set_shrinks_with_samples(self):
+        tau = jnp.asarray([0.02, 0.03, 0.4, 0.5, 0.6], jnp.float32)
+        d = dev.assign_deviations(tau, jnp.full((5,), 1e6), k=2, eps=0.06, delta=0.01, v_x=8)
+        # far candidates have big eps_j -> tiny delta_j -> inactive
+        assert not bool(d.active[4])
+
+    def test_slowmatch_stricter(self):
+        """SlowMatch's criterion needs at least as many samples: its
+        delta_upper >= HistSim's at the same state."""
+        tau = jnp.asarray([0.02, 0.05, 0.3, 0.55, 0.6, 0.9], jnp.float32)
+        n = jnp.full((6,), 5e4)
+        h = dev.assign_deviations(tau, n, k=2, eps=0.06, delta=0.01, v_x=24)
+        s = dev.slowmatch_deviations(tau, n, k=2, eps=0.06, delta=0.01, v_x=24)
+        assert float(s.delta_upper) >= float(h.delta_upper) - 1e-9

@@ -1,0 +1,162 @@
+"""Distributed components. Multi-device cases run in subprocesses with
+their own XLA_FLAGS (the main test process must keep 1 device)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_subprocess(code: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+@pytest.mark.slow
+class TestDistributedHistSim:
+    def test_matches_single_host(self):
+        out = _run_subprocess("""
+            import jax, jax.numpy as jnp, numpy as np, json
+            from jax.sharding import Mesh, PartitionSpec as P, NamedSharding
+            from repro.core.distributed import init_sharded_state, make_distributed_round, state_pspecs
+            from repro.core.histsim import HistSimParams, init_state, run_round
+            from repro.data.synth import SynthSpec, make_dataset
+
+            mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+            spec = SynthSpec(v_z=64, v_x=16, num_tuples=60_000, k=5, seed=0)
+            ds = make_dataset(spec)
+            params = HistSimParams(v_z=64, v_x=16, k=5)
+            state = init_sharded_state(params, jnp.asarray(ds.target))
+            specs = state_pspecs()
+            state = jax.device_put(state, jax.tree.map(lambda s: NamedSharding(mesh, s), specs))
+            rnd = make_distributed_round(mesh, params)
+            z = jnp.asarray(ds.z[:32000]); x = jnp.asarray(ds.x[:32000])
+            zs = jax.device_put(z, NamedSharding(mesh, P("data")))
+            xs = jax.device_put(x, NamedSharding(mesh, P("data")))
+            with mesh:
+                out = rnd(state, zs, xs)
+            st = init_state(params, jnp.asarray(ds.target))
+            st = run_round(st, z, x, params=params)
+            ok = (np.allclose(np.asarray(out.tau), np.asarray(st.tau), atol=1e-5)
+                  and np.allclose(np.asarray(out.counts), np.asarray(st.counts))
+                  and abs(float(out.delta_upper) - float(st.delta_upper)) < 1e-3)
+            print(json.dumps({"ok": bool(ok)}))
+        """)
+        assert json.loads(out.strip().splitlines()[-1])["ok"]
+
+
+@pytest.mark.slow
+class TestPipelineParallel:
+    def test_gpipe_matches_sequential(self):
+        out = _run_subprocess("""
+            import jax, jax.numpy as jnp, numpy as np, json
+            from jax.sharding import Mesh, PartitionSpec as P, NamedSharding
+            from repro.distributed.pipeline import make_pipeline_forward, stack_stage_params, transformer_stage_fn
+
+            mesh = Mesh(np.array(jax.devices()).reshape(4, 2, 1), ("pod", "data", "model"))
+            D = 16
+            def layer_fn(lp, x):
+                return jnp.tanh(x @ lp["w"] + lp["b"])
+            rng = np.random.default_rng(0)
+            n_stages, layers_per_stage = 4, 2
+            stages = []
+            for s in range(n_stages):
+                lw = jnp.asarray(rng.normal(size=(layers_per_stage, D, D)).astype(np.float32) * 0.3)
+                lb = jnp.asarray(np.zeros((layers_per_stage, D), np.float32))
+                stages.append({"w": lw, "b": lb})
+            stacked = stack_stage_params(stages)
+
+            fwd = make_pipeline_forward(
+                transformer_stage_fn(layer_fn, layers_per_stage), mesh,
+                n_stages=n_stages, n_microbatches=4,
+            )
+            x = jnp.asarray(rng.normal(size=(8, D)).astype(np.float32))
+            with mesh:
+                y = jax.jit(fwd)(stacked, x)
+
+            # sequential reference
+            ref = x
+            for s in range(n_stages):
+                for l in range(layers_per_stage):
+                    ref = jnp.tanh(ref @ stages[s]["w"][l] + stages[s]["b"][l])
+            ok = np.allclose(np.asarray(y), np.asarray(ref), atol=1e-5)
+            print(json.dumps({"ok": bool(ok)}))
+        """)
+        assert json.loads(out.strip().splitlines()[-1])["ok"]
+
+
+class TestShardingRules:
+    def test_param_specs_resolution(self):
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import Mesh, PartitionSpec as P
+
+        from repro.configs import get_smoke_config
+        from repro.distributed.sharding import param_pspecs
+        from repro.models.model_zoo import get_model
+
+        mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+        cfg = get_smoke_config("granite_8b")
+        model = get_model(cfg)
+        shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        specs = param_pspecs(shapes, mesh)
+        flat = {
+            "/".join(str(getattr(k, "key", getattr(k, "idx", ""))) for k in path): s
+            for path, s in jax.tree_util.tree_flatten_with_path(specs)[0]
+        }
+        assert flat["embed/table"] == P("model", "data")
+        assert flat["layers/0/attn/wq"] == P("data", "model")
+        assert flat["layers/0/attn/wo"] == P("model", "data")
+        assert flat["layers/0/mlp/w_down"] == P("model", "data")
+        assert flat["layers/0/attn_norm/scale"] == P(None)
+        assert flat["lm_head/w"] == P("data", "model")
+
+    def test_stacked_scan_params_get_layer_dim_none(self):
+        import dataclasses
+
+        import jax
+        from jax.sharding import Mesh, PartitionSpec as P
+
+        from repro.configs import get_smoke_config
+        from repro.distributed.sharding import param_pspecs
+        from repro.models.model_zoo import get_model
+
+        mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+        cfg = dataclasses.replace(get_smoke_config("granite_8b"), scan_layers=True)
+        model = get_model(cfg)
+        shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        specs = param_pspecs(shapes, mesh)
+        assert specs["layers"]["attn"]["wq"] == P(None, "data", "model")
+
+    def test_divisibility_guard(self):
+        import jax
+        from jax.sharding import Mesh, PartitionSpec as P
+
+        from repro.distributed.sharding import guard_pspec
+
+        mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+        # mesh axes have size 1 -> everything divisible
+        assert guard_pspec((7, 3), P("data", "model"), mesh) == P("data", "model")
+
+    def test_batch_pspec_fallbacks(self):
+        import jax
+        from jax.sharding import Mesh
+
+        from repro.distributed.sharding import batch_pspec
+
+        mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+        spec = batch_pspec(mesh, batch_size=4)
+        assert spec[0] in ("data", ("data",), None)  # divisible by 1

@@ -1,0 +1,170 @@
+"""Appendix A extensions + activation-drift monitor."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import deviations as dev
+from repro.core.extensions import (
+    DensityMap,
+    PredicateNode,
+    assign_deviations_two_eps,
+    estimate_block_counts,
+    measure_biased_sample,
+    pick_k_in_range,
+)
+from repro.train.monitor import ActivationMonitor
+
+
+class TestMeasureBiasedSampling:
+    def test_sum_histogram_recovered(self, rng):
+        """COUNT over the biased sample ~ SUM(Y) histogram of the data."""
+        n = 200_000
+        z = rng.integers(0, 20, n).astype(np.int32)
+        x = rng.integers(0, 8, n).astype(np.int32)
+        y = rng.exponential(scale=2.0, size=n)
+        zs, xs = measure_biased_sample(z, x, y, target_size=400_000, seed=1)
+        # true SUM histogram for candidate 3
+        mask = z == 3
+        true = np.zeros(8)
+        np.add.at(true, x[mask], y[mask])
+        true /= true.sum()
+        emp = np.bincount(xs[zs == 3], minlength=8).astype(float)
+        emp /= emp.sum()
+        assert np.abs(emp - true).sum() < 0.03
+
+    def test_sample_size_near_target(self, rng):
+        z = rng.integers(0, 5, 10_000).astype(np.int32)
+        x = rng.integers(0, 4, 10_000).astype(np.int32)
+        y = rng.random(10_000)
+        zs, _ = measure_biased_sample(z, x, y, target_size=30_000)
+        assert abs(len(zs) - 30_000) < 500
+
+    def test_rejects_negative_measure(self):
+        with pytest.raises(ValueError):
+            measure_biased_sample(
+                np.zeros(4, np.int32), np.zeros(4, np.int32), np.asarray([1.0, -1, 1, 1]),
+                target_size=10,
+            )
+
+
+class TestDensityMaps:
+    @pytest.fixture()
+    def data(self, rng):
+        nb, bs = 40, 64
+        blocks = {
+            "country": rng.integers(0, 10, (nb, bs)).astype(np.int32),
+            "religion": rng.integers(0, 4, (nb, bs)).astype(np.int32),
+        }
+        dmap = DensityMap.build(blocks, {"country": 10, "religion": 4})
+        return blocks, dmap, bs
+
+    def test_leaf_counts_exact(self, data):
+        blocks, dmap, bs = data
+        est = estimate_block_counts(dmap, PredicateNode.leaf("country", 3), bs)
+        true = (blocks["country"] == 3).sum(axis=1)
+        np.testing.assert_array_equal(est, true)
+
+    def test_and_upper_bound(self, data):
+        """AND estimate never underestimates -> AnyActive skip stays safe."""
+        blocks, dmap, bs = data
+        pred = PredicateNode.and_(
+            PredicateNode.leaf("country", 3), PredicateNode.leaf("religion", 1)
+        )
+        est = estimate_block_counts(dmap, pred, bs)
+        true = ((blocks["country"] == 3) & (blocks["religion"] == 1)).sum(axis=1)
+        assert (est >= true).all()
+
+    def test_or_upper_bound(self, data):
+        blocks, dmap, bs = data
+        pred = PredicateNode.or_(
+            PredicateNode.leaf("country", 0), PredicateNode.leaf("country", 1)
+        )
+        est = estimate_block_counts(dmap, pred, bs)
+        true = np.isin(blocks["country"], [0, 1]).sum(axis=1)
+        assert (est >= true).all()
+        assert (est <= bs).all()
+
+    def test_zero_estimate_is_exact(self, data):
+        """A skipped block (estimate 0) must truly contain no match."""
+        blocks, dmap, bs = data
+        pred = PredicateNode.and_(
+            PredicateNode.leaf("country", 7), PredicateNode.leaf("religion", 2)
+        )
+        est = estimate_block_counts(dmap, pred, bs)
+        true = ((blocks["country"] == 7) & (blocks["religion"] == 2)).sum(axis=1)
+        assert (true[est == 0] == 0).all()
+
+    def test_predicate_evaluate(self):
+        pred = PredicateNode.or_(
+            PredicateNode.and_(
+                PredicateNode.leaf("a", 1), PredicateNode.leaf("b", 2)
+            ),
+            PredicateNode.leaf("a", 5),
+        )
+        assert pred.evaluate({"a": 1, "b": 2})
+        assert pred.evaluate({"a": 5, "b": 0})
+        assert not pred.evaluate({"a": 1, "b": 0})
+
+
+class TestTwoEps:
+    @given(seed=st.integers(0, 200))
+    @settings(deadline=None, max_examples=50)
+    def test_equal_eps_matches_base(self, seed):
+        rng = np.random.default_rng(seed)
+        tau = jnp.asarray(rng.random(24) * 0.6, jnp.float32)
+        n = jnp.asarray(rng.integers(100, 10**6, 24), jnp.float32)
+        a = dev.assign_deviations(tau, n, k=5, eps=0.08, delta=0.01, v_x=16)
+        b = assign_deviations_two_eps(
+            tau, n, k=5, eps_sep=0.08, eps_rec=0.08, delta=0.01, v_x=16
+        )
+        np.testing.assert_allclose(np.asarray(a.eps_i), np.asarray(b.eps_i), atol=1e-6)
+        assert float(a.delta_upper) == pytest.approx(float(b.delta_upper), rel=1e-5)
+
+    def test_tighter_reconstruction_caps_in_m(self):
+        tau = jnp.asarray([0.02, 0.03, 0.4, 0.5], jnp.float32)
+        n = jnp.full((4,), 1e5)
+        d = assign_deviations_two_eps(
+            tau, n, k=2, eps_sep=0.2, eps_rec=0.05, delta=0.01, v_x=8
+        )
+        in_m = np.asarray(d.in_top_k)
+        assert (np.asarray(d.eps_i)[in_m] <= 0.05 + 1e-6).all()
+
+
+class TestKRange:
+    def test_picks_widest_gap(self):
+        tau = jnp.asarray([0.01, 0.02, 0.03, 0.30, 0.31, 0.32, 0.9])
+        assert pick_k_in_range(tau, 2, 5) == 3  # gap 0.03 -> 0.30
+
+    def test_respects_bounds(self):
+        tau = jnp.asarray([0.1, 0.2, 0.3, 0.4])
+        k = pick_k_in_range(tau, 2, 3)
+        assert k in (2, 3)
+
+    def test_rejects_empty_range(self):
+        with pytest.raises(ValueError):
+            pick_k_in_range(jnp.asarray([0.1, 0.2]), 3, 5)
+
+
+class TestActivationMonitor:
+    def test_no_drift_no_alarm(self):
+        rng = jax.random.PRNGKey(0)
+        mon = ActivationMonitor(names=["h0", "h1"], bins=32, drift_eps=0.2)
+        ref = {"h0": jax.random.normal(rng, (4096,)), "h1": jax.random.normal(rng, (4096,)) * 2}
+        mon.capture_reference(ref)
+        again = {
+            "h0": jax.random.normal(jax.random.PRNGKey(1), (4096,)),
+            "h1": jax.random.normal(jax.random.PRNGKey(2), (4096,)) * 2,
+        }
+        rep = mon.check(again)
+        assert not rep["h0"]["drifted"] and not rep["h1"]["drifted"]
+
+    def test_real_drift_flagged(self):
+        rng = jax.random.PRNGKey(0)
+        mon = ActivationMonitor(names=["h"], bins=32, drift_eps=0.2)
+        mon.capture_reference({"h": jax.random.normal(rng, (8192,))})
+        rep = mon.check({"h": jax.random.normal(rng, (8192,)) * 4 + 3})  # blown-up scale+shift
+        assert rep["h"]["drifted"]
+        assert rep["h"]["distance"] > rep["h"]["sampling_bound"] + 0.2

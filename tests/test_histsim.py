@@ -1,0 +1,131 @@
+"""HistSim + FastMatch engine: end-to-end correctness and guarantees."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineConfig, run_engine
+from repro.core.histsim import HistSimParams
+from repro.data.layout import block_layout
+from repro.data.synth import SynthSpec, make_dataset
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    spec = SynthSpec(
+        v_z=80, v_x=16, num_tuples=3_000_000, k=8, n_close=8,
+        close_distance=0.02, far_distance=0.3, zipf_a=0.9, seed=7,
+    )
+    ds = make_dataset(spec)
+    blocked = block_layout(ds.z, ds.x, v_z=spec.v_z, v_x=spec.v_x, block_size=512, seed=7)
+    return spec, ds, blocked
+
+
+PARAMS = dict(k=8, eps=0.08, delta=0.05)
+
+
+class TestGuarantees:
+    def test_separation_guarantee(self, dataset):
+        """Guarantee 1: any true-top-k candidate missing from the output is
+        < eps further than the furthest returned candidate."""
+        spec, ds, blocked = dataset
+        params = HistSimParams(v_z=spec.v_z, v_x=spec.v_x, **PARAMS)
+        for seed in range(5):
+            res = run_engine(blocked, ds.target, params, EngineConfig(variant="fastmatch", seed=seed))
+            returned = set(res.ids.tolist())
+            true_top = set(ds.true_top_k.tolist())
+            worst_returned = max(ds.true_dists[i] for i in res.ids)
+            for j in true_top - returned:
+                assert worst_returned - ds.true_dists[j] < params.eps, (seed, j)
+
+    def test_reconstruction_guarantee(self, dataset):
+        """Guarantee 2: returned empirical histograms are eps-close to truth."""
+        spec, ds, blocked = dataset
+        params = HistSimParams(v_z=spec.v_z, v_x=spec.v_x, **PARAMS)
+        res = run_engine(blocked, ds.target, params, EngineConfig(variant="fastmatch", seed=1))
+        counts = np.asarray(res.state.counts)
+        for i in res.ids:
+            r_hat = counts[i] / max(counts[i].sum(), 1)
+            assert np.abs(r_hat - ds.true_hists[i]).sum() < params.eps
+
+    def test_delta_upper_below_delta_on_termination(self, dataset):
+        spec, ds, blocked = dataset
+        params = HistSimParams(v_z=spec.v_z, v_x=spec.v_x, **PARAMS)
+        res = run_engine(blocked, ds.target, params, EngineConfig(variant="fastmatch", seed=2))
+        if not res.exact:
+            assert res.delta_upper < params.delta
+
+
+class TestSublinearity:
+    def test_fastmatch_sublinear(self, dataset):
+        spec, ds, blocked = dataset
+        params = HistSimParams(v_z=spec.v_z, v_x=spec.v_x, **PARAMS)
+        res = run_engine(blocked, ds.target, params, EngineConfig(variant="fastmatch", seed=3))
+        assert not res.exact
+        assert res.blocks_read < blocked.num_blocks * 0.5
+
+    def test_slowmatch_needs_more_samples(self, dataset):
+        """The paper's central ordering: SlowMatch's termination criterion
+        reads at least as much data as ScanMatch's."""
+        spec, ds, blocked = dataset
+        params = HistSimParams(v_z=spec.v_z, v_x=spec.v_x, **PARAMS)
+        scan = run_engine(blocked, ds.target, params, EngineConfig(variant="scanmatch", seed=4, start_block=0))
+        slow = run_engine(blocked, ds.target, params, EngineConfig(variant="slowmatch", seed=4, start_block=0))
+        assert slow.blocks_read >= scan.blocks_read
+
+    def test_scan_reads_everything(self, dataset):
+        spec, ds, blocked = dataset
+        params = HistSimParams(v_z=spec.v_z, v_x=spec.v_x, **PARAMS)
+        res = run_engine(blocked, ds.target, params, EngineConfig(variant="scan"))
+        assert res.blocks_read == blocked.num_blocks
+        assert sorted(res.ids.tolist()) == sorted(ds.true_top_k.tolist())
+
+
+class TestEngineMechanics:
+    def test_exact_fallback_when_data_insufficient(self):
+        """Tiny dataset: engine must fall back to exact and match Scan."""
+        spec = SynthSpec(v_z=30, v_x=8, num_tuples=20_000, k=3, n_close=3, seed=11)
+        ds = make_dataset(spec)
+        blocked = block_layout(ds.z, ds.x, v_z=spec.v_z, v_x=spec.v_x, block_size=256, seed=11)
+        params = HistSimParams(v_z=spec.v_z, v_x=spec.v_x, k=3, eps=0.02, delta=0.001)
+        res = run_engine(blocked, ds.target, params, EngineConfig(variant="fastmatch", seed=0))
+        assert res.exact
+        assert sorted(res.ids.tolist()) == sorted(ds.true_top_k.tolist())
+
+    def test_start_position_invariance_of_correctness(self, dataset):
+        spec, ds, blocked = dataset
+        params = HistSimParams(v_z=spec.v_z, v_x=spec.v_x, **PARAMS)
+        outs = []
+        for start in (0, blocked.num_blocks // 3, blocked.num_blocks - 1):
+            res = run_engine(
+                blocked, ds.target, params,
+                EngineConfig(variant="fastmatch", start_block=start, seed=0),
+            )
+            # Guarantee 1 check (allowing eps-mistakes)
+            worst = max(ds.true_dists[i] for i in res.ids)
+            for j in set(ds.true_top_k.tolist()) - set(res.ids.tolist()):
+                assert worst - ds.true_dists[j] < params.eps
+            outs.append(res.blocks_read)
+        assert all(b > 0 for b in outs)
+
+    def test_syncmatch_equals_lookahead_one(self, dataset):
+        spec, ds, blocked = dataset
+        params = HistSimParams(v_z=spec.v_z, v_x=spec.v_x, **PARAMS)
+        res = run_engine(
+            blocked, ds.target, params,
+            EngineConfig(variant="syncmatch", seed=5, max_rounds=3000),
+        )
+        # must produce a correct-enough answer like the others
+        worst = max(ds.true_dists[i] for i in res.ids)
+        for j in set(ds.true_top_k.tolist()) - set(res.ids.tolist()):
+            assert worst - ds.true_dists[j] < params.eps
+
+
+class TestDistanceEstimates:
+    def test_tau_converges_to_truth(self, dataset):
+        spec, ds, blocked = dataset
+        params = HistSimParams(v_z=spec.v_z, v_x=spec.v_x, **PARAMS)
+        res = run_engine(blocked, ds.target, params, EngineConfig(variant="scan"))
+        tau = np.asarray(res.state.tau)
+        np.testing.assert_allclose(tau, ds.true_dists, atol=0.02)

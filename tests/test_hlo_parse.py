@@ -1,0 +1,47 @@
+"""Collective-parsing unit tests (the roofline's data source)."""
+
+from repro.launch.hlo_parse import DTYPE_BYTES, collective_bytes, parse_hlo_collectives
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p0 = bf16[32,128]{1,0} parameter(0)
+  %ar = bf16[32,128]{1,0} all-reduce(bf16[32,128]{1,0} %p0), replica_groups={{0,1}}
+  %ag = f32[64,128]{1,0} all-gather(f32[32,128]{1,0} %x), dimensions={0}
+  %rs = f32[16,128]{1,0} reduce-scatter(f32[64,128]{1,0} %y), dimensions={0}
+  %cp = bf16[8,8]{1,0} collective-permute(bf16[8,8]{1,0} %z), source_target_pairs={{0,1}}
+  %aas = (f32[4,4]{1,0}) all-to-all(f32[4,4]{1,0} %w)
+  %ard = f32[2,2]{1,0} all-reduce-start(f32[2,2]{1,0} %v)
+  %ard2 = f32[2,2]{1,0} all-reduce-done(f32[2,2]{1,0} %ard)
+}
+"""
+
+
+class TestParse:
+    def test_kinds_and_counts(self):
+        stats = parse_hlo_collectives(HLO)
+        assert stats["all-reduce"]["count"] == 2  # plain + -start (not -done)
+        assert stats["all-gather"]["count"] == 1
+        assert stats["reduce-scatter"]["count"] == 1
+        assert stats["collective-permute"]["count"] == 1
+        assert stats["all-to-all"]["count"] == 1
+
+    def test_ring_cost_accounting(self):
+        stats = parse_hlo_collectives(HLO)
+        # all-reduce: 2x result bytes (bf16 32x128 = 8192 B -> 16384)
+        # + the -start one: 2 * 2*2*4 = 32
+        assert stats["all-reduce"]["bytes"] == 2 * 32 * 128 * 2 + 2 * 2 * 2 * 4
+        # all-gather: 1x result (f32 64x128)
+        assert stats["all-gather"]["bytes"] == 64 * 128 * 4
+        # reduce-scatter: operand bytes (f32 64x128)
+        assert stats["reduce-scatter"]["bytes"] == 64 * 128 * 4
+
+    def test_total(self):
+        total = collective_bytes(HLO)
+        assert total == sum(v["bytes"] for v in parse_hlo_collectives(HLO).values())
+
+    def test_ignores_non_collectives(self):
+        assert parse_hlo_collectives("%d = f32[8]{0} dot(f32[8] %a, f32[8] %b)") == {}
+
+    def test_dtype_table(self):
+        assert DTYPE_BYTES["bf16"] == 2 and DTYPE_BYTES["f32"] == 4

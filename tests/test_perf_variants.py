@@ -1,0 +1,109 @@
+"""§Perf optimization paths: bit-exactness and fallback behavior.
+
+Every flag-gated optimization must match the baseline math on CPU (no
+mesh): grouped-GQA attention, flash-decoding decode path, local MoE
+dispatch, bf16 boundaries (tolerance), matmul-form histogram.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.kernels import ops, ref
+from repro.models import layers as L
+from repro.models.model_zoo import get_model
+
+
+class TestGroupedGQA:
+    @pytest.mark.parametrize("arch", ["granite_8b", "mixtral_8x7b", "llama3_405b"])
+    def test_forward_bit_exact(self, arch):
+        cfg = get_smoke_config(arch)
+        m1 = get_model(cfg)
+        m2 = get_model(dataclasses.replace(cfg, attn_gqa_grouped=True))
+        params = m1.init(jax.random.PRNGKey(0))
+        tok = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, cfg.vocab_size)
+        l1, _ = m1.forward(params, tok)
+        l2, _ = m2.forward(params, tok)
+        np.testing.assert_array_equal(np.asarray(l1, np.float32), np.asarray(l2, np.float32))
+
+    def test_chunked_grouped_matches_chunked(self):
+        cfg = get_smoke_config("granite_8b")
+        m1 = get_model(dataclasses.replace(cfg, attn_impl="chunked", attn_chunk=8))
+        m2 = get_model(
+            dataclasses.replace(cfg, attn_impl="chunked", attn_chunk=8, attn_gqa_grouped=True)
+        )
+        params = m1.init(jax.random.PRNGKey(0))
+        tok = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, cfg.vocab_size)
+        l1, _ = m1.forward(params, tok)
+        l2, _ = m2.forward(params, tok)
+        np.testing.assert_array_equal(np.asarray(l1, np.float32), np.asarray(l2, np.float32))
+
+
+class TestFlashDecodingPath:
+    def test_decode_bit_exact(self):
+        cfg = get_smoke_config("llama3_405b")
+        m1 = get_model(cfg)
+        m2 = get_model(dataclasses.replace(cfg, decode_seq_shard=True))
+        params = m1.init(jax.random.PRNGKey(0))
+        tok = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab_size)
+        _, cache = m1.prefill(params, tok[:, :6], 12)
+        l1, _ = m1.decode_step(params, cache, tok[:, 6])
+        l2, _ = m2.decode_step(params, cache, tok[:, 6])
+        np.testing.assert_array_equal(np.asarray(l1, np.float32), np.asarray(l2, np.float32))
+
+
+class TestLocalMoE:
+    def test_no_mesh_fallback_matches_gather(self):
+        cfg = get_smoke_config("mixtral_8x7b")
+        m1 = get_model(cfg)
+        m2 = get_model(dataclasses.replace(cfg, moe_impl="local"))
+        params = m1.init(jax.random.PRNGKey(0))
+        tok = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+        l1, _ = m1.forward(params, tok)
+        l2, _ = m2.forward(params, tok)
+        np.testing.assert_array_equal(np.asarray(l1, np.float32), np.asarray(l2, np.float32))
+
+
+class TestBF16Boundaries:
+    def test_close_to_f32_baseline(self):
+        cfg = get_smoke_config("granite_8b")
+        model = get_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        tok = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+        l1, _ = model.forward(params, tok)
+        try:
+            L.set_tp_reduce_dtype(jnp.bfloat16)
+            l2, _ = model.forward(params, tok)
+        finally:
+            L.set_tp_reduce_dtype(None)
+        np.testing.assert_allclose(
+            np.asarray(l1, np.float32), np.asarray(l2, np.float32), atol=0.25
+        )
+
+
+class TestMatmulHistogram:
+    @pytest.mark.parametrize("v_z,v_x,n", [(161, 24, 5000), (472, 128, 3000), (16, 4, 99)])
+    def test_matches_scatter_ref(self, v_z, v_x, n, rng):
+        z = jnp.asarray(rng.integers(-1, v_z, n), jnp.int32)
+        x = jnp.asarray(rng.integers(-1, v_x, n), jnp.int32)
+        a = ref.histogram_matmul(z, x, v_z=v_z, v_x=v_x, chunk=512)
+        b = ref.histogram_ref(z, x, v_z=v_z, v_x=v_x)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+    def test_bf16_onehot_exact_counts(self, rng):
+        z = jnp.asarray(rng.integers(0, 50, 4000), jnp.int32)
+        x = jnp.asarray(rng.integers(0, 7, 4000), jnp.int32)
+        a = ref.histogram_matmul(z, x, v_z=50, v_x=7, onehot_dtype=jnp.bfloat16)
+        b = ref.histogram_ref(z, x, v_z=50, v_x=7)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))  # exact: 0/1 x f32 acc
+
+    def test_ops_dispatch(self, rng):
+        z = jnp.asarray(rng.integers(0, 10, 100), jnp.int32)
+        x = jnp.asarray(rng.integers(0, 5, 100), jnp.int32)
+        a = ops.histogram(z, x, v_z=10, v_x=5, impl="matmul")
+        b = ops.histogram(z, x, v_z=10, v_x=5, impl="ref")
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
