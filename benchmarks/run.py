@@ -20,6 +20,7 @@ from benchmarks import (
     fig10_11_delta,
     guarantees,
     roofline_report,
+    serve_throughput,
     table4_speedups,
 )
 
@@ -31,6 +32,7 @@ SUITES = {
     "fig10_11": fig10_11_delta.run,
     "guarantees": guarantees.run,
     "roofline": roofline_report.run,
+    "serve": serve_throughput.run,
 }
 
 

@@ -1,0 +1,124 @@
+"""Serving throughput: `MatchServer` vs one `run_engine` per query.
+
+The acceptance measurement for the multi-query serving subsystem: N = 8
+concurrent queries over the same dataset must read FEWER total tuples
+through the shared-counts scheduler than 8 sequential `run_engine`
+calls, with identical top-k accuracy against planted ground truth.
+
+Reported rows (benchmarks/run.py CSV schema):
+
+  serve_solo_total      — us per solo batch, derived = total tuples read
+  serve_shared_total    — us per served batch, derived = total tuples read
+  serve_io_amortization — derived = solo_tuples / shared_tuples (>1 = win)
+  serve_qps             — derived = queries/sec through the server
+  serve_accuracy        — derived = "shared_acc/solo_acc" top-k recall
+  serve_late_query      — derived = new tuples read for a warm-cache query
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import EPS_DEFAULT
+from repro.core.engine import EngineConfig, run_engine
+from repro.core.histsim import HistSimParams
+from repro.data.layout import block_layout
+from repro.data.synth import SynthSpec, make_dataset, perturb_distribution
+from repro.serve.fastmatch_server import MatchServer
+
+N_QUERIES = 8
+K = 10
+DELTA = 0.01
+EPS = max(EPS_DEFAULT, 0.07)
+
+SPEC = SynthSpec(
+    v_z=161, v_x=24, num_tuples=6_000_000, k=K, n_close=10,
+    close_distance=0.02, far_distance=0.3, zipf_a=1.0, close_rank="head", seed=42,
+)
+
+
+def _targets(ds, n: int):
+    """n distinct targets near the dataset's base target."""
+    rng = np.random.default_rng(7)
+    out = [ds.target]
+    for d in np.linspace(0.004, 0.04, n - 1):
+        out.append(perturb_distribution(ds.target, d, rng))
+    return out
+
+
+def _true_top_k(ds, target, k: int) -> set:
+    dists = np.abs(ds.true_hists - np.asarray(target)[None, :]).sum(axis=1)
+    return set(np.argsort(dists, kind="stable")[:k].tolist())
+
+
+def _recall(ids, truth: set) -> float:
+    return len(set(ids.tolist()) & truth) / len(truth)
+
+
+def run(rows: list) -> None:
+    ds = make_dataset(SPEC)
+    blocked = block_layout(ds.z, ds.x, v_z=SPEC.v_z, v_x=SPEC.v_x, block_size=512, seed=42)
+    targets = _targets(ds, N_QUERIES)
+    params = HistSimParams(v_z=SPEC.v_z, v_x=SPEC.v_x, k=K, eps=EPS, delta=DELTA)
+
+    # jit warmup for both paths (compile ingest/stats/marking once)
+    run_engine(blocked, targets[0], params,
+               EngineConfig(variant="fastmatch", seed=999, max_rounds=1))
+    warm = MatchServer(blocked, max_queries=N_QUERIES, lookahead=512, seed=999)
+    warm.submit(targets[0], k=K, eps=EPS, delta=DELTA)
+    warm.run_until_idle(max_rounds=1)
+
+    # -- solo: one engine per query -------------------------------------
+    t0 = time.perf_counter()
+    solo = [
+        run_engine(blocked, t, params, EngineConfig(variant="fastmatch", seed=100 + i))
+        for i, t in enumerate(targets)
+    ]
+    solo_wall = time.perf_counter() - t0
+    solo_tuples = sum(r.tuples_read for r in solo)
+
+    # -- shared: one MatchServer, all queries concurrent ----------------
+    server = MatchServer(blocked, max_queries=N_QUERIES, lookahead=512, seed=200)
+    t0 = time.perf_counter()
+    rids = [server.submit(t, k=K, eps=EPS, delta=DELTA) for t in targets]
+    results = server.run_until_idle()
+    shared_wall = time.perf_counter() - t0
+    shared_tuples = server.metrics["total_tuples_read"]
+
+    truths = [_true_top_k(ds, t, K) for t in targets]
+    solo_acc = float(np.mean([_recall(r.ids, tr) for r, tr in zip(solo, truths)]))
+    shared_acc = float(np.mean(
+        [_recall(results[rid].ids, tr) for rid, tr in zip(rids, truths)]
+    ))
+
+    # -- late query against the warm cache ------------------------------
+    before = server.metrics["total_tuples_read"]
+    late = server.submit(targets[1], k=K, eps=EPS, delta=DELTA)
+    server.run_until_idle()[late]
+    late_tuples = server.metrics["total_tuples_read"] - before
+
+    rows.append(dict(name="serve_solo_total",
+                     us_per_call=1e6 * solo_wall, derived=solo_tuples))
+    rows.append(dict(name="serve_shared_total",
+                     us_per_call=1e6 * shared_wall, derived=int(shared_tuples)))
+    rows.append(dict(name="serve_io_amortization", us_per_call=0.0,
+                     derived=round(solo_tuples / max(shared_tuples, 1), 2)))
+    rows.append(dict(name="serve_qps", us_per_call=1e6 * shared_wall / N_QUERIES,
+                     derived=round(N_QUERIES / shared_wall, 2)))
+    rows.append(dict(name="serve_accuracy", us_per_call=0.0,
+                     derived=f"{shared_acc:.3f}/{solo_acc:.3f}"))
+    rows.append(dict(name="serve_late_query", us_per_call=0.0, derived=int(late_tuples)))
+
+    ok = shared_tuples < solo_tuples and shared_acc >= solo_acc
+    print(f"# serve_throughput: shared={int(shared_tuples):,} tuples vs "
+          f"solo={solo_tuples:,} ({solo_tuples / max(shared_tuples, 1):.1f}x), "
+          f"recall {shared_acc:.3f} vs {solo_acc:.3f} -> {'PASS' if ok else 'FAIL'}")
+
+
+if __name__ == "__main__":
+    rows: list = []
+    run(rows)
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

@@ -26,7 +26,13 @@ import jax.numpy as jnp
 
 from repro.core import bounds
 
-__all__ = ["DeviationState", "assign_deviations", "split_point", "top_k_mask"]
+__all__ = [
+    "DeviationState",
+    "assign_deviations",
+    "assign_deviations_dynamic",
+    "split_point",
+    "top_k_mask",
+]
 
 
 class DeviationState(NamedTuple):
@@ -81,36 +87,78 @@ def assign_deviations(
 ) -> DeviationState:
     """One statistics iteration: eps_i, delta_i, delta_upper, active set.
 
+    Thin static-parameter entry point over `assign_deviations_dynamic`
+    (one copy of the Sec 3.3 math; the dynamic form is bitwise-identical
+    — see tests/test_multiquery.py).
+
     Args:
       tau: (V_Z,) distance estimates.
       n: (V_Z,) samples taken per candidate.
       k/eps/delta: user parameters of Problem 1.
       v_x: histogram support size |V_X|.
     """
+    return assign_deviations_dynamic(
+        tau, n, k=k, eps=eps, delta=delta, v_x=v_x, criterion="histsim"
+    )
+
+
+def assign_deviations_dynamic(
+    tau: jax.Array,
+    n: jax.Array,
+    *,
+    k: jax.Array,
+    eps: jax.Array,
+    delta: jax.Array,
+    v_x: int,
+    criterion: str = "histsim",
+) -> DeviationState:
+    """`assign_deviations` with traced (k, eps, delta) — vmappable.
+
+    The multi-query statistics engine (core/multiquery.py) runs one
+    deviation assignment per live query with per-query Problem 1
+    parameters, so k/eps/delta arrive as scalar arrays rather than
+    Python statics. Selection is done via a full stable argsort instead
+    of `lax.top_k`; both break ties by index, so the produced M, split
+    point and deviations are identical to the static path.
+
+    criterion: "histsim" (delta_upper = sum delta_i) | "slowmatch"
+    (delta_upper = V_Z * max delta_i), matching `slowmatch_deviations`.
+    """
+    if criterion not in ("histsim", "slowmatch"):
+        raise ValueError(criterion)
     tau = jnp.asarray(tau, jnp.float32)
     v_z = tau.shape[0]
-    in_m = top_k_mask(tau, k)
-    s = split_point(tau, k)
+    k = jnp.asarray(k, jnp.int32)
+    eps = jnp.asarray(eps, jnp.float32)
+    delta = jnp.asarray(delta, jnp.float32)
+
+    order = jnp.argsort(tau, stable=True)  # ascending
+    ranks = jnp.zeros((v_z,), jnp.int32).at[order].set(jnp.arange(v_z, dtype=jnp.int32))
+    in_m = ranks < k
+    sorted_tau = tau[order]
+    kth = sorted_tau[jnp.clip(k - 1, 0, v_z - 1)]
+    k1th = sorted_tau[jnp.clip(k, 0, v_z - 1)]
+    s = jnp.where(k >= v_z, jnp.max(tau), 0.5 * (kth + k1th))
 
     # Sec 3.3: in-M candidates must not cross s + eps/2 and must have
     # eps_i <= eps (reconstruction); out-of-M must not cross s - eps/2
-    # (clamped at 0: no negative distances).
+    # (clamped at 0: no negative distances). Ties at the boundary can
+    # produce eps_i = 0; delta_i then saturates at 1, which is
+    # conservative.
     eps_in = jnp.minimum(eps, s + 0.5 * eps - tau)
     eps_out = tau - jnp.maximum(s - 0.5 * eps, 0.0)
-    eps_i = jnp.where(in_m, eps_in, eps_out)
-    # Guard: deviations are widths, never negative. (Ties at the boundary
-    # can produce 0; delta_i then saturates at 1, which is conservative.)
-    eps_i = jnp.maximum(eps_i, 0.0)
+    eps_i = jnp.maximum(jnp.where(in_m, eps_in, eps_out), 0.0)
 
     log_delta_i = bounds.theorem1_log_delta(eps_i, n, v_x)
-    # Sum of deltas in plain space is fine: each delta_i <= 1 and V_Z is
-    # at most a few tens of thousands, so no overflow; underflow to 0 is
-    # exactly what we want for long-pruned candidates.
-    delta_i = jnp.exp(log_delta_i)
-    delta_upper = jnp.sum(delta_i)
-
-    log_threshold = jnp.log(jnp.asarray(delta / float(v_z), jnp.float32))
-    active = log_delta_i > log_threshold
+    if criterion == "slowmatch":
+        # Every candidate individually at confidence delta/V_Z (Sec 5.2).
+        delta_upper = float(v_z) * jnp.exp(jnp.max(log_delta_i))
+    else:
+        # Sum in plain space is fine: each delta_i <= 1 and V_Z is at
+        # most a few tens of thousands; underflow to 0 is what we want
+        # for long-pruned candidates.
+        delta_upper = jnp.sum(jnp.exp(log_delta_i))
+    log_threshold = jnp.log(delta / float(v_z))
     return DeviationState(
         tau=tau,
         in_top_k=in_m,
@@ -118,7 +166,7 @@ def assign_deviations(
         eps_i=eps_i,
         log_delta_i=log_delta_i,
         delta_upper=delta_upper,
-        active=active,
+        active=log_delta_i > log_threshold,
     )
 
 
@@ -142,24 +190,6 @@ def slowmatch_deviations(
     reporting delta_upper = V_Z * max_i delta_i so that the shared
     termination test `delta_upper < delta` implements the SlowMatch rule.
     """
-    tau = jnp.asarray(tau, jnp.float32)
-    v_z = tau.shape[0]
-    in_m = top_k_mask(tau, k)
-    s = split_point(tau, k)
-    eps_in = jnp.minimum(eps, s + 0.5 * eps - tau)
-    eps_out = tau - jnp.maximum(s - 0.5 * eps, 0.0)
-    eps_i = jnp.maximum(jnp.where(in_m, eps_in, eps_out), 0.0)
-    log_delta_i = bounds.theorem1_log_delta(eps_i, n, v_x)
-    # SlowMatch: every candidate individually at confidence delta/V_Z.
-    delta_upper = float(v_z) * jnp.exp(jnp.max(log_delta_i))
-    log_threshold = jnp.log(jnp.asarray(delta / float(v_z), jnp.float32))
-    active = log_delta_i > log_threshold
-    return DeviationState(
-        tau=tau,
-        in_top_k=in_m,
-        split=s,
-        eps_i=eps_i,
-        log_delta_i=log_delta_i,
-        delta_upper=delta_upper,
-        active=active,
+    return assign_deviations_dynamic(
+        tau, n, k=k, eps=eps, delta=delta, v_x=v_x, criterion="slowmatch"
     )

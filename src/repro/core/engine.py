@@ -28,6 +28,11 @@ later passes (candidates can re-activate when the split point moves).
 If a whole pass reads nothing and HistSim still has not terminated, the
 engine completes exactly (reads the remainder) — at that point empirical
 counts equal the true ones and the guarantees hold deterministically.
+
+The window-marking/ingest loop itself lives in `repro.core.multiquery`
+(`SharedCountsScheduler`): `run_engine` is its ``max_queries=1``
+specialization, and the N-query serving frontend over the same loop is
+`repro.serve.fastmatch_server.MatchServer`.
 """
 
 from __future__ import annotations
@@ -36,13 +41,12 @@ import dataclasses
 import time
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import histsim
 from repro.core.histsim import HistSimParams, HistSimState
-from repro.core.policies import mark_window
+from repro.core.multiquery import MultiQuerySpec, SharedCountsScheduler
 from repro.data.layout import BlockedDataset
 
 __all__ = ["EngineConfig", "MatchResult", "run_engine", "VARIANTS"]
@@ -85,7 +89,7 @@ class MatchResult:
     blocks_considered: int
     tuples_read: int
     wall_time_s: float
-    exact: bool  # True if the engine fell back to a complete read
+    exact: bool  # True iff the answer rests on a COMPLETE read of the data
     passes: int
 
     @property
@@ -119,109 +123,62 @@ def _run_exact_scan(dataset: BlockedDataset, state, params, t0) -> "MatchResult"
     )
 
 
-def _ingest_window(state, z_blocks, x_blocks, win_j, marks, params):
-    """Gather marked blocks (unmarked -> padding) and run one round."""
-    zw = jnp.where(marks[:, None], z_blocks[win_j], jnp.int32(-1))
-    xw = jnp.where(marks[:, None], x_blocks[win_j], jnp.int32(-1))
-    return histsim.run_round(state, zw.reshape(-1), xw.reshape(-1), params=params)
-
-
 def run_engine(
     dataset: BlockedDataset,
     target: np.ndarray,
     params: HistSimParams,
     config: EngineConfig = EngineConfig(),
 ) -> MatchResult:
-    """Run one matching query to termination. Returns the top-k + stats."""
+    """Run one matching query to termination. Returns the top-k + stats.
+
+    This is the ``max_queries=1`` specialization of the shared
+    window-marking/ingest loop (`multiquery.SharedCountsScheduler`);
+    `MatchServer` runs the same loop with many concurrent queries.
+
+    ``exact`` in the result means what the docstring says: True iff the
+    answer rests on a complete read of the dataset (either the exact
+    fallback fired, or sampling happened to exhaust every block). A
+    ``max_rounds`` budget cut returns the best-effort sampled answer
+    with ``exact=False`` — it never silently completes the scan.
+    """
     if params.v_z != dataset.v_z or params.v_x != dataset.v_x:
         raise ValueError("params/dataset dimension mismatch")
     if config.criterion != params.criterion:
         params = dataclasses.replace(params, criterion=config.criterion)
 
     t0 = time.perf_counter()
-    rng = np.random.default_rng(config.seed)
-    nb = dataset.num_blocks
-    window = min(config.window, nb)
-
-    state = histsim.init_state(params, jnp.asarray(target))
 
     if config.variant == "scan":
+        state = histsim.init_state(params, jnp.asarray(target))
         return _run_exact_scan(dataset, state, params, t0)
 
-    start = config.start_block if config.start_block is not None else int(rng.integers(nb))
-    order = np.roll(np.arange(nb), -start)  # cyclic visit order
-    read_mask = np.zeros(nb, dtype=bool)
+    spec = MultiQuerySpec(
+        v_z=params.v_z, v_x=params.v_x, max_queries=1, criterion=params.criterion
+    )
+    sched = SharedCountsScheduler(
+        dataset,
+        spec,
+        policy=config.policy,
+        window=config.window,
+        seed=config.seed,
+        start_block=config.start_block,
+    )
+    qid = sched.admit(target, k=params.k, eps=params.eps, delta=params.delta)
+    sched.pump(max_rounds=config.max_rounds, max_passes=config.max_passes)
+    if qid not in sched.outcomes:
+        # max_rounds budget cut: best-effort sampled answer, NOT exact.
+        out = sched.retire(0, exact=False, terminated=False)
+    else:
+        out = sched.outcomes[qid]
 
-    z_blocks = jnp.asarray(dataset.z_blocks)
-    x_blocks = jnp.asarray(dataset.x_blocks)
-    bitmap = jnp.asarray(dataset.bitmap)
-    tuples_per_block = (dataset.z_blocks >= 0).sum(axis=1)
-
-    rounds = blocks_read = blocks_considered = tuples_read = passes = 0
-    terminated = False
-
-    while not terminated and passes < config.max_passes:
-        pass_order = order[~read_mask[order]]
-        if pass_order.size == 0:
-            break
-        passes += 1
-        read_this_pass = 0
-        pos = 0
-        while pos < pass_order.size and not terminated:
-            win = pass_order[pos : pos + window]
-            pos += len(win)
-            blocks_considered += len(win)
-            win_j = jnp.asarray(win, jnp.int32)
-
-            # sampling engine: mark with the freshest (= one-round-stale) delta
-            marks = mark_window(bitmap[win_j], state.active_words, policy=config.policy)
-            marks_np = np.asarray(marks)
-            n_marked = int(marks_np.sum())
-            if n_marked:
-                state = _ingest_window(state, z_blocks, x_blocks, win_j, marks, params)
-                read = win[marks_np]
-                read_mask[read] = True
-                blocks_read += n_marked
-                read_this_pass += n_marked
-                tuples_read += int(tuples_per_block[read].sum())
-            else:
-                # nothing to read: statistics unchanged, no stats step needed
-                pass
-            rounds += 1
-            if n_marked and histsim.should_terminate(state, params):
-                terminated = True
-            if rounds >= config.max_rounds:
-                terminated = True  # budget cut; result is best-effort
-        if read_this_pass == 0:
-            break  # no unread block can help; fall through to exact fallback
-
-    exact = False
-    if not terminated or not histsim.should_terminate(state, params):
-        # Exact completion: read everything left, answer becomes exact.
-        remaining = np.where(~read_mask)[0]
-        if remaining.size:
-            exact = True
-            for s in range(0, remaining.size, max(window, 1)):
-                chunk = remaining[s : s + window]
-                cj = jnp.asarray(chunk, jnp.int32)
-                state = histsim.ingest(
-                    state, z_blocks[cj].reshape(-1), x_blocks[cj].reshape(-1), params=params
-                )
-                blocks_read += len(chunk)
-                tuples_read += int(tuples_per_block[chunk].sum())
-            read_mask[remaining] = True
-            state = histsim.stats_step(state, params=params)
-        exact = True  # all data read either way
-
-    ids = np.asarray(histsim.top_k_ids(state, params.k))
     return MatchResult(
-        ids=ids,
-        state=state,
-        rounds=rounds,
-        blocks_read=blocks_read,
-        blocks_considered=blocks_considered,
-        tuples_read=tuples_read,
+        ids=out.ids,
+        state=out.state,
+        rounds=out.rounds,
+        blocks_read=out.blocks_read,
+        blocks_considered=out.blocks_considered,
+        tuples_read=out.tuples_read,
         wall_time_s=time.perf_counter() - t0,
-        exact=exact,
-        passes=passes,
+        exact=out.exact,
+        passes=out.passes,
     )

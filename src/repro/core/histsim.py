@@ -13,6 +13,12 @@ the paper's statistics engine deciding when it may "safely terminate".
 The sampling policies that decide WHICH samples each round ingests live
 in policies.py / engine.py; HistSim itself is sampling-agnostic
 (paper: "Our HistSim algorithm is agnostic to the sampling approach").
+
+The counts matrix is target-independent — only q_hat/tau/eps_i/delta_i
+depend on the query — which is what lets `repro.core.multiquery` share
+one counts matrix across N concurrent queries (per-query statistics
+vmapped) and `repro.serve.fastmatch_server.MatchServer` serve a query
+population from a single I/O stream.
 """
 
 from __future__ import annotations

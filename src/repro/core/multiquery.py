@@ -1,0 +1,571 @@
+"""Shared-counts multi-query HistSim — the FastMatch serving core.
+
+The key structural fact enabling a serving layer on top of HistSim: the
+counts matrix ``r_i`` accumulated by `ingest` is *target-independent* —
+only ``q_hat``, ``tau``, ``eps_i`` and ``delta_i`` depend on the query.
+N concurrent queries over the same dataset can therefore share ONE
+counts matrix and ONE I/O stream:
+
+  shared   — counts (V_Z, V_X), n (V_Z,), the block read_mask / cursor
+  per-query — q_hat, (k, eps, delta), tau, eps_i, log_delta_i,
+              delta_upper, active set, matching set M
+
+`ingest` runs once per window for everybody (reusing the one-hot-
+contraction histogram kernel); `stats_step` is vmapped over the query
+axis, so each query keeps its own Problem 1 parameters and its own
+termination bound. The union active set — the bitwise OR of the
+per-query packed ``active_words`` — feeds the AnyActive kernel, so the
+I/O manager reads a block iff *any* live query still needs it.
+
+Sample-complexity intuition (Diakonikolas et al., Canonne et al.: the
+cost of testing closeness is driven by the number of samples, not the
+number of hypotheses tested against them): every tuple read is charged
+once but advances all N queries, so the per-query I/O cost shrinks
+roughly as 1/N, and queries admitted late start from the accumulated
+shared counts instead of from zero. Soundness of a late query using
+the full accumulated ``n_i`` for its Theorem 1 bounds: WHICH blocks
+were read does depend on the earlier queries' targets (AnyActive marks
+via their active sets), but the layout pre-shuffle assigns tuples to
+blocks independently of their x-values, so for each candidate any
+block-granular read policy yields a uniform without-replacement sample
+of that candidate's tuples — the same paper-Sec 4.2 property the
+single-query engine already relies on when AnyActive is driven by its
+OWN target. Hence a late query's ``n_i`` IS the shared ``n_i``, with
+no discounting. (This rests on the shuffle; on a non-shuffled layout
+neither the single- nor the multi-query bounds are valid.)
+
+Query slots are padded to a fixed ``max_queries`` so every jitted
+function sees stable shapes; empty slots are masked out of the active
+union and report delta_upper = 0.
+
+`SharedCountsScheduler` below is the window-marking/ingest loop that
+used to live inline in `engine.run_engine`; the single-query engine is
+now the ``max_queries=1`` specialization of this loop, and
+`repro.serve.fastmatch_server.MatchServer` is the many-query frontend
+with admission/retirement.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import deviations as dev
+from repro.core import histsim
+from repro.core.bitmap import pack_active_mask, words_for
+from repro.core.histsim import HistSimState
+from repro.core.policies import mark_window
+from repro.data.layout import BlockedDataset
+from repro.kernels import ops
+
+__all__ = [
+    "MultiQuerySpec",
+    "MultiQueryState",
+    "QueryOutcome",
+    "SharedCountsScheduler",
+    "init_multi_state",
+    "admit_slot",
+    "clear_slot",
+    "ingest",
+    "stats_step",
+    "run_round",
+    "slot_state",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiQuerySpec:
+    """Static shape/criterion configuration shared by all query slots."""
+
+    v_z: int
+    v_x: int
+    max_queries: int = 8
+    criterion: str = "histsim"  # "histsim" | "slowmatch", applies to all slots
+
+    def __post_init__(self):
+        if self.max_queries < 1:
+            raise ValueError(f"need max_queries >= 1, got {self.max_queries}")
+        if self.criterion not in ("histsim", "slowmatch"):
+            raise ValueError(self.criterion)
+
+
+class MultiQueryState(NamedTuple):
+    """One shared counts matrix + per-slot query statistics (Q = max_queries)."""
+
+    counts: jax.Array  # (V_Z, V_X) f32 — SHARED empirical counts r_i
+    n: jax.Array  # (V_Z,) f32 — SHARED samples per candidate n_i
+    q_hat: jax.Array  # (Q, V_X) f32 normalized targets
+    k: jax.Array  # (Q,) i32 per-query k
+    eps: jax.Array  # (Q,) f32 per-query eps
+    delta: jax.Array  # (Q,) f32 per-query delta
+    tau: jax.Array  # (Q, V_Z) f32 per-query distance estimates
+    eps_i: jax.Array  # (Q, V_Z) f32 assigned deviations
+    log_delta_i: jax.Array  # (Q, V_Z) f32
+    delta_upper: jax.Array  # (Q,) f32 — 0 for empty slots
+    active: jax.Array  # (Q, V_Z) bool — per-query AnyActive candidates
+    active_words: jax.Array  # (Q, W) uint32 packed per-query active masks
+    union_words: jax.Array  # (W,) uint32 — OR over slots; drives block marking
+    in_top_k: jax.Array  # (Q, V_Z) bool — per-query matching set M
+    occupied: jax.Array  # (Q,) bool — slot holds a live query
+    round_idx: jax.Array  # () i32 — statistics iterations so far
+
+
+def init_multi_state(spec: MultiQuerySpec) -> MultiQueryState:
+    """All slots empty, counts at zero."""
+    q, v_z, v_x = spec.max_queries, spec.v_z, spec.v_x
+    w = words_for(v_z)
+    return MultiQueryState(
+        counts=jnp.zeros((v_z, v_x), jnp.float32),
+        n=jnp.zeros((v_z,), jnp.float32),
+        q_hat=jnp.full((q, v_x), 1.0 / v_x, jnp.float32),
+        k=jnp.ones((q,), jnp.int32),
+        eps=jnp.ones((q,), jnp.float32),
+        delta=jnp.ones((q,), jnp.float32),
+        tau=jnp.ones((q, v_z), jnp.float32),
+        eps_i=jnp.zeros((q, v_z), jnp.float32),
+        log_delta_i=jnp.zeros((q, v_z), jnp.float32),
+        delta_upper=jnp.zeros((q,), jnp.float32),
+        active=jnp.zeros((q, v_z), bool),
+        active_words=jnp.zeros((q, w), jnp.uint32),
+        union_words=jnp.zeros((w,), jnp.uint32),
+        in_top_k=jnp.zeros((q, v_z), bool),
+        occupied=jnp.zeros((q,), bool),
+        round_idx=jnp.asarray(0, jnp.int32),
+    )
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def admit_slot(
+    state: MultiQueryState,
+    slot: jax.Array,
+    q_hat: jax.Array,
+    k: jax.Array,
+    eps: jax.Array,
+    delta: jax.Array,
+    *,
+    spec: MultiQuerySpec,
+) -> MultiQueryState:
+    """Install a query into `slot`. Run `stats_step` before the next marking
+    so the new query's active set reflects the accumulated shared counts."""
+    del spec  # shapes carried by state
+    slot = jnp.asarray(slot, jnp.int32)
+    return state._replace(
+        q_hat=state.q_hat.at[slot].set(jnp.asarray(q_hat, jnp.float32)),
+        k=state.k.at[slot].set(jnp.asarray(k, jnp.int32)),
+        eps=state.eps.at[slot].set(jnp.asarray(eps, jnp.float32)),
+        delta=state.delta.at[slot].set(jnp.asarray(delta, jnp.float32)),
+        occupied=state.occupied.at[slot].set(True),
+    )
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def clear_slot(state: MultiQueryState, slot: jax.Array, *, spec: MultiQuerySpec) -> MultiQueryState:
+    """Free a slot (query retired): drop it from the active union."""
+    del spec
+    slot = jnp.asarray(slot, jnp.int32)
+    active_words = state.active_words.at[slot].set(jnp.uint32(0))
+    return state._replace(
+        occupied=state.occupied.at[slot].set(False),
+        active=state.active.at[slot].set(False),
+        active_words=active_words,
+        delta_upper=state.delta_upper.at[slot].set(0.0),
+        union_words=_or_reduce(active_words),
+    )
+
+
+def _or_reduce(words: jax.Array) -> jax.Array:
+    """(Q, W) uint32 -> (W,) bitwise OR over the query axis."""
+    return jax.lax.reduce(words, jnp.uint32(0), jax.lax.bitwise_or, dimensions=[0])
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def ingest(
+    state: MultiQueryState, z_idx: jax.Array, x_idx: jax.Array, *, spec: MultiQuerySpec
+) -> MultiQueryState:
+    """Accumulate a padded sample batch into the SHARED counts — one
+    histogram-kernel launch serves every live query."""
+    delta_counts = ops.histogram(z_idx, x_idx, v_z=spec.v_z, v_x=spec.v_x)
+    return state._replace(
+        counts=state.counts + delta_counts,
+        n=state.n + jnp.sum(delta_counts, axis=1),
+    )
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def stats_step(state: MultiQueryState, *, spec: MultiQuerySpec) -> MultiQueryState:
+    """One statistics-engine iteration for every slot, vmapped.
+
+    tau goes through the `ops.l1_distance` kernel call-site once per
+    slot (unrolled — Pallas kernels carry no batching rule, and Q is
+    small); the deviation assignment with each slot's (k, eps, delta)
+    is vmapped over the query axis.
+    """
+    counts, n = state.counts, state.n
+    tau = jnp.stack(
+        [ops.l1_distance(counts, state.q_hat[i]) for i in range(spec.max_queries)]
+    )
+
+    def one(tau_q, k, eps, delta, occupied):
+        d = dev.assign_deviations_dynamic(
+            tau_q, n, k=k, eps=eps, delta=delta, v_x=spec.v_x, criterion=spec.criterion
+        )
+        active = d.active & occupied
+        return (
+            d.eps_i,
+            d.log_delta_i,
+            jnp.where(occupied, d.delta_upper, 0.0),
+            active,
+            pack_active_mask(active),
+            d.in_top_k & occupied,
+        )
+
+    eps_i, log_delta_i, delta_upper, active, words, in_top_k = jax.vmap(one)(
+        tau, state.k, state.eps, state.delta, state.occupied
+    )
+    return state._replace(
+        tau=tau,
+        eps_i=eps_i,
+        log_delta_i=log_delta_i,
+        delta_upper=delta_upper,
+        active=active,
+        active_words=words,
+        union_words=_or_reduce(words),
+        in_top_k=in_top_k,
+        round_idx=state.round_idx + 1,
+    )
+
+
+def run_round(
+    state: MultiQueryState, z_idx: jax.Array, x_idx: jax.Array, *, spec: MultiQuerySpec
+) -> MultiQueryState:
+    """Shared ingest + vmapped stats — one full multi-query round."""
+    return stats_step(ingest(state, z_idx, x_idx, spec=spec), spec=spec)
+
+
+def slot_state(state: MultiQueryState, slot: int) -> HistSimState:
+    """Single-query `HistSimState` view of one slot (counts/n are shared)."""
+    return HistSimState(
+        counts=state.counts,
+        n=state.n,
+        q_hat=state.q_hat[slot],
+        tau=state.tau[slot],
+        eps_i=state.eps_i[slot],
+        log_delta_i=state.log_delta_i[slot],
+        delta_upper=state.delta_upper[slot],
+        active=state.active[slot],
+        active_words=state.active_words[slot],
+        in_top_k=state.in_top_k[slot],
+        round_idx=state.round_idx,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The shared window-marking / ingest loop
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Ticket:
+    """Host-side bookkeeping for one live query slot."""
+
+    qid: int
+    slot: int
+    k: int
+    eps: float
+    delta: float
+    admit_time: float
+    admit_rounds: int
+    admit_passes: int
+    admit_blocks_read: int
+    admit_blocks_considered: int
+    admit_tuples_read: int
+
+
+@dataclasses.dataclass
+class QueryOutcome:
+    """Per-query result produced at retirement."""
+
+    qid: int
+    ids: np.ndarray  # (k,) matching candidate ids, closest first
+    state: HistSimState  # single-query view snapshot at retirement
+    delta_upper: float
+    exact: bool  # the answer rests on a complete read of the data
+    terminated: bool  # the statistical rule delta_upper < delta fired
+    rounds: int  # windows processed while this query was live
+    passes: int
+    blocks_read: int
+    blocks_considered: int
+    tuples_read: int  # tuples ingested while this query was live
+    wall_time_s: float
+
+
+class SharedCountsScheduler:
+    """The FastMatch execution loop over a shared counts matrix.
+
+    Owns the dataset-side sampling state — the cyclic visit order, the
+    global without-replacement ``read_mask``, and pass structure — plus
+    the `MultiQueryState`. Queries enter via `admit` (any time, into a
+    free slot), leave via `retire` (collected in `outcomes`), and `pump`
+    drives windows until every live query resolves:
+
+      mark   — AnyActive over the UNION active words (one kernel call)
+      ingest — marked blocks into the shared counts (one kernel call)
+      stats  — vmapped per-query deviation assignment + bounds
+
+    A pass visits every not-yet-read block in cyclic order; blocks
+    skipped by AnyActive stay eligible for later passes (a newly
+    admitted query can re-activate them). If a whole pass reads nothing
+    while queries remain live, the scheduler completes exactly — reads
+    the remainder so empirical counts equal the true ones — and retires
+    the stragglers with ``exact=True``. A `max_rounds` budget instead
+    stops the loop with live queries left best-effort (the caller
+    retires them with ``exact=False``).
+    """
+
+    def __init__(
+        self,
+        dataset: BlockedDataset,
+        spec: MultiQuerySpec,
+        *,
+        policy: str = "anyactive",
+        window: int = 512,
+        seed: int = 0,
+        start_block: Optional[int] = None,
+    ):
+        if spec.v_z != dataset.v_z or spec.v_x != dataset.v_x:
+            raise ValueError("spec/dataset dimension mismatch")
+        if policy not in ("anyactive", "scan"):
+            raise ValueError(f"unknown policy {policy!r}")
+        self.dataset = dataset
+        self.spec = spec
+        self.policy = policy
+        nb = dataset.num_blocks
+        self.window = max(1, min(window, nb))
+
+        rng = np.random.default_rng(seed)
+        start = start_block if start_block is not None else int(rng.integers(nb))
+        self.order = np.roll(np.arange(nb), -start)  # cyclic visit order
+        self.read_mask = np.zeros(nb, dtype=bool)
+
+        self.z_blocks = jnp.asarray(dataset.z_blocks)
+        self.x_blocks = jnp.asarray(dataset.x_blocks)
+        self.bitmap = jnp.asarray(dataset.bitmap)
+        self.tuples_per_block = (dataset.z_blocks >= 0).sum(axis=1)
+
+        self.state = init_multi_state(spec)
+        self.tickets: Dict[int, _Ticket] = {}  # slot -> ticket
+        self.outcomes: Dict[int, QueryOutcome] = {}  # qid -> outcome
+        self._next_qid = 0
+
+        # global counters (monotone; per-query numbers are deltas vs admit)
+        self.rounds = 0
+        self.passes = 0
+        self.blocks_read = 0
+        self.blocks_considered = 0
+        self.tuples_read = 0
+        self.budget_exhausted = False
+
+    # -- admission / retirement -------------------------------------------
+
+    @property
+    def free_slots(self) -> list:
+        return [s for s in range(self.spec.max_queries) if s not in self.tickets]
+
+    @property
+    def num_live(self) -> int:
+        return len(self.tickets)
+
+    def admit(self, target: np.ndarray, *, k: int, eps: float, delta: float) -> int:
+        """Place a query into a free slot; returns its qid.
+
+        The immediate `stats_step` makes the query see the accumulated
+        shared counts — with its full shared ``n_i`` — before the next
+        window is marked, so a late query never starts from zero.
+        """
+        free = self.free_slots
+        if not free:
+            raise RuntimeError("no free query slot; retire a query first")
+        if not (0 < k <= self.spec.v_z):
+            raise ValueError(f"need 0 < k <= V_Z, got k={k}")
+        slot = free[0]
+        target = np.asarray(target, np.float64).ravel()
+        if target.shape != (self.spec.v_x,):
+            raise ValueError(f"target must have shape ({self.spec.v_x},)")
+        q_hat = (target / max(target.sum(), 1e-30)).astype(np.float32)
+        self.state = admit_slot(
+            self.state,
+            jnp.asarray(slot, jnp.int32),
+            jnp.asarray(q_hat),
+            jnp.asarray(k, jnp.int32),
+            jnp.asarray(eps, jnp.float32),
+            jnp.asarray(delta, jnp.float32),
+            spec=self.spec,
+        )
+        self.state = stats_step(self.state, spec=self.spec)
+        qid = self._next_qid
+        self._next_qid += 1
+        self.tickets[slot] = _Ticket(
+            qid=qid,
+            slot=slot,
+            k=int(k),
+            eps=float(eps),
+            delta=float(delta),
+            admit_time=time.perf_counter(),
+            admit_rounds=self.rounds,
+            admit_passes=self.passes,
+            admit_blocks_read=self.blocks_read,
+            admit_blocks_considered=self.blocks_considered,
+            admit_tuples_read=self.tuples_read,
+        )
+        return qid
+
+    def retire(self, slot: int, *, exact: bool, terminated: bool) -> QueryOutcome:
+        """Snapshot a slot's answer, free the slot, record the outcome.
+
+        ``exact`` is forced True whenever the whole dataset has been
+        read — the answer then rests on a complete read no matter why
+        the query is retiring (MatchResult.exact's contract).
+        """
+        t = self.tickets.pop(slot)
+        exact = exact or bool(self.read_mask.all())
+        view = slot_state(self.state, slot)
+        ids = np.asarray(histsim.top_k_ids(view, t.k))
+        outcome = QueryOutcome(
+            qid=t.qid,
+            ids=ids,
+            state=view,
+            delta_upper=float(view.delta_upper),
+            exact=exact,
+            terminated=terminated,
+            rounds=self.rounds - t.admit_rounds,
+            passes=max(self.passes - t.admit_passes, 1 if self.passes else 0),
+            blocks_read=self.blocks_read - t.admit_blocks_read,
+            blocks_considered=self.blocks_considered - t.admit_blocks_considered,
+            tuples_read=self.tuples_read - t.admit_tuples_read,
+            wall_time_s=time.perf_counter() - t.admit_time,
+        )
+        self.state = clear_slot(self.state, jnp.asarray(slot, jnp.int32), spec=self.spec)
+        self.outcomes[t.qid] = outcome
+        return outcome
+
+    def _poll_terminated(self) -> None:
+        """Retire every live query whose termination bound has fired."""
+        if not self.tickets:
+            return
+        du = np.asarray(self.state.delta_upper)
+        for slot in list(self.tickets):
+            if du[slot] < self.tickets[slot].delta:
+                self.retire(slot, exact=False, terminated=True)
+
+    # -- the loop ----------------------------------------------------------
+
+    def run_window(self, win: np.ndarray) -> int:
+        """Mark one lookahead window against the union active set and
+        ingest the marked blocks. Returns the number of blocks read."""
+        win_j = jnp.asarray(win, jnp.int32)
+        self.blocks_considered += len(win)
+        marks = mark_window(self.bitmap[win_j], self.state.union_words, policy=self.policy)
+        marks_np = np.asarray(marks)
+        n_marked = int(marks_np.sum())
+        if n_marked:
+            zw = jnp.where(marks[:, None], self.z_blocks[win_j], jnp.int32(-1))
+            xw = jnp.where(marks[:, None], self.x_blocks[win_j], jnp.int32(-1))
+            self.state = run_round(self.state, zw.reshape(-1), xw.reshape(-1), spec=self.spec)
+            read = win[marks_np]
+            self.read_mask[read] = True
+            self.blocks_read += n_marked
+            self.tuples_read += int(self.tuples_per_block[read].sum())
+        self.rounds += 1
+        return n_marked
+
+    def complete_remaining(self) -> None:
+        """Exact completion: read every unread block into the shared counts.
+
+        Afterwards the empirical counts equal the true ones, so every
+        answer drawn from them is exact and the guarantees hold
+        deterministically.
+        """
+        remaining = np.where(~self.read_mask)[0]
+        if remaining.size == 0:
+            return
+        for s in range(0, remaining.size, self.window):
+            chunk = remaining[s : s + self.window]
+            cj = jnp.asarray(chunk, jnp.int32)
+            self.state = ingest(
+                self.state,
+                self.z_blocks[cj].reshape(-1),
+                self.x_blocks[cj].reshape(-1),
+                spec=self.spec,
+            )
+            self.blocks_read += len(chunk)
+            self.tuples_read += int(self.tuples_per_block[chunk].sum())
+        self.read_mask[remaining] = True
+        self.state = stats_step(self.state, spec=self.spec)
+
+    def pump(
+        self,
+        *,
+        max_rounds: int = 1_000_000,
+        max_passes: int = 4,
+        on_round: Optional[Callable[["SharedCountsScheduler"], None]] = None,
+    ) -> None:
+        """Drive windows until every live query resolves.
+
+        on_round: called after each window (post-retirement) — the
+        serving frontend uses it to admit pending queries into slots
+        freed mid-stream.
+
+        max_rounds/max_passes budget THIS call, not the scheduler's
+        lifetime: a long-lived server calling pump per batch gets the
+        full budget every time.
+        """
+        rounds0, passes0 = self.rounds, self.passes
+        self.budget_exhausted = False
+        # A late-admitted query may already terminate on the accumulated
+        # shared counts, before any new window is read.
+        self._poll_terminated()
+        while self.tickets and self.passes - passes0 < max_passes:
+            pass_order = self.order[~self.read_mask[self.order]]
+            if pass_order.size == 0:
+                break
+            self.passes += 1
+            pass_start_rounds = self.rounds
+            read_this_pass = 0
+            pos = 0
+            while pos < pass_order.size and self.tickets:
+                win = pass_order[pos : pos + self.window]
+                pos += len(win)
+                read_this_pass += self.run_window(win)
+                self._poll_terminated()
+                if on_round is not None:
+                    on_round(self)
+                if self.rounds - rounds0 >= max_rounds:
+                    # Budget cut: live queries stay best-effort (the
+                    # caller decides; no silent exact completion).
+                    self.budget_exhausted = True
+                    return
+            if read_this_pass == 0:
+                # "No unread block can help" was judged against the
+                # active sets live DURING the pass — a query admitted in
+                # its final windows deserves one fresh pass of its own
+                # before we give up on sampling.
+                fresh = any(
+                    t.admit_rounds >= pass_start_rounds for t in self.tickets.values()
+                )
+                if not fresh:
+                    break
+        if self.tickets:
+            # Exact fallback for the stragglers.
+            self.complete_remaining()
+            du = np.asarray(self.state.delta_upper)
+            for slot in list(self.tickets):
+                fired = bool(du[slot] < self.tickets[slot].delta)
+                self.retire(slot, exact=True, terminated=fired)
+            if on_round is not None:
+                on_round(self)

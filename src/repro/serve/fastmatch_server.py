@@ -1,0 +1,249 @@
+"""FastMatch query server: N concurrent matching queries, one I/O stream.
+
+`MatchServer` is the interactive frontend the paper positions FastMatch
+as ("identify the top-k closest histograms" for a user-specified
+target), generalized to a query population: a request queue feeding a
+fixed pool of ``max_queries`` slots (padded for stable jit shapes) over
+one `SharedCountsScheduler`. Mechanics:
+
+  admission  — pending requests enter free slots at every round
+               boundary, mid-stream; a newly admitted query starts from
+               the already-accumulated shared counts (with the full
+               shared ``n_i`` — sampling was target-independent), which
+               is where the serving speedup over one-engine-per-query
+               comes from
+  serving    — one AnyActive marking per window against the UNION of
+               per-query active sets, one shared ingest, one vmapped
+               stats step for all live queries
+  retirement — a query leaves its slot the moment its own
+               ``delta_upper < delta`` bound fires and is returned as a
+               per-query `MatchResult`; the freed slot is refilled from
+               the queue
+  cache      — the shared counts matrix and the global read_mask
+               persist across the server's lifetime: once the sampled
+               prefix covers a later query's needs it terminates
+               without any new I/O, and after an exact completion every
+               subsequent query is answered instantly and exactly
+
+Per-query `MatchResult` counters (blocks/tuples/rounds) measure what
+was read WHILE that query was live — the amortized per-query I/O the
+`benchmarks/serve_throughput.py` benchmark compares against running
+`run_engine` once per query.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, Optional
+
+import numpy as np
+
+from repro.core.engine import MatchResult
+from repro.core.multiquery import MultiQuerySpec, QueryOutcome, SharedCountsScheduler
+from repro.data.layout import BlockedDataset
+
+__all__ = ["MatchQuery", "MatchServer"]
+
+
+@dataclasses.dataclass
+class MatchQuery:
+    """One queued matching request (Problem 1 instance)."""
+
+    rid: int
+    target: np.ndarray  # (V_X,) unnormalized or normalized target histogram
+    k: int
+    eps: float
+    delta: float
+    submit_time: float
+
+
+class MatchServer:
+    """Serve top-k histogram-matching queries over one shared sample stream."""
+
+    def __init__(
+        self,
+        dataset: BlockedDataset,
+        *,
+        max_queries: int = 8,
+        criterion: str = "histsim",
+        policy: str = "anyactive",
+        lookahead: int = 512,
+        seed: int = 0,
+        start_block: Optional[int] = None,
+        max_passes: int = 64,
+    ):
+        self.spec = MultiQuerySpec(
+            v_z=dataset.v_z,
+            v_x=dataset.v_x,
+            max_queries=max_queries,
+            criterion=criterion,
+        )
+        self.scheduler = SharedCountsScheduler(
+            dataset,
+            self.spec,
+            policy=policy,
+            window=lookahead,
+            seed=seed,
+            start_block=start_block,
+        )
+        self.max_passes = max_passes
+        self.pending: Deque[MatchQuery] = deque()
+        self.results: Dict[int, MatchResult] = {}
+        self._rid_of_qid: Dict[int, int] = {}
+        self._submit_time: Dict[int, float] = {}
+        self._next_rid = 0
+        # step()'s pass cursor (None = start a fresh pass next step)
+        self._pass_order: Optional[np.ndarray] = None
+        self._pass_pos = 0
+        self._pass_read = 0
+        self._pass_start_rounds = 0
+
+    # -- request queue -----------------------------------------------------
+
+    def submit(self, target: np.ndarray, *, k: int, eps: float = 0.06, delta: float = 0.01) -> int:
+        """Queue a query; returns a request id resolved in `results`.
+
+        Validates here, at the caller's call site — a malformed request
+        must not sit in the queue and blow up mid-drain.
+        """
+        target = np.asarray(target, np.float64).ravel()
+        if target.shape != (self.spec.v_x,):
+            raise ValueError(f"target must have shape ({self.spec.v_x},), got {target.shape}")
+        if not (0 < k <= self.spec.v_z):
+            raise ValueError(f"need 0 < k <= V_Z={self.spec.v_z}, got k={k}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.pending.append(
+            MatchQuery(
+                rid=rid,
+                target=target,
+                k=k,
+                eps=eps,
+                delta=delta,
+                submit_time=time.perf_counter(),
+            )
+        )
+        return rid
+
+    def _admit_free(self, _sched: Optional[SharedCountsScheduler] = None) -> None:
+        """Fill free slots from the queue (the scheduler's on_round hook)."""
+        while self.pending and self.scheduler.free_slots:
+            q = self.pending.popleft()
+            qid = self.scheduler.admit(q.target, k=q.k, eps=q.eps, delta=q.delta)
+            self._rid_of_qid[qid] = q.rid
+            self._submit_time[q.rid] = q.submit_time
+        self._collect()
+
+    def _collect(self) -> None:
+        """Convert freshly retired scheduler outcomes into MatchResults."""
+        for qid, out in list(self.scheduler.outcomes.items()):
+            rid = self._rid_of_qid.pop(qid, None)
+            if rid is None:
+                continue  # already collected
+            del self.scheduler.outcomes[qid]
+            self.results[rid] = self._to_result(rid, out)
+
+    def _to_result(self, rid: int, out: QueryOutcome) -> MatchResult:
+        wall = time.perf_counter() - self._submit_time.pop(rid)
+        return MatchResult(
+            ids=out.ids,
+            state=out.state,
+            rounds=out.rounds,
+            blocks_read=out.blocks_read,
+            blocks_considered=out.blocks_considered,
+            tuples_read=out.tuples_read,
+            wall_time_s=wall,
+            exact=out.exact,
+            passes=out.passes,
+        )
+
+    # -- serving loop ------------------------------------------------------
+
+    def step(self) -> None:
+        """Admit + one window + retire: the unit of incremental serving.
+
+        Keeps the same cyclic pass structure as `pump`: a pass visits
+        every currently-unread block window by window; when a whole
+        pass reads nothing for the remaining live queries (or no
+        unread block is left), they are completed exactly instead of
+        re-marking the same window forever.
+        """
+        self._admit_free()
+        sched = self.scheduler
+        if not sched.tickets:
+            return
+        if self._pass_order is None or self._pass_pos >= len(self._pass_order):
+            unread = sched.order[~sched.read_mask[sched.order]]
+            # A zero-read pass only proves sampling is exhausted for the
+            # queries that were live during it — a query admitted in its
+            # final windows gets a fresh pass before the exact fallback.
+            fresh = any(
+                t.admit_rounds >= self._pass_start_rounds
+                for t in sched.tickets.values()
+            )
+            stalled = self._pass_order is not None and self._pass_read == 0 and not fresh
+            if unread.size == 0 or stalled:
+                # Counts complete (or sampling can no longer help) —
+                # finish exactly; every live answer becomes exact.
+                sched.complete_remaining()
+                du = np.asarray(sched.state.delta_upper)
+                for slot in list(sched.tickets):
+                    fired = bool(du[slot] < sched.tickets[slot].delta)
+                    sched.retire(slot, exact=True, terminated=fired)
+                self._pass_order = None
+                self._collect()
+                return
+            self._pass_order = unread
+            self._pass_pos = 0
+            self._pass_read = 0
+            self._pass_start_rounds = sched.rounds
+            sched.passes += 1
+        win = self._pass_order[self._pass_pos : self._pass_pos + sched.window]
+        self._pass_pos += len(win)
+        # Guard against blocks read since this pass was snapshotted
+        # (e.g. a run_until_idle interleaved between steps).
+        win = win[~sched.read_mask[win]]
+        if win.size:
+            self._pass_read += sched.run_window(win)
+            sched._poll_terminated()
+        self._collect()
+
+    def run_until_idle(self, *, max_rounds: int = 1_000_000) -> Dict[int, MatchResult]:
+        """Drain the queue: serve until every submitted query has a result."""
+        self._pass_order = None  # invalidate step()'s cursor
+        while self.pending or self.scheduler.tickets:
+            self._admit_free()
+            if not self.scheduler.tickets:
+                break  # nothing admissible (no pending either, per loop cond)
+            self.scheduler.pump(
+                max_rounds=max_rounds,
+                max_passes=self.max_passes,
+                on_round=self._admit_free,
+            )
+            if self.scheduler.budget_exhausted:
+                # A query admitted in the budget's final round may already
+                # satisfy its bound from the warm cache — poll before
+                # stamping anything best-effort.
+                self.scheduler._poll_terminated()
+                for slot in list(self.scheduler.tickets):
+                    self.scheduler.retire(slot, exact=False, terminated=False)
+            self._collect()
+        return dict(self.results)
+
+    # -- observability -----------------------------------------------------
+
+    @property
+    def metrics(self) -> Dict[str, float]:
+        sched = self.scheduler
+        done = len(self.results)
+        return {
+            "queries_done": done,
+            "queries_pending": len(self.pending) + sched.num_live,
+            "total_blocks_read": sched.blocks_read,
+            "total_tuples_read": sched.tuples_read,
+            "total_rounds": sched.rounds,
+            "fraction_read": float(sched.read_mask.mean()) if sched.read_mask.size else 0.0,
+            "tuples_per_query": sched.tuples_read / done if done else float("nan"),
+        }

@@ -5,6 +5,7 @@ import math
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need it; skip on minimal installs
 from hypothesis import given, settings, strategies as st
 
 from repro.core import bounds

@@ -93,6 +93,30 @@ class TestEngineMechanics:
         assert res.exact
         assert sorted(res.ids.tolist()) == sorted(ds.true_top_k.tolist())
 
+    def test_budget_cut_is_best_effort_not_exact(self, dataset):
+        """Regression: a max_rounds budget cut must return the sampled
+        best-effort answer with exact=False — the seed engine silently
+        completed a full read and stamped exact=True regardless."""
+        spec, ds, blocked = dataset
+        params = HistSimParams(v_z=spec.v_z, v_x=spec.v_x, **PARAMS)
+        res = run_engine(
+            blocked, ds.target, params,
+            EngineConfig(variant="fastmatch", seed=0, max_rounds=1),
+        )
+        assert res.rounds == 1
+        assert not res.exact  # budget cut != complete read
+        assert res.blocks_read < blocked.num_blocks  # no silent full scan
+
+    def test_exact_flag_set_only_on_complete_read(self, dataset):
+        """exact=True must mean the whole dataset was read; a normally
+        terminated sampling run reports exact=False."""
+        spec, ds, blocked = dataset
+        params = HistSimParams(v_z=spec.v_z, v_x=spec.v_x, **PARAMS)
+        res = run_engine(blocked, ds.target, params, EngineConfig(variant="fastmatch", seed=6))
+        assert not res.exact
+        assert res.blocks_read < blocked.num_blocks
+        assert res.delta_upper < params.delta
+
     def test_start_position_invariance_of_correctness(self, dataset):
         spec, ds, blocked = dataset
         params = HistSimParams(v_z=spec.v_z, v_x=spec.v_x, **PARAMS)

@@ -1,0 +1,239 @@
+"""Multi-query serving subsystem: shared counts, vmapped stats, MatchServer.
+
+The load-bearing property: a `MatchServer` running N queries over one
+shared counts matrix must return the same top-k (and honor the same
+delta_upper guarantee) as N independent `run_engine` calls, while
+reading fewer tuples in total.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import deviations as dev
+from repro.core import multiquery as mq
+from repro.core.bitmap import unpack_mask
+from repro.core.engine import EngineConfig, run_engine
+from repro.core.histsim import HistSimParams
+from repro.data.layout import block_layout
+from repro.data.synth import SynthSpec, make_dataset, perturb_distribution
+
+K, EPS, DELTA = 5, 0.08, 0.05
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    spec = SynthSpec(
+        v_z=64, v_x=16, num_tuples=1_200_000, k=K, n_close=5,
+        close_distance=0.02, far_distance=0.3, zipf_a=0.9, seed=5,
+    )
+    ds = make_dataset(spec)
+    blocked = block_layout(ds.z, ds.x, v_z=spec.v_z, v_x=spec.v_x, block_size=512, seed=5)
+    return spec, ds, blocked
+
+
+@pytest.fixture(scope="module")
+def targets(dataset):
+    _, ds, _ = dataset
+    rng = np.random.default_rng(9)
+    return [ds.target] + [perturb_distribution(ds.target, d, rng) for d in (0.01, 0.03, 0.05)]
+
+
+class TestDynamicDeviations:
+    def test_matches_static_assignment_bitwise(self):
+        rng = np.random.default_rng(0)
+        for v_z, v_x, k in [(37, 16, 5), (8, 4, 8), (100, 24, 1)]:
+            tau = jnp.asarray(rng.random(v_z), jnp.float32)
+            n = jnp.asarray(rng.integers(0, 5000, v_z), jnp.float32)
+            a = dev.assign_deviations(tau, n, k=k, eps=0.08, delta=0.05, v_x=v_x)
+            b = dev.assign_deviations_dynamic(
+                tau, n, k=jnp.int32(k), eps=jnp.float32(0.08),
+                delta=jnp.float32(0.05), v_x=v_x,
+            )
+            for f in a._fields:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(a, f)), np.asarray(getattr(b, f)), err_msg=f
+                )
+
+    def test_matches_slowmatch_criterion(self):
+        rng = np.random.default_rng(1)
+        tau = jnp.asarray(rng.random(40), jnp.float32)
+        n = jnp.asarray(rng.integers(1, 3000, 40), jnp.float32)
+        a = dev.slowmatch_deviations(tau, n, k=6, eps=0.1, delta=0.02, v_x=12)
+        b = dev.assign_deviations_dynamic(
+            tau, n, k=jnp.int32(6), eps=jnp.float32(0.1),
+            delta=jnp.float32(0.02), v_x=12, criterion="slowmatch",
+        )
+        np.testing.assert_array_equal(np.asarray(a.delta_upper), np.asarray(b.delta_upper))
+        np.testing.assert_array_equal(np.asarray(a.active), np.asarray(b.active))
+
+
+class TestMultiQueryState:
+    def test_union_is_or_of_occupied_slots(self, dataset, targets):
+        spec_s, ds, blocked = dataset
+        spec = mq.MultiQuerySpec(v_z=spec_s.v_z, v_x=spec_s.v_x, max_queries=4)
+        sched = mq.SharedCountsScheduler(blocked, spec, window=64, seed=0)
+        for t in targets[:3]:
+            sched.admit(t, k=K, eps=EPS, delta=DELTA)
+        # read a little so active sets differentiate
+        sched.run_window(sched.order[: sched.window])
+        st = sched.state
+        expect = np.zeros(spec_s.v_z, bool)
+        for slot in range(4):
+            expect |= np.asarray(st.active[slot])
+        got = np.asarray(unpack_mask(st.union_words, spec_s.v_z))
+        np.testing.assert_array_equal(got, expect)
+        # empty slot contributes nothing
+        assert not np.asarray(st.active[3]).any()
+        assert float(st.delta_upper[3]) == 0.0
+
+    def test_ingest_is_shared_and_target_independent(self, dataset, targets):
+        spec_s, ds, blocked = dataset
+        spec = mq.MultiQuerySpec(v_z=spec_s.v_z, v_x=spec_s.v_x, max_queries=2)
+        sched = mq.SharedCountsScheduler(blocked, spec, window=32, seed=1)
+        sched.admit(targets[0], k=K, eps=EPS, delta=DELTA)
+        sched.admit(targets[1], k=K, eps=EPS, delta=DELTA)
+        sched.run_window(sched.order[:32])
+        counts = np.asarray(sched.state.counts)
+        # counts equal the plain histogram of the blocks read — no
+        # per-query copies, no target leakage
+        read = sched.order[:32][np.asarray(sched.read_mask[sched.order[:32]])]
+        z = blocked.z_blocks[read].reshape(-1)
+        x = blocked.x_blocks[read].reshape(-1)
+        ok = z >= 0
+        expect = np.zeros((spec_s.v_z, spec_s.v_x))
+        np.add.at(expect, (z[ok], x[ok]), 1.0)
+        np.testing.assert_array_equal(counts, expect)
+        np.testing.assert_array_equal(np.asarray(sched.state.n), expect.sum(axis=1))
+
+    def test_slot_state_view_matches_slot(self, dataset, targets):
+        spec_s, _, blocked = dataset
+        spec = mq.MultiQuerySpec(v_z=spec_s.v_z, v_x=spec_s.v_x, max_queries=3)
+        sched = mq.SharedCountsScheduler(blocked, spec, window=32, seed=2)
+        sched.admit(targets[0], k=K, eps=EPS, delta=DELTA)
+        sched.admit(targets[2], k=3, eps=0.1, delta=0.02)
+        view = mq.slot_state(sched.state, 1)
+        np.testing.assert_array_equal(np.asarray(view.tau), np.asarray(sched.state.tau[1]))
+        assert view.counts is sched.state.counts  # genuinely shared
+
+
+class TestServerEquivalence:
+    def test_matches_independent_engines(self, dataset, targets):
+        """Tentpole acceptance: same top-k as N run_engine calls, same
+        delta guarantee, fewer total tuples read."""
+        from repro.serve.fastmatch_server import MatchServer
+
+        spec_s, ds, blocked = dataset
+        params = HistSimParams(v_z=spec_s.v_z, v_x=spec_s.v_x, k=K, eps=EPS, delta=DELTA)
+        solo = [
+            run_engine(blocked, t, params, EngineConfig(variant="fastmatch", seed=100 + i))
+            for i, t in enumerate(targets)
+        ]
+        server = MatchServer(blocked, max_queries=len(targets), lookahead=512, seed=100)
+        rids = [server.submit(t, k=K, eps=EPS, delta=DELTA) for t in targets]
+        results = server.run_until_idle()
+
+        total_shared = server.metrics["total_tuples_read"]
+        total_solo = sum(r.tuples_read for r in solo)
+        assert total_shared < total_solo
+
+        for i, rid in enumerate(rids):
+            r = results[rid]
+            assert sorted(r.ids.tolist()) == sorted(solo[i].ids.tolist()), i
+            if not r.exact:
+                assert r.delta_upper < DELTA
+
+    def test_more_queries_than_slots_queue_up(self, dataset, targets):
+        from repro.serve.fastmatch_server import MatchServer
+
+        spec_s, ds, blocked = dataset
+        server = MatchServer(blocked, max_queries=2, lookahead=256, seed=3)
+        rids = [server.submit(t, k=K, eps=EPS, delta=DELTA) for t in targets]
+        results = server.run_until_idle()
+        assert set(results) == set(rids)
+        for rid in rids:
+            assert len(results[rid].ids) == K
+
+    def test_late_admission_starts_from_shared_counts(self, dataset, targets):
+        """A query admitted on a warm server must use the accumulated
+        counts (full shared n_i) — costing (much) less I/O than solo."""
+        from repro.serve.fastmatch_server import MatchServer
+
+        spec_s, ds, blocked = dataset
+        params = HistSimParams(v_z=spec_s.v_z, v_x=spec_s.v_x, k=K, eps=EPS, delta=DELTA)
+        solo = run_engine(
+            blocked, targets[1], params, EngineConfig(variant="fastmatch", seed=7)
+        )
+
+        server = MatchServer(blocked, max_queries=2, lookahead=512, seed=7)
+        first = server.submit(targets[0], k=K, eps=EPS, delta=DELTA)
+        server.run_until_idle()
+        warm_tuples = server.metrics["total_tuples_read"]
+        assert warm_tuples > 0
+
+        late = server.submit(targets[1], k=K, eps=EPS, delta=DELTA)
+        r = server.run_until_idle()[late]
+        new_io = server.metrics["total_tuples_read"] - warm_tuples
+        assert new_io < solo.tuples_read
+        assert sorted(r.ids.tolist()) == sorted(solo.ids.tolist())
+        if not r.exact:
+            assert r.delta_upper < DELTA
+
+    def test_step_driven_serving_terminates(self, dataset, targets):
+        """step() — the incremental serving unit — must make progress
+        every pass and resolve queries without run_until_idle."""
+        from repro.serve.fastmatch_server import MatchServer
+
+        spec_s, ds, blocked = dataset
+        server = MatchServer(blocked, max_queries=2, lookahead=128, seed=0)
+        rids = [server.submit(t, k=K, eps=EPS, delta=DELTA) for t in targets[:2]]
+        steps = 0
+        while not all(rid in server.results for rid in rids):
+            server.step()
+            steps += 1
+            assert steps < 10_000, "step() made no progress"
+        for rid in rids:
+            r = server.results[rid]
+            assert len(r.ids) == K
+            assert r.exact or r.delta_upper < DELTA
+
+    def test_step_stalled_pass_falls_back_to_exact(self):
+        """A pass that reads nothing must trigger the exact completion
+        under step(), not an infinite re-marking loop (regression)."""
+        from repro.serve.fastmatch_server import MatchServer
+
+        spec = SynthSpec(v_z=30, v_x=8, num_tuples=40_000, k=3, n_close=3, seed=11)
+        ds = make_dataset(spec)
+        blocked = block_layout(ds.z, ds.x, v_z=spec.v_z, v_x=spec.v_x, block_size=256, seed=11)
+        server = MatchServer(blocked, max_queries=1, lookahead=64, seed=0)
+        rid = server.submit(ds.target, k=3, eps=0.02, delta=1e-6)  # unreachable bound
+        steps = 0
+        while rid not in server.results:
+            server.step()
+            steps += 1
+            assert steps < 10_000, "step() livelocked on a zero-read pass"
+        assert server.results[rid].exact
+
+    def test_exhausted_dataset_serves_exactly(self, targets):
+        """Once every block is read, new queries resolve instantly and
+        exactly from the cached counts."""
+        from repro.serve.fastmatch_server import MatchServer
+
+        spec = SynthSpec(v_z=30, v_x=8, num_tuples=20_000, k=3, n_close=3, seed=11)
+        ds = make_dataset(spec)
+        blocked = block_layout(ds.z, ds.x, v_z=spec.v_z, v_x=spec.v_x, block_size=256, seed=11)
+        server = MatchServer(blocked, max_queries=2, seed=0)
+        first = server.submit(ds.target, k=3, eps=0.02, delta=0.001)
+        r1 = server.run_until_idle()[first]
+        assert r1.exact  # tiny dataset forces the complete read
+        before = server.metrics["total_tuples_read"]
+        late = server.submit(ds.target, k=3, eps=0.02, delta=0.001)
+        r2 = server.run_until_idle()[late]
+        assert r2.exact
+        assert server.metrics["total_tuples_read"] == before  # zero new I/O
+        assert sorted(r2.ids.tolist()) == sorted(ds.true_top_k.tolist())
+        # exact contract regression: even when the statistical bound
+        # fires (loose delta), an answer over fully-read data is exact
+        loose = server.submit(ds.target, k=3, eps=0.2, delta=0.5)
+        r3 = server.run_until_idle()[loose]
+        assert r3.exact
