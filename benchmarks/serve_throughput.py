@@ -1,22 +1,38 @@
-"""Serving throughput: `MatchServer` vs one `run_engine` per query.
+"""Serving throughput: `MatchServer` vs one `run_engine` per query, and
+the device-resident loop's host-sync amortization.
 
-The acceptance measurement for the multi-query serving subsystem: N = 8
-concurrent queries over the same dataset must read FEWER total tuples
-through the shared-counts scheduler than 8 sequential `run_engine`
-calls, with identical top-k accuracy against planted ground truth.
+Two acceptance measurements for the serving subsystem:
+
+  1. I/O amortization — N = 8 concurrent queries over the same dataset
+     must read FEWER total tuples through the shared-counts scheduler
+     than 8 sequential `run_engine` calls, with identical top-k accuracy
+     against planted ground truth.
+  2. Host-sync amortization — the fused device-resident round at
+     ``poll_every=8`` must perform >= 4x fewer device<->host transfers
+     per 64 windows than the per-window host-stepped cadence
+     (``poll_every=1``, what the PR-1 loop did after every window), at
+     identical top-k recall. The shared run uses `PrefetchSource` so
+     window gathering overlaps the round.
 
 Reported rows (benchmarks/run.py CSV schema):
 
-  serve_solo_total      — us per solo batch, derived = total tuples read
-  serve_shared_total    — us per served batch, derived = total tuples read
-  serve_io_amortization — derived = solo_tuples / shared_tuples (>1 = win)
-  serve_qps             — derived = queries/sec through the server
-  serve_accuracy        — derived = "shared_acc/solo_acc" top-k recall
-  serve_late_query      — derived = new tuples read for a warm-cache query
+  serve_solo_total        — us per solo batch, derived = total tuples read
+  serve_shared_total      — us per served batch, derived = total tuples read
+  serve_io_amortization   — derived = solo_tuples / shared_tuples (>1 = win)
+  serve_qps               — derived = queries/sec through the server
+  serve_accuracy          — derived = "shared_acc/solo_acc" top-k recall
+  serve_late_query        — derived = new tuples read for a warm-cache query
+  serve_syncs_per64_poll1 — derived = host syncs per 64 windows, poll_every=1
+  serve_syncs_per64_poll8 — derived = host syncs per 64 windows, poll_every=8
+  serve_sync_reduction    — derived = poll1/poll8 ratio (>=4 = pass)
+
+Set SERVE_BENCH_SMOKE=1 for the tiny CI configuration (same code path,
+~20x smaller dataset).
 """
 
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -26,17 +42,20 @@ from repro.core.engine import EngineConfig, run_engine
 from repro.core.histsim import HistSimParams
 from repro.data.layout import block_layout
 from repro.data.synth import SynthSpec, make_dataset, perturb_distribution
+from repro.io import InMemorySource, PrefetchSource
 from repro.serve.fastmatch_server import MatchServer
 
 N_QUERIES = 8
 K = 10
 DELTA = 0.01
 EPS = max(EPS_DEFAULT, 0.07)
+SMOKE = bool(int(os.environ.get("SERVE_BENCH_SMOKE", "0")))
 
 SPEC = SynthSpec(
-    v_z=161, v_x=24, num_tuples=6_000_000, k=K, n_close=10,
+    v_z=161, v_x=24, num_tuples=300_000 if SMOKE else 6_000_000, k=K, n_close=10,
     close_distance=0.02, far_distance=0.3, zipf_a=1.0, close_rank="head", seed=42,
 )
+LOOKAHEAD = 16 if SMOKE else 512  # smoke: enough windows to see cadence
 
 
 def _targets(ds, n: int):
@@ -57,34 +76,57 @@ def _recall(ids, truth: set) -> float:
     return len(set(ids.tolist()) & truth) / len(truth)
 
 
+def _serve(blocked, targets, *, poll_every: int, prefetch: bool):
+    """One full shared-serving run; returns (server, rids, results, wall,
+    loop_syncs_per64)."""
+    source = InMemorySource(blocked)
+    if prefetch:
+        source = PrefetchSource(source)
+    server = MatchServer(
+        source, max_queries=N_QUERIES, lookahead=LOOKAHEAD, seed=200,
+        poll_every=poll_every,
+    )
+    sched = server.scheduler
+    t0 = time.perf_counter()
+    rids = [server.submit(t, k=K, eps=EPS, delta=DELTA) for t in targets]
+    syncs0, rounds0 = sched.loop_syncs, sched.rounds
+    results = server.run_until_idle()
+    wall = time.perf_counter() - t0
+    rounds = max(sched.rounds - rounds0, 1)
+    syncs_per64 = (sched.loop_syncs - syncs0) / rounds * 64
+    return server, rids, results, wall, syncs_per64
+
+
 def run(rows: list) -> None:
     ds = make_dataset(SPEC)
     blocked = block_layout(ds.z, ds.x, v_z=SPEC.v_z, v_x=SPEC.v_x, block_size=512, seed=42)
     targets = _targets(ds, N_QUERIES)
     params = HistSimParams(v_z=SPEC.v_z, v_x=SPEC.v_x, k=K, eps=EPS, delta=DELTA)
 
-    # jit warmup for both paths (compile ingest/stats/marking once)
+    # jit warmup for both paths (compile the fused round / marking once)
     run_engine(blocked, targets[0], params,
-               EngineConfig(variant="fastmatch", seed=999, max_rounds=1))
-    warm = MatchServer(blocked, max_queries=N_QUERIES, lookahead=512, seed=999)
+               EngineConfig(variant="fastmatch", lookahead=LOOKAHEAD, seed=999, max_rounds=1))
+    warm = MatchServer(blocked, max_queries=N_QUERIES, lookahead=LOOKAHEAD, seed=999)
     warm.submit(targets[0], k=K, eps=EPS, delta=DELTA)
     warm.run_until_idle(max_rounds=1)
 
     # -- solo: one engine per query -------------------------------------
     t0 = time.perf_counter()
     solo = [
-        run_engine(blocked, t, params, EngineConfig(variant="fastmatch", seed=100 + i))
+        run_engine(blocked, t, params,
+                   EngineConfig(variant="fastmatch", lookahead=LOOKAHEAD, seed=100 + i))
         for i, t in enumerate(targets)
     ]
     solo_wall = time.perf_counter() - t0
     solo_tuples = sum(r.tuples_read for r in solo)
 
     # -- shared: one MatchServer, all queries concurrent ----------------
-    server = MatchServer(blocked, max_queries=N_QUERIES, lookahead=512, seed=200)
-    t0 = time.perf_counter()
-    rids = [server.submit(t, k=K, eps=EPS, delta=DELTA) for t in targets]
-    results = server.run_until_idle()
-    shared_wall = time.perf_counter() - t0
+    # poll_every=1 is the PR-1 host-stepped cadence (one poll per window);
+    # poll_every=8 + PrefetchSource is the device-resident configuration.
+    _, rids1, results1, _, syncs64_poll1 = _serve(
+        blocked, targets, poll_every=1, prefetch=False)
+    server, rids, results, shared_wall, syncs64_poll8 = _serve(
+        blocked, targets, poll_every=8, prefetch=True)
     shared_tuples = server.metrics["total_tuples_read"]
 
     truths = [_true_top_k(ds, t, K) for t in targets]
@@ -92,6 +134,10 @@ def run(rows: list) -> None:
     shared_acc = float(np.mean(
         [_recall(results[rid].ids, tr) for rid, tr in zip(rids, truths)]
     ))
+    poll1_acc = float(np.mean(
+        [_recall(results1[rid].ids, tr) for rid, tr in zip(rids1, truths)]
+    ))
+    sync_reduction = syncs64_poll1 / max(syncs64_poll8, 1e-9)
 
     # -- late query against the warm cache ------------------------------
     before = server.metrics["total_tuples_read"]
@@ -110,11 +156,22 @@ def run(rows: list) -> None:
     rows.append(dict(name="serve_accuracy", us_per_call=0.0,
                      derived=f"{shared_acc:.3f}/{solo_acc:.3f}"))
     rows.append(dict(name="serve_late_query", us_per_call=0.0, derived=int(late_tuples)))
+    rows.append(dict(name="serve_syncs_per64_poll1", us_per_call=0.0,
+                     derived=round(syncs64_poll1, 2)))
+    rows.append(dict(name="serve_syncs_per64_poll8", us_per_call=0.0,
+                     derived=round(syncs64_poll8, 2)))
+    rows.append(dict(name="serve_sync_reduction", us_per_call=0.0,
+                     derived=round(sync_reduction, 2)))
 
-    ok = shared_tuples < solo_tuples and shared_acc >= solo_acc
+    ok = (shared_tuples < solo_tuples and shared_acc >= solo_acc
+          and sync_reduction >= 4.0 and shared_acc == poll1_acc)
     print(f"# serve_throughput: shared={int(shared_tuples):,} tuples vs "
           f"solo={solo_tuples:,} ({solo_tuples / max(shared_tuples, 1):.1f}x), "
-          f"recall {shared_acc:.3f} vs {solo_acc:.3f} -> {'PASS' if ok else 'FAIL'}")
+          f"recall {shared_acc:.3f} vs {solo_acc:.3f} (poll1 {poll1_acc:.3f}), "
+          f"syncs/64win {syncs64_poll1:.1f} -> {syncs64_poll8:.1f} "
+          f"({sync_reduction:.1f}x) -> {'PASS' if ok else 'FAIL'}")
+    if SMOKE and not ok:
+        raise SystemExit("serve_throughput smoke FAILED")
 
 
 if __name__ == "__main__":

@@ -1,121 +1,132 @@
-"""Multi-pod distributed HistSim (DESIGN.md Sec 2, last row).
+"""Multi-pod distributed HistSim — the unified MULTI-QUERY round.
 
-Production layout on a ("pod", "data", "model") mesh:
+One round over `repro.core.multiquery.MultiQueryState` on a
+("pod", "data", "model") mesh; the single-query case is just
+``max_queries=1`` (the parallel single-query `ShardedHistSimState` this
+module used to carry is gone — one loop, one state, every width):
 
-  * corpus blocks   — range-sharded over ("pod", "data"): each worker owns
-                      a contiguous range of the shuffled layout (locality,
-                      Challenge 1) and ingests only its own blocks.
+  * corpus blocks   — range-sharded over ("pod", "data"): each worker
+                      owns a contiguous range of the shuffled layout
+                      (`repro.io.ShardedSource`, locality, Challenge 1)
+                      and ingests only its own blocks.
   * counts matrix   — candidate-sharded over "model": each model shard
-                      owns V_Z / |model| candidate rows.
-  * per round       — each (pod, data) shard histograms its local samples
-                      *restricted to the candidate rows of its model
-                      shard* (one-hot matmul, so restriction is an index
-                      shift, not a gather), then a single psum over
-                      ("pod", "data") merges partial counts: the paper's
-                      r_partial spinlock handoff becomes one fused
-                      all-reduce of a (V_Z/m, V_X) f32 tile.
-  * statistics      — tau_i computed locally per model shard (row-local),
-                      then one all-gather of (V_Z,) floats + replicated
-                      deviation assignment (O(V_Z log V_Z), trivially
-                      cheap). The active mask (V_Z bits packed) returns to
-                      every shard — the only "control plane" traffic.
+                      owns V_Z / |model| rows of the SHARED counts —
+                      P("model", None) — and of n — P("model").
+  * per round       — each (pod, data) shard histograms its local
+                      samples *restricted to the candidate rows of its
+                      model shard* (one-hot matmul, so restriction is an
+                      index shift, not a gather), then a single psum
+                      over ("pod", "data") merges partial counts: the
+                      paper's r_partial spinlock handoff becomes one
+                      fused all-reduce of a (V_Z/m, V_X) f32 tile.
+  * statistics      — per-query tau rows computed locally per model
+                      shard (row-local, one `l1_distance` call-site per
+                      query slot), then one tiled all-gather of
+                      (Q, V_Z) + (V_Z,) floats and the same vmapped
+                      per-query deviation assignment the single-device
+                      scheduler uses (`multiquery.apply_stats` — the two
+                      paths share the code, so they cannot drift). The
+                      per-query active words and their union (V_Z bits
+                      packed) return to every shard — the only "control
+                      plane" traffic.
 
 Communication per round: one psum of the counts delta + one all-gather
-of V_Z f32 — independent of the number of samples ingested. Sample bytes
-never cross the network; this is what makes the engine scale to 1000+
-nodes (see EXPERIMENTS.md §Dry-run for measured collective bytes).
+of (Q+1) x V_Z f32 — independent of the number of samples ingested.
+Sample bytes never cross the network; this is what makes the engine
+scale to 1000+ nodes. `SharedCountsScheduler(mesh=...)` is the GSPMD
+(sharding-propagation) counterpart for serving; this explicit
+shard_map round is the collective-auditable data-parallel ingest path.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple
+import inspect
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import deviations as dev
-from repro.core.bitmap import pack_active_mask
-from repro.core.histsim import HistSimParams
+from repro.core.multiquery import MultiQuerySpec, MultiQueryState, apply_stats
 from repro.kernels import ops
 
-__all__ = ["ShardedHistSimState", "init_sharded_state", "make_distributed_round"]
+__all__ = ["multi_state_pspecs", "make_distributed_round", "shard_map_compat"]
 
 
-class ShardedHistSimState(NamedTuple):
-    counts: jax.Array  # (V_Z, V_X) — sharded P("model", None)
-    n: jax.Array  # (V_Z,) — sharded P("model")
-    q_hat: jax.Array  # (V_X,) — replicated
-    tau: jax.Array  # (V_Z,) — replicated (post all-gather)
-    delta_upper: jax.Array  # () — replicated
-    active_words: jax.Array  # (W,) uint32 — replicated
-    in_top_k: jax.Array  # (V_Z,) bool — replicated
-    round_idx: jax.Array  # () i32
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """shard_map across jax versions (jax.shard_map / experimental;
+    check_vma / check_rep) with replication checking off — the round's
+    replicated outputs come out of collectives the checker can't see
+    through on every version we support."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    params = inspect.signature(sm).parameters
+    kwargs = {}
+    if "check_vma" in params:
+        kwargs["check_vma"] = False
+    elif "check_rep" in params:
+        kwargs["check_rep"] = False
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
 
 
-def init_sharded_state(params: HistSimParams, target: jax.Array) -> ShardedHistSimState:
-    target = jnp.asarray(target, jnp.float32)
-    q_hat = target / jnp.maximum(jnp.sum(target), 1e-30)
-    v_z, v_x = params.v_z, params.v_x
-    return ShardedHistSimState(
-        counts=jnp.zeros((v_z, v_x), jnp.float32),
-        n=jnp.zeros((v_z,), jnp.float32),
-        q_hat=q_hat,
-        tau=jnp.ones((v_z,), jnp.float32),
-        delta_upper=jnp.asarray(float(v_z), jnp.float32),
-        active_words=pack_active_mask(jnp.ones((v_z,), bool)),
-        in_top_k=jnp.zeros((v_z,), bool),
-        round_idx=jnp.asarray(0, jnp.int32),
-    )
-
-
-def state_pspecs(data_axes=("data",), model_axis="model"):
-    """PartitionSpecs for ShardedHistSimState fields."""
-    return ShardedHistSimState(
+def multi_state_pspecs(model_axis: str = "model") -> MultiQueryState:
+    """PartitionSpecs for MultiQueryState: shared counts candidate-sharded
+    over the model axis, all per-query statistics replicated."""
+    return MultiQueryState(
         counts=P(model_axis, None),
         n=P(model_axis),
         q_hat=P(),
+        k=P(),
+        eps=P(),
+        delta=P(),
         tau=P(),
+        eps_i=P(),
+        log_delta_i=P(),
         delta_upper=P(),
+        active=P(),
         active_words=P(),
+        union_words=P(),
         in_top_k=P(),
+        occupied=P(),
         round_idx=P(),
     )
 
 
 def make_distributed_round(
     mesh,
-    params: HistSimParams,
+    spec: MultiQuerySpec,
     *,
     data_axes=("data",),
-    model_axis="model",
+    model_axis: str = "model",
     histogram_impl: str = "auto",
     onehot_dtype=jnp.float32,
 ):
-    """Build the jitted shard_map round for a given mesh.
+    """Build the jitted shard_map multi-query round for a given mesh.
 
     The returned function has signature (state, z_idx, x_idx) -> state,
-    where z_idx/x_idx are (N,) int32 sharded over ``data_axes`` — the
+    where state is a `MultiQueryState` placed per `multi_state_pspecs`
+    and z_idx/x_idx are (N,) int32 sharded over ``data_axes`` — the
     samples each worker read from its own block range this round
-    (padding = -1). All-reduce structure is as documented above.
+    (padding = -1). All-reduce structure is as documented above; the
+    statistics tail is `multiquery.apply_stats`, identical to the
+    single-device scheduler's.
     """
     model_size = mesh.shape[model_axis]
-    if params.v_z % model_size != 0:
+    if spec.v_z % model_size != 0:
         raise ValueError(
-            f"V_Z={params.v_z} must divide by model axis size {model_size} "
+            f"V_Z={spec.v_z} must divide by model axis size {model_size} "
             "(pad candidates to a multiple; padded rows are never sampled)"
         )
-    vz_shard = params.v_z // model_size
+    vz_shard = spec.v_z // model_size
     sample_axes = tuple(data_axes)
 
-    def round_fn(state: ShardedHistSimState, z_idx: jax.Array, x_idx: jax.Array):
+    def round_fn(state: MultiQueryState, z_idx: jax.Array, x_idx: jax.Array):
         # ---- ingest: local histogram restricted to this model shard's rows
         shard_id = jax.lax.axis_index(model_axis)
         z_local = z_idx - shard_id * vz_shard
         z_local = jnp.where((z_local >= 0) & (z_local < vz_shard), z_local, -1)
         h = ops.histogram(
-            z_local, x_idx, v_z=vz_shard, v_x=params.v_x,
+            z_local, x_idx, v_z=vz_shard, v_x=spec.v_x,
             impl=histogram_impl, onehot_dtype=onehot_dtype,
         )
         # one fused all-reduce of the counts delta over the data axes
@@ -123,31 +134,19 @@ def make_distributed_round(
         counts = state.counts + h
         n = state.n + jnp.sum(h, axis=1)
 
-        # ---- statistics: row-local tau, tiny all-gather, replicated assign
-        tau_shard = ops.l1_distance(counts, state.q_hat)
-        tau = jax.lax.all_gather(tau_shard, model_axis, tiled=True)
-        n_full = jax.lax.all_gather(n, model_axis, tiled=True)
-        d = dev.assign_deviations(
-            tau, n_full, k=params.k, eps=params.eps, delta=params.delta, v_x=params.v_x
-        )
-        return ShardedHistSimState(
-            counts=counts,
-            n=n,
-            q_hat=state.q_hat,
-            tau=d.tau,
-            delta_upper=d.delta_upper,
-            active_words=pack_active_mask(d.active),
-            in_top_k=d.in_top_k,
-            round_idx=state.round_idx + 1,
-        )
+        # ---- statistics: row-local per-query tau, tiny all-gather,
+        # then the shared vmapped per-query assignment
+        tau_shard = jnp.stack(
+            [ops.l1_distance(counts, state.q_hat[i]) for i in range(spec.max_queries)]
+        )  # (Q, vz_shard)
+        tau = jax.lax.all_gather(tau_shard, model_axis, axis=1, tiled=True)
+        n_full = jax.lax.all_gather(n, model_axis, axis=0, tiled=True)
+        state = state._replace(counts=counts, n=n)
+        return apply_stats(state, tau, n_full, spec=spec)
 
-    specs = state_pspecs(data_axes=data_axes, model_axis=model_axis)
+    specs = multi_state_pspecs(model_axis=model_axis)
     sample_spec = P(sample_axes)
-    shmapped = jax.shard_map(
-        round_fn,
-        mesh=mesh,
-        in_specs=(specs, sample_spec, sample_spec),
-        out_specs=specs,
-        check_vma=False,
+    shmapped = shard_map_compat(
+        round_fn, mesh, in_specs=(specs, sample_spec, sample_spec), out_specs=specs
     )
     return jax.jit(shmapped)

@@ -1,15 +1,37 @@
 """The FastMatch engine: HistSim + block policies + lookahead staleness.
 
-This is the executable analogue of the paper's Figure 5 architecture.
-The three components map onto the execution model as follows:
+This is the executable analogue of the paper's Figure 5 architecture,
+mapped onto a device-resident execution model:
 
-  I/O manager        — gathers marked blocks from the blocked dataset
-                       (host memory here; disk/remote-FS in production)
-  sampling engine    — AnyActive marking of a lookahead window of blocks
-                       against the packed bitmap, using the FRESHEST
-                       delta_i posted so far (which is one window stale —
-                       the paper's asynchronous relaxation, Sec 4.2)
-  statistics engine  — the jitted HistSim ingest+stats round
+  I/O manager        — a pluggable `repro.io.BlockSource`: where window
+                       block data comes from. `InMemorySource` (device-
+                       or host-resident arrays), `ShardedSource` (one
+                       data-parallel worker's contiguous range), and
+                       `PrefetchSource` — a double-buffered background
+                       thread that gathers window t+1 while the device
+                       runs round t, the paper's "sampling engine must
+                       never stall the statistics engine" made literal.
+  sampling engine    — AnyActive marking of a lookahead window against
+                       the packed bitmap, using the FRESHEST statistics
+                       posted so far. Staleness is now a dial, not an
+                       accident of the loop: marking, ingest, stats and
+                       the read bookkeeping are ONE jitted
+                       `multiquery.fused_round`, and the host polls the
+                       device only every ``poll_every`` windows. The
+                       paper's Sec 4.2 relaxation (statistics one window
+                       stale) is ``poll_every=1``; larger values bound
+                       retirement/admission staleness by ``poll_every``
+                       windows and cut device↔host round-trips by the
+                       same factor (`SharedCountsScheduler.host_syncs`
+                       counts them; benchmarks/serve_throughput.py
+                       reports the ratio).
+  statistics engine  — the jitted HistSim ingest+stats round, vmapped
+                       over query slots. On a mesh the SAME round runs
+                       candidate-sharded (counts P("model", None), one
+                       psum per round) via the unified
+                       `repro.core.distributed.make_distributed_round`
+                       over `MultiQueryState` — single-query and
+                       N-query, one device and many, are one loop.
 
 Variants (paper Sec 5.2) are configuration points of this single engine:
 
@@ -28,6 +50,8 @@ later passes (candidates can re-activate when the split point moves).
 If a whole pass reads nothing and HistSim still has not terminated, the
 engine completes exactly (reads the remainder) — at that point empirical
 counts equal the true ones and the guarantees hold deterministically.
+The Scan baseline IS that completion path on a fresh scheduler
+(`SharedCountsScheduler.complete_remaining`), not a separate loop.
 
 The window-marking/ingest loop itself lives in `repro.core.multiquery`
 (`SharedCountsScheduler`): `run_engine` is its ``max_queries=1``
@@ -41,17 +65,19 @@ import dataclasses
 import time
 from typing import Optional
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import histsim
 from repro.core.histsim import HistSimParams, HistSimState
-from repro.core.multiquery import MultiQuerySpec, SharedCountsScheduler
-from repro.data.layout import BlockedDataset
+from repro.core.multiquery import MultiQuerySpec, QueryOutcome, SharedCountsScheduler
+from repro.io import PrefetchSource, as_block_source
 
 __all__ = ["EngineConfig", "MatchResult", "run_engine", "VARIANTS"]
 
 VARIANTS = ("fastmatch", "syncmatch", "scanmatch", "slowmatch", "scan")
+
+# The paper's Scan baseline reads the heap in big sequential chunks; at
+# 512-tuple blocks this is ~2M tuples per ingest dispatch.
+_SCAN_CHUNK_BLOCKS = 4096
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,10 +88,17 @@ class EngineConfig:
     max_rounds: int = 1_000_000
     max_passes: int = 4
     start_block: Optional[int] = None  # None -> random
+    # Device↔host decoupling: poll termination/counters every this many
+    # windows (1 = the paper's per-window cadence). prefetch=True wraps
+    # the block source in a background-thread double buffer.
+    poll_every: int = 1
+    prefetch: bool = False
 
     def __post_init__(self):
         if self.variant not in VARIANTS:
             raise ValueError(f"unknown variant {self.variant!r}")
+        if self.poll_every < 1:
+            raise ValueError(f"need poll_every >= 1, got {self.poll_every}")
 
     @property
     def policy(self) -> str:
@@ -97,80 +130,7 @@ class MatchResult:
         return float(self.state.delta_upper)
 
 
-def _run_exact_scan(dataset: BlockedDataset, state, params, t0) -> "MatchResult":
-    """The paper's Scan baseline: complete heap scan, exact answer."""
-    z_blocks = jnp.asarray(dataset.z_blocks)
-    x_blocks = jnp.asarray(dataset.x_blocks)
-    nb = dataset.num_blocks
-    chunk = 4096
-    for s in range(0, nb, chunk):
-        cj = jnp.arange(s, min(s + chunk, nb), dtype=jnp.int32)
-        state = histsim.ingest(
-            state, z_blocks[cj].reshape(-1), x_blocks[cj].reshape(-1), params=params
-        )
-    state = histsim.stats_step(state, params=params)
-    ids = np.asarray(histsim.top_k_ids(state, params.k))
-    return MatchResult(
-        ids=ids,
-        state=state,
-        rounds=-(-nb // chunk),
-        blocks_read=nb,
-        blocks_considered=nb,
-        tuples_read=dataset.num_tuples,
-        wall_time_s=time.perf_counter() - t0,
-        exact=True,
-        passes=1,
-    )
-
-
-def run_engine(
-    dataset: BlockedDataset,
-    target: np.ndarray,
-    params: HistSimParams,
-    config: EngineConfig = EngineConfig(),
-) -> MatchResult:
-    """Run one matching query to termination. Returns the top-k + stats.
-
-    This is the ``max_queries=1`` specialization of the shared
-    window-marking/ingest loop (`multiquery.SharedCountsScheduler`);
-    `MatchServer` runs the same loop with many concurrent queries.
-
-    ``exact`` in the result means what the docstring says: True iff the
-    answer rests on a complete read of the dataset (either the exact
-    fallback fired, or sampling happened to exhaust every block). A
-    ``max_rounds`` budget cut returns the best-effort sampled answer
-    with ``exact=False`` — it never silently completes the scan.
-    """
-    if params.v_z != dataset.v_z or params.v_x != dataset.v_x:
-        raise ValueError("params/dataset dimension mismatch")
-    if config.criterion != params.criterion:
-        params = dataclasses.replace(params, criterion=config.criterion)
-
-    t0 = time.perf_counter()
-
-    if config.variant == "scan":
-        state = histsim.init_state(params, jnp.asarray(target))
-        return _run_exact_scan(dataset, state, params, t0)
-
-    spec = MultiQuerySpec(
-        v_z=params.v_z, v_x=params.v_x, max_queries=1, criterion=params.criterion
-    )
-    sched = SharedCountsScheduler(
-        dataset,
-        spec,
-        policy=config.policy,
-        window=config.window,
-        seed=config.seed,
-        start_block=config.start_block,
-    )
-    qid = sched.admit(target, k=params.k, eps=params.eps, delta=params.delta)
-    sched.pump(max_rounds=config.max_rounds, max_passes=config.max_passes)
-    if qid not in sched.outcomes:
-        # max_rounds budget cut: best-effort sampled answer, NOT exact.
-        out = sched.retire(0, exact=False, terminated=False)
-    else:
-        out = sched.outcomes[qid]
-
+def _to_match_result(out: QueryOutcome, t0: float) -> MatchResult:
     return MatchResult(
         ids=out.ids,
         state=out.state,
@@ -182,3 +142,69 @@ def run_engine(
         exact=out.exact,
         passes=out.passes,
     )
+
+
+def run_engine(
+    dataset,
+    target: np.ndarray,
+    params: HistSimParams,
+    config: EngineConfig = EngineConfig(),
+) -> MatchResult:
+    """Run one matching query to termination. Returns the top-k + stats.
+
+    ``dataset`` is a `BlockedDataset` or any `repro.io.BlockSource`.
+
+    This is the ``max_queries=1`` specialization of the shared
+    window-marking/ingest loop (`multiquery.SharedCountsScheduler`);
+    `MatchServer` runs the same loop with many concurrent queries.
+
+    ``exact`` in the result means what the docstring says: True iff the
+    answer rests on a complete read of the dataset (either the exact
+    fallback fired, or sampling happened to exhaust every block). A
+    ``max_rounds`` budget cut returns the best-effort sampled answer
+    with ``exact=False`` — it never silently completes the scan.
+    """
+    source = as_block_source(dataset)
+    if params.v_z != source.v_z or params.v_x != source.v_x:
+        raise ValueError("params/dataset dimension mismatch")
+    if config.criterion != params.criterion:
+        params = dataclasses.replace(params, criterion=config.criterion)
+    if config.prefetch and not isinstance(source, PrefetchSource):
+        source = PrefetchSource(source)
+
+    t0 = time.perf_counter()
+    spec = MultiQuerySpec(
+        v_z=params.v_z, v_x=params.v_x, max_queries=1, criterion=params.criterion
+    )
+
+    if config.variant == "scan":
+        # The paper's Scan baseline: the exact-completion path of the one
+        # loop, run immediately on a fresh scheduler (complete heap read,
+        # exact answer by construction).
+        sched = SharedCountsScheduler(
+            source, spec, policy="scan", window=_SCAN_CHUNK_BLOCKS, seed=config.seed,
+            start_block=0,
+        )
+        sched.admit(target, k=params.k, eps=params.eps, delta=params.delta)
+        sched.complete_remaining()
+        fired = bool(sched._delta_upper[0] < params.delta)
+        out = sched.retire(0, exact=True, terminated=fired)
+        return _to_match_result(out, t0)
+
+    sched = SharedCountsScheduler(
+        source,
+        spec,
+        policy=config.policy,
+        window=config.window,
+        seed=config.seed,
+        start_block=config.start_block,
+        poll_every=config.poll_every,
+    )
+    qid = sched.admit(target, k=params.k, eps=params.eps, delta=params.delta)
+    sched.pump(max_rounds=config.max_rounds, max_passes=config.max_passes)
+    if qid not in sched.outcomes:
+        # max_rounds budget cut: best-effort sampled answer, NOT exact.
+        out = sched.retire(0, exact=False, terminated=False)
+    else:
+        out = sched.outcomes[qid]
+    return _to_match_result(out, t0)

@@ -38,6 +38,21 @@ Query slots are padded to a fixed ``max_queries`` so every jitted
 function sees stable shapes; empty slots are masked out of the active
 union and report delta_upper = 0.
 
+Device residency (paper Sec 4.2's asynchronous relaxation, taken to
+its hardware conclusion): one jitted `fused_round` runs mark + masked
+gather + ingest + vmapped stats AND the read bookkeeping — a
+`SampleCursor` holding the without-replacement ``read_mask`` and the
+blocks/tuples counters — entirely on device. The host loop in
+`SharedCountsScheduler.pump` dispatches rounds back-to-back and only
+polls ``delta_upper`` and the counters every ``poll_every`` windows
+(`host_syncs` counts those polls). ``poll_every=1`` reproduces the
+per-window host-stepped loop bit-for-bit; larger values trade bounded
+retirement staleness (a query may read up to ``poll_every - 1`` extra
+windows after its bound fires) for ~``poll_every``x fewer device↔host
+round-trips. Block data arrives through the pluggable `repro.io`
+`BlockSource` layer, so gathering the next window can overlap the
+current round (`PrefetchSource`).
+
 `SharedCountsScheduler` below is the window-marking/ingest loop that
 used to live inline in `engine.run_engine`; the single-query engine is
 now the ``max_queries=1`` specialization of this loop, and
@@ -61,14 +76,19 @@ from repro.core import histsim
 from repro.core.bitmap import pack_active_mask, words_for
 from repro.core.histsim import HistSimState
 from repro.core.policies import mark_window
-from repro.data.layout import BlockedDataset
+from repro.io import BlockSource, WindowData, as_block_source
 from repro.kernels import ops
 
 __all__ = [
     "MultiQuerySpec",
     "MultiQueryState",
     "QueryOutcome",
+    "SampleCursor",
     "SharedCountsScheduler",
+    "apply_stats",
+    "fused_round",
+    "ingest_round",
+    "init_cursor",
     "init_multi_state",
     "admit_slot",
     "clear_slot",
@@ -114,6 +134,29 @@ class MultiQueryState(NamedTuple):
     in_top_k: jax.Array  # (Q, V_Z) bool — per-query matching set M
     occupied: jax.Array  # (Q,) bool — slot holds a live query
     round_idx: jax.Array  # () i32 — statistics iterations so far
+
+
+class SampleCursor(NamedTuple):
+    """Device-resident sampling-side state: the without-replacement
+    read_mask plus the monotone read counters, updated inside the fused
+    round so the host never has to sync to account for a window."""
+
+    read_mask: jax.Array  # (num_blocks,) bool
+    blocks_read: jax.Array  # () i32
+    blocks_considered: jax.Array  # () i32
+    tuples_read: jax.Array  # () i32
+    rounds: jax.Array  # () i32 — windows dispatched
+
+
+def init_cursor(num_blocks: int) -> SampleCursor:
+    zero = jnp.asarray(0, jnp.int32)
+    return SampleCursor(
+        read_mask=jnp.zeros((num_blocks,), bool),
+        blocks_read=zero,
+        blocks_considered=zero,
+        tuples_read=zero,
+        rounds=zero,
+    )
 
 
 def init_multi_state(spec: MultiQuerySpec) -> MultiQueryState:
@@ -197,19 +240,19 @@ def ingest(
     )
 
 
-@partial(jax.jit, static_argnames=("spec",))
-def stats_step(state: MultiQueryState, *, spec: MultiQuerySpec) -> MultiQueryState:
-    """One statistics-engine iteration for every slot, vmapped.
+def apply_stats(
+    state: MultiQueryState, tau: jax.Array, n: jax.Array, *, spec: MultiQuerySpec
+) -> MultiQueryState:
+    """Per-slot deviation assignment from precomputed distances.
 
-    tau goes through the `ops.l1_distance` kernel call-site once per
-    slot (unrolled — Pallas kernels carry no batching rule, and Q is
-    small); the deviation assignment with each slot's (k, eps, delta)
-    is vmapped over the query axis.
+    The shared tail of the statistics engine: given (Q, V_Z) distances
+    and the full (V_Z,) sample counts, run the vmapped per-query
+    assignment with each slot's (k, eps, delta) and rebuild the active
+    union. Both `stats_step` (single device) and the unified
+    `repro.core.distributed.make_distributed_round` (tau/n arriving via
+    all-gather from candidate shards) end in this function, so the two
+    paths cannot drift.
     """
-    counts, n = state.counts, state.n
-    tau = jnp.stack(
-        [ops.l1_distance(counts, state.q_hat[i]) for i in range(spec.max_queries)]
-    )
 
     def one(tau_q, k, eps, delta, occupied):
         d = dev.assign_deviations_dynamic(
@@ -241,11 +284,92 @@ def stats_step(state: MultiQueryState, *, spec: MultiQuerySpec) -> MultiQuerySta
     )
 
 
+@partial(jax.jit, static_argnames=("spec",))
+def stats_step(state: MultiQueryState, *, spec: MultiQuerySpec) -> MultiQueryState:
+    """One statistics-engine iteration for every slot, vmapped.
+
+    tau goes through the `ops.l1_distance` kernel call-site once per
+    slot (unrolled — Pallas kernels carry no batching rule, and Q is
+    small); the deviation assignment with each slot's (k, eps, delta)
+    is vmapped over the query axis via `apply_stats`.
+    """
+    tau = jnp.stack(
+        [ops.l1_distance(state.counts, state.q_hat[i]) for i in range(spec.max_queries)]
+    )
+    return apply_stats(state, tau, state.n, spec=spec)
+
+
 def run_round(
     state: MultiQueryState, z_idx: jax.Array, x_idx: jax.Array, *, spec: MultiQuerySpec
 ) -> MultiQueryState:
     """Shared ingest + vmapped stats — one full multi-query round."""
     return stats_step(ingest(state, z_idx, x_idx, spec=spec), spec=spec)
+
+
+def _advance_cursor(cursor: SampleCursor, wd: WindowData, marks: jax.Array) -> SampleCursor:
+    """Read bookkeeping shared by the sampling and exact-completion
+    rounds — any change to the accounting applies to both paths."""
+    # scatter-add (duplicate-safe: padding repeats a real id with a zero
+    # contribution) then re-binarize — bool scatter-or is not available
+    read_mask = (
+        cursor.read_mask.astype(jnp.int32).at[wd.indices].add(marks.astype(jnp.int32)) > 0
+    )
+    return SampleCursor(
+        read_mask=read_mask,
+        blocks_read=cursor.blocks_read + jnp.sum(marks.astype(jnp.int32)),
+        blocks_considered=cursor.blocks_considered + jnp.sum(wd.valid.astype(jnp.int32)),
+        tuples_read=cursor.tuples_read
+        + jnp.sum(jnp.where(marks, jnp.sum((wd.z >= 0).astype(jnp.int32), axis=1), 0)),
+        rounds=cursor.rounds + 1,
+    )
+
+
+@partial(jax.jit, static_argnames=("spec", "policy"))
+def fused_round(
+    state: MultiQueryState,
+    cursor: SampleCursor,
+    wd: WindowData,
+    *,
+    spec: MultiQuerySpec,
+    policy: str,
+) -> tuple:
+    """One device-resident sampling round: mark + gather-mask + ingest +
+    vmapped stats + read bookkeeping, one dispatch, zero host syncs.
+
+    Marking uses the union active words (stale by up to ``poll_every``
+    windows of retirements — the generalized Sec 4.2 relaxation) and is
+    masked by the window's padding validity and the device read_mask, so
+    a block can never be double-counted even if the host hands out an
+    overlapping window. Ingest+stats are skipped branchlessly (lax.cond)
+    when nothing was marked, matching the host-stepped loop's cadence
+    (stats run only after windows that read something).
+    """
+    marks = mark_window(wd.bitmap, state.union_words, policy=policy)
+    marks = marks & wd.valid & ~cursor.read_mask[wd.indices]
+    n_marked = jnp.sum(marks.astype(jnp.int32))
+
+    def with_round(st: MultiQueryState) -> MultiQueryState:
+        zw = jnp.where(marks[:, None], wd.z, jnp.int32(-1)).reshape(-1)
+        xw = jnp.where(marks[:, None], wd.x, jnp.int32(-1)).reshape(-1)
+        return stats_step(ingest(st, zw, xw, spec=spec), spec=spec)
+
+    state = jax.lax.cond(n_marked > 0, with_round, lambda st: st, state)
+    return state, _advance_cursor(cursor, wd, marks)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def ingest_round(
+    state: MultiQueryState, cursor: SampleCursor, wd: WindowData, *, spec: MultiQuerySpec
+) -> tuple:
+    """Exact-completion round: ingest every unread block of the window
+    into the shared counts, no marking, no stats (the caller runs one
+    `stats_step` after the last chunk — statistics are a pure function
+    of the counts, so per-chunk stats would be wasted work)."""
+    marks = wd.valid & ~cursor.read_mask[wd.indices]
+    zw = jnp.where(marks[:, None], wd.z, jnp.int32(-1)).reshape(-1)
+    xw = jnp.where(marks[:, None], wd.x, jnp.int32(-1)).reshape(-1)
+    state = ingest(state, zw, xw, spec=spec)
+    return state, _advance_cursor(cursor, wd, marks)
 
 
 def slot_state(state: MultiQueryState, slot: int) -> HistSimState:
@@ -309,14 +433,27 @@ class SharedCountsScheduler:
     """The FastMatch execution loop over a shared counts matrix.
 
     Owns the dataset-side sampling state — the cyclic visit order, the
-    global without-replacement ``read_mask``, and pass structure — plus
-    the `MultiQueryState`. Queries enter via `admit` (any time, into a
-    free slot), leave via `retire` (collected in `outcomes`), and `pump`
+    device-resident `SampleCursor` (global without-replacement
+    ``read_mask`` + read counters), and pass structure — plus the
+    `MultiQueryState`. Queries enter via `admit` (any time, into a free
+    slot), leave via `retire` (collected in `outcomes`), and `pump`
     drives windows until every live query resolves:
 
-      mark   — AnyActive over the UNION active words (one kernel call)
-      ingest — marked blocks into the shared counts (one kernel call)
+      mark   — AnyActive over the UNION active words
+      ingest — marked blocks into the shared counts
       stats  — vmapped per-query deviation assignment + bounds
+
+    all three fused into one jitted `fused_round` dispatch per window;
+    block data arrives through the `repro.io.BlockSource` given at
+    construction (a `BlockedDataset` is wrapped in `InMemorySource`;
+    pass a `PrefetchSource` to overlap next-window gathering with the
+    current round). The host polls ``delta_upper`` + counters only
+    every ``poll_every`` windows — `host_syncs` counts these polls, and
+    host-side mirrors (``read_mask``, ``rounds``, ``blocks_read``, …)
+    are refreshed at each one. ``poll_every=1`` reproduces the
+    host-stepped loop exactly; larger values defer retirement/admission
+    by at most ``poll_every - 1`` windows (bounded staleness) and let
+    the budget overshoot by the same amount.
 
     A pass visits every not-yet-read block in cyclic order; blocks
     skipped by AnyActive stay eligible for later passes (a newly
@@ -326,50 +463,102 @@ class SharedCountsScheduler:
     the stragglers with ``exact=True``. A `max_rounds` budget instead
     stops the loop with live queries left best-effort (the caller
     retires them with ``exact=False``).
+
+    With ``mesh`` given, the shared counts matrix is placed sharded
+    ``P(model_axis, None)`` (samples-per-candidate ``P(model_axis)``)
+    and every jitted step runs SPMD across the mesh — the GSPMD
+    counterpart of the explicit-collective
+    `repro.core.distributed.make_distributed_round`.
     """
 
     def __init__(
         self,
-        dataset: BlockedDataset,
+        dataset,
         spec: MultiQuerySpec,
         *,
         policy: str = "anyactive",
         window: int = 512,
         seed: int = 0,
         start_block: Optional[int] = None,
+        poll_every: int = 1,
+        mesh=None,
+        model_axis: str = "model",
     ):
-        if spec.v_z != dataset.v_z or spec.v_x != dataset.v_x:
+        source: BlockSource = as_block_source(dataset)
+        if spec.v_z != source.v_z or spec.v_x != source.v_x:
             raise ValueError("spec/dataset dimension mismatch")
+        if getattr(source, "lo", 0) != 0:
+            # A ShardedSource speaks GLOBAL block ids while the scheduler
+            # owns a 0-based visit order/read_mask — shard sources feed
+            # the manually driven distributed round, not this loop.
+            raise ValueError(
+                "SharedCountsScheduler needs a 0-based source (whole dataset); "
+                "use ShardedSource with make_distributed_round instead"
+            )
         if policy not in ("anyactive", "scan"):
             raise ValueError(f"unknown policy {policy!r}")
-        self.dataset = dataset
+        if poll_every < 1:
+            raise ValueError(f"need poll_every >= 1, got {poll_every}")
+        self.source = source
         self.spec = spec
         self.policy = policy
-        nb = dataset.num_blocks
+        self.poll_every = poll_every
+        nb = source.num_blocks
         self.window = max(1, min(window, nb))
 
         rng = np.random.default_rng(seed)
         start = start_block if start_block is not None else int(rng.integers(nb))
         self.order = np.roll(np.arange(nb), -start)  # cyclic visit order
-        self.read_mask = np.zeros(nb, dtype=bool)
-
-        self.z_blocks = jnp.asarray(dataset.z_blocks)
-        self.x_blocks = jnp.asarray(dataset.x_blocks)
-        self.bitmap = jnp.asarray(dataset.bitmap)
-        self.tuples_per_block = (dataset.z_blocks >= 0).sum(axis=1)
 
         self.state = init_multi_state(spec)
+        self.cursor = init_cursor(nb)
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+            from repro.core.distributed import multi_state_pspecs
+
+            specs = multi_state_pspecs(model_axis=model_axis)
+            self.state = jax.device_put(
+                self.state, jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+            )
         self.tickets: Dict[int, _Ticket] = {}  # slot -> ticket
         self.outcomes: Dict[int, QueryOutcome] = {}  # qid -> outcome
         self._next_qid = 0
 
-        # global counters (monotone; per-query numbers are deltas vs admit)
+        # host mirrors of the device cursor + per-slot bounds, refreshed
+        # by `_sync()` (per-query numbers are deltas vs admit)
+        self.read_mask = np.zeros(nb, dtype=bool)
         self.rounds = 0
-        self.passes = 0
+        self.passes = 0  # host-side pass structure, not device state
         self.blocks_read = 0
         self.blocks_considered = 0
         self.tuples_read = 0
+        self._delta_upper = np.zeros(spec.max_queries, np.float32)
         self.budget_exhausted = False
+        self.host_syncs = 0  # number of device->host polls performed
+        # polls made by the window loop itself (pump/run_window), i.e.
+        # the steady-state cadence poll_every controls — excludes the
+        # per-query fixed polls at admission
+        self.loop_syncs = 0
+
+    # -- host/device synchronisation --------------------------------------
+
+    def _sync(self) -> None:
+        """One batched device->host poll: cursor + per-slot bounds.
+
+        Everything the host loop decides on (termination, budget, pass
+        structure, counters) is refreshed here and ONLY here, so
+        `host_syncs` is an exact count of device↔host round-trips the
+        loop performs. Retirement snapshots (`retire`) transfer result
+        data per retired query and are not part of the loop cadence.
+        """
+        cursor, delta_upper = jax.device_get((self.cursor, self.state.delta_upper))
+        self.read_mask = np.asarray(cursor.read_mask)
+        self.rounds = int(cursor.rounds)
+        self.blocks_read = int(cursor.blocks_read)
+        self.blocks_considered = int(cursor.blocks_considered)
+        self.tuples_read = int(cursor.tuples_read)
+        self._delta_upper = np.asarray(delta_upper)
+        self.host_syncs += 1
 
     # -- admission / retirement -------------------------------------------
 
@@ -387,6 +576,7 @@ class SharedCountsScheduler:
         The immediate `stats_step` makes the query see the accumulated
         shared counts — with its full shared ``n_i`` — before the next
         window is marked, so a late query never starts from zero.
+        Admission is a poll boundary (the ticket snapshots counters).
         """
         free = self.free_slots
         if not free:
@@ -408,6 +598,7 @@ class SharedCountsScheduler:
             spec=self.spec,
         )
         self.state = stats_step(self.state, spec=self.spec)
+        self._sync()  # fresh counters for the ticket + fresh delta_upper
         qid = self._next_qid
         self._next_qid += 1
         self.tickets[slot] = _Ticket(
@@ -430,12 +621,19 @@ class SharedCountsScheduler:
 
         ``exact`` is forced True whenever the whole dataset has been
         read — the answer then rests on a complete read no matter why
-        the query is retiring (MatchResult.exact's contract).
+        the query is retiring (MatchResult.exact's contract). Callers
+        must be at a poll boundary (mirrors fresh, i.e. after `_sync`).
         """
         t = self.tickets.pop(slot)
         exact = exact or bool(self.read_mask.all())
         view = slot_state(self.state, slot)
         ids = np.asarray(histsim.top_k_ids(view, t.k))
+        # A query admitted and retired inside one running pass still
+        # saw sampling activity — count that partial pass; a query that
+        # retired before any window ran while it was live saw none.
+        passes = self.passes - t.admit_passes
+        if passes == 0 and self.rounds > t.admit_rounds:
+            passes = 1
         outcome = QueryOutcome(
             qid=t.qid,
             ids=ids,
@@ -444,7 +642,7 @@ class SharedCountsScheduler:
             exact=exact,
             terminated=terminated,
             rounds=self.rounds - t.admit_rounds,
-            passes=max(self.passes - t.admit_passes, 1 if self.passes else 0),
+            passes=passes,
             blocks_read=self.blocks_read - t.admit_blocks_read,
             blocks_considered=self.blocks_considered - t.admit_blocks_considered,
             tuples_read=self.tuples_read - t.admit_tuples_read,
@@ -455,10 +653,11 @@ class SharedCountsScheduler:
         return outcome
 
     def _poll_terminated(self) -> None:
-        """Retire every live query whose termination bound has fired."""
+        """Retire every live query whose termination bound has fired
+        (judged on the last-polled bounds — call after `_sync`)."""
         if not self.tickets:
             return
-        du = np.asarray(self.state.delta_upper)
+        du = self._delta_upper
         for slot in list(self.tickets):
             if du[slot] < self.tickets[slot].delta:
                 self.retire(slot, exact=False, terminated=True)
@@ -467,46 +666,43 @@ class SharedCountsScheduler:
 
     def run_window(self, win: np.ndarray) -> int:
         """Mark one lookahead window against the union active set and
-        ingest the marked blocks. Returns the number of blocks read."""
-        win_j = jnp.asarray(win, jnp.int32)
-        self.blocks_considered += len(win)
-        marks = mark_window(self.bitmap[win_j], self.state.union_words, policy=self.policy)
-        marks_np = np.asarray(marks)
-        n_marked = int(marks_np.sum())
-        if n_marked:
-            zw = jnp.where(marks[:, None], self.z_blocks[win_j], jnp.int32(-1))
-            xw = jnp.where(marks[:, None], self.x_blocks[win_j], jnp.int32(-1))
-            self.state = run_round(self.state, zw.reshape(-1), xw.reshape(-1), spec=self.spec)
-            read = win[marks_np]
-            self.read_mask[read] = True
-            self.blocks_read += n_marked
-            self.tuples_read += int(self.tuples_per_block[read].sum())
-        self.rounds += 1
-        return n_marked
+        ingest the marked blocks; polls immediately (poll_every=1
+        semantics — the incremental-serving unit `MatchServer.step`
+        builds on). Returns the number of blocks read."""
+        win = np.asarray(win)
+        if win.size == 0:
+            return 0
+        before = self.blocks_read
+        wd = self.source.fetch(win, pad_to=max(self.window, win.size))
+        self.state, self.cursor = fused_round(
+            self.state, self.cursor, wd, spec=self.spec, policy=self.policy
+        )
+        self._sync()
+        self.loop_syncs += 1
+        return self.blocks_read - before
 
     def complete_remaining(self) -> None:
         """Exact completion: read every unread block into the shared counts.
 
         Afterwards the empirical counts equal the true ones, so every
         answer drawn from them is exact and the guarantees hold
-        deterministically.
+        deterministically. Counts as one pass (over the remainder) and
+        one round per chunk — the Scan baseline in `engine.run_engine`
+        is exactly this path on a fresh scheduler.
         """
+        self._sync()
         remaining = np.where(~self.read_mask)[0]
         if remaining.size == 0:
             return
+        self.passes += 1
         for s in range(0, remaining.size, self.window):
             chunk = remaining[s : s + self.window]
-            cj = jnp.asarray(chunk, jnp.int32)
-            self.state = ingest(
-                self.state,
-                self.z_blocks[cj].reshape(-1),
-                self.x_blocks[cj].reshape(-1),
-                spec=self.spec,
+            wd = self.source.fetch(chunk, pad_to=self.window)
+            self.state, self.cursor = ingest_round(
+                self.state, self.cursor, wd, spec=self.spec
             )
-            self.blocks_read += len(chunk)
-            self.tuples_read += int(self.tuples_per_block[chunk].sum())
-        self.read_mask[remaining] = True
         self.state = stats_step(self.state, spec=self.spec)
+        self._sync()
 
     def pump(
         self,
@@ -517,16 +713,24 @@ class SharedCountsScheduler:
     ) -> None:
         """Drive windows until every live query resolves.
 
-        on_round: called after each window (post-retirement) — the
-        serving frontend uses it to admit pending queries into slots
-        freed mid-stream.
+        Dispatches `fused_round`s back-to-back through the source's
+        `stream` (overlapped gathering with `PrefetchSource`) and only
+        polls the device every ``poll_every`` windows; retirement,
+        admission (via on_round) and the budget check happen at poll
+        boundaries, so with ``poll_every > 1`` each may lag the device
+        by up to ``poll_every - 1`` windows.
+
+        on_round: called at each poll (post-retirement) — the serving
+        frontend uses it to admit pending queries into slots freed
+        mid-stream.
 
         max_rounds/max_passes budget THIS call, not the scheduler's
         lifetime: a long-lived server calling pump per batch gets the
         full budget every time.
         """
-        rounds0, passes0 = self.rounds, self.passes
         self.budget_exhausted = False
+        self._sync()
+        rounds0, passes0 = self.rounds, self.passes
         # A late-admitted query may already terminate on the accumulated
         # shared counts, before any new window is read.
         self._poll_terminated()
@@ -536,21 +740,34 @@ class SharedCountsScheduler:
                 break
             self.passes += 1
             pass_start_rounds = self.rounds
-            read_this_pass = 0
-            pos = 0
-            while pos < pass_order.size and self.tickets:
-                win = pass_order[pos : pos + self.window]
-                pos += len(win)
-                read_this_pass += self.run_window(win)
-                self._poll_terminated()
-                if on_round is not None:
-                    on_round(self)
-                if self.rounds - rounds0 >= max_rounds:
-                    # Budget cut: live queries stay best-effort (the
-                    # caller decides; no silent exact completion).
-                    self.budget_exhausted = True
-                    return
-            if read_this_pass == 0:
+            pass_start_blocks = self.blocks_read
+            windows = [
+                pass_order[p : p + self.window]
+                for p in range(0, pass_order.size, self.window)
+            ]
+            stream = self.source.stream(windows, pad_to=self.window)
+            try:
+                for dispatched, wd in enumerate(stream, start=1):
+                    self.state, self.cursor = fused_round(
+                        self.state, self.cursor, wd, spec=self.spec, policy=self.policy
+                    )
+                    if dispatched % self.poll_every == 0 or dispatched == len(windows):
+                        self._sync()
+                        self.loop_syncs += 1
+                        self._poll_terminated()
+                        if on_round is not None:
+                            on_round(self)
+                        if self.rounds - rounds0 >= max_rounds:
+                            # Budget cut: live queries stay best-effort
+                            # (the caller decides; no silent exact
+                            # completion).
+                            self.budget_exhausted = True
+                            return
+                        if not self.tickets:
+                            break
+            finally:
+                stream.close()
+            if self.blocks_read - pass_start_blocks == 0 and self.tickets:
                 # "No unread block can help" was judged against the
                 # active sets live DURING the pass — a query admitted in
                 # its final windows deserves one fresh pass of its own
@@ -563,7 +780,7 @@ class SharedCountsScheduler:
         if self.tickets:
             # Exact fallback for the stragglers.
             self.complete_remaining()
-            du = np.asarray(self.state.delta_upper)
+            du = self._delta_upper
             for slot in list(self.tickets):
                 fired = bool(du[slot] < self.tickets[slot].delta)
                 self.retire(slot, exact=True, terminated=fired)

@@ -30,6 +30,7 @@ from repro.core.histsim import HistSimParams
 from repro.data.corpus import TokenCorpus
 from repro.data.layout import BlockedDataset
 from repro.core.bitmap import build_block_bitmap
+from repro.io import BlockSource, InMemorySource, PrefetchSource
 
 __all__ = ["SelectionReport", "select_domains", "TokenStream"]
 
@@ -64,21 +65,36 @@ def select_domains(
     delta: float = 0.01,
     lookahead: int = 256,
     seed: int = 0,
+    poll_every: int = 1,
+    prefetch: bool = False,
+    source: Optional[BlockSource] = None,
 ) -> SelectionReport:
-    blocked = corpus_as_blocked(corpus)
+    """Phase-1 SELECT through the engine's `BlockSource` I/O layer.
+
+    ``source`` overrides where block data comes from (default: the
+    corpus view wrapped in `InMemorySource`); ``prefetch`` adds the
+    double-buffered background gather; ``poll_every`` is the engine's
+    device-poll cadence.
+    """
+    if source is None:
+        source = InMemorySource(corpus_as_blocked(corpus))
+    if prefetch and not isinstance(source, PrefetchSource):
+        source = PrefetchSource(source)
     params = HistSimParams(
         v_z=corpus.spec.num_domains, v_x=corpus.spec.num_buckets, k=k, eps=eps, delta=delta
     )
     res = run_engine(
-        blocked,
+        source,
         corpus.reference,
         params,
-        EngineConfig(variant="fastmatch", lookahead=lookahead, seed=seed),
+        EngineConfig(
+            variant="fastmatch", lookahead=lookahead, seed=seed, poll_every=poll_every
+        ),
     )
     return SelectionReport(
         selected_domains=res.ids,
         result=res,
-        blocks_scanned_frac=res.blocks_read / blocked.num_blocks,
+        blocks_scanned_frac=res.blocks_read / source.num_blocks,
     )
 
 
@@ -124,17 +140,20 @@ class TokenStream:
     def _reshuffle(self):
         rng = np.random.default_rng((self.seed, self.worker, self.state.epoch))
         self._order = rng.permutation(self.owned)
+        # Stolen blocks come WITHOUT replacement from a per-epoch seeded
+        # permutation of the remainder — drawing each steal independently
+        # could hand the same block to this worker twice in one epoch.
+        steal_rng = np.random.default_rng((self.seed, self.worker, self.state.epoch, 1))
+        self._steal_order = steal_rng.permutation(self.others)
 
     def _next_block(self) -> np.ndarray:
         if self.state.cursor >= self._order.size:
-            # work stealing first (emulated: sample from other workers'
-            # pools), then wrap to a new epoch.
+            # work stealing first (emulated: walk a permutation of other
+            # workers' pools), then wrap to a new epoch.
             if self.state.stolen < self.others.size // max(self.num_workers, 1):
-                rng = np.random.default_rng(
-                    (self.seed, self.worker, self.state.epoch, self.state.stolen)
-                )
+                blk = self._steal_order[self.state.stolen]
                 self.state.stolen += 1
-                return self.corpus.tokens[rng.choice(self.others)]
+                return self.corpus.tokens[blk]
             self.state.epoch += 1
             self.state.cursor = 0
             self.state.stolen = 0

@@ -1,0 +1,34 @@
+"""Pluggable block I/O for the sampling engine (paper Fig. 5 "I/O manager").
+
+The statistics engine must never stall on block gathering (Sec 4.2's
+asynchronous relaxation). This package isolates WHERE window data comes
+from behind the `BlockSource` protocol so the device-resident sampling
+loop in `repro.core.multiquery` is agnostic to it:
+
+  InMemorySource  — whole blocked dataset resident on device; a fetch is
+                    a device-side gather (no host traffic at all)
+  ShardedSource   — one data-parallel worker's contiguous block range
+                    (reuses `BlockedDataset.shard`), global indices in,
+                    local gathers out
+  PrefetchSource  — double-buffered background-thread wrapper: the next
+                    window's blocks are fetched while the current round's
+                    ingest+stats run on device
+"""
+
+from repro.io.block_source import (
+    BlockSource,
+    InMemorySource,
+    ShardedSource,
+    WindowData,
+    as_block_source,
+)
+from repro.io.prefetch import PrefetchSource
+
+__all__ = [
+    "BlockSource",
+    "InMemorySource",
+    "PrefetchSource",
+    "ShardedSource",
+    "WindowData",
+    "as_block_source",
+]

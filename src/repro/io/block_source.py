@@ -1,0 +1,164 @@
+"""`BlockSource` — where the sampling loop's window data comes from.
+
+A source serves fixed-shape windows of blocked (z, x) tuples plus the
+packed presence bitmap. The contract is shaped by the device-resident
+round in `repro.core.multiquery`: every `WindowData` is padded to one
+static length (`pad_to`) so the jitted round never retraces, and padded
+rows carry ``valid=False`` so the round masks them out of marking,
+ingest and the read bookkeeping.
+
+`fetch` is random access (used by exact completion); `stream` is the
+sequential hot path a pass runs on, and is the hook `PrefetchSource`
+overrides to overlap the next window's gather with the current round.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Iterator, NamedTuple, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.layout import BlockedDataset
+
+__all__ = ["BlockSource", "InMemorySource", "ShardedSource", "WindowData", "as_block_source"]
+
+
+class WindowData(NamedTuple):
+    """One padded lookahead window of block data, ready for the round."""
+
+    indices: jax.Array  # (L,) i32 global block ids (padding repeats a real id)
+    z: jax.Array  # (L, B) i32 candidate ids, -1 padded within blocks
+    x: jax.Array  # (L, B) i32 attribute values, -1 padded
+    bitmap: jax.Array  # (L, W) uint32 packed presence bitmap rows
+    valid: jax.Array  # (L,) bool — False on window padding rows
+
+
+@runtime_checkable
+class BlockSource(Protocol):
+    """What the sampling loop needs from an I/O backend."""
+
+    num_blocks: int
+    block_size: int
+    v_z: int
+    v_x: int
+    tuples_per_block: np.ndarray  # (num_blocks,) host-side, for accounting
+
+    def fetch(self, win: np.ndarray, pad_to: Optional[int] = None) -> WindowData: ...
+
+    def stream(
+        self, windows: Iterable[np.ndarray], pad_to: Optional[int] = None
+    ) -> Iterator[WindowData]: ...
+
+
+class InMemorySource:
+    """The whole blocked dataset behind the source protocol.
+
+    ``device_resident=True`` (default) keeps the block arrays on device:
+    a fetch is a device-side gather and costs no host traffic. With
+    ``device_resident=False`` blocks stay in host memory (a stand-in for
+    disk or a remote FS) and each fetch gathers on host and transfers
+    one window — the case `PrefetchSource` exists to overlap.
+    """
+
+    def __init__(self, dataset: BlockedDataset, *, device_resident: bool = True):
+        self.num_blocks = dataset.num_blocks
+        self.block_size = dataset.block_size
+        self.v_z = dataset.v_z
+        self.v_x = dataset.v_x
+        self.tuples_per_block = (dataset.z_blocks >= 0).sum(axis=1)
+        self.device_resident = device_resident
+        if device_resident:
+            self._z = jnp.asarray(dataset.z_blocks)
+            self._x = jnp.asarray(dataset.x_blocks)
+            self._bitmap = jnp.asarray(dataset.bitmap)
+        else:
+            self._z = np.asarray(dataset.z_blocks, np.int32)
+            self._x = np.asarray(dataset.x_blocks, np.int32)
+            self._bitmap = np.asarray(dataset.bitmap, np.uint32)
+
+    def _pad(self, win: np.ndarray, pad_to: Optional[int]):
+        win = np.asarray(win, np.int32).ravel()
+        length = len(win) if pad_to is None else pad_to
+        if len(win) > length:
+            raise ValueError(f"window of {len(win)} blocks exceeds pad_to={length}")
+        idx = np.zeros(length, np.int32)
+        idx[: len(win)] = win
+        valid = np.zeros(length, bool)
+        valid[: len(win)] = True
+        return idx, valid
+
+    def fetch(self, win: np.ndarray, pad_to: Optional[int] = None) -> WindowData:
+        idx, valid = self._pad(win, pad_to)
+        if self.device_resident:
+            j = jnp.asarray(idx)
+            return WindowData(j, self._z[j], self._x[j], self._bitmap[j], jnp.asarray(valid))
+        return WindowData(
+            jnp.asarray(idx),
+            jnp.asarray(self._z[idx]),
+            jnp.asarray(self._x[idx]),
+            jnp.asarray(self._bitmap[idx]),
+            jnp.asarray(valid),
+        )
+
+    def stream(
+        self, windows: Iterable[np.ndarray], pad_to: Optional[int] = None
+    ) -> Iterator[WindowData]:
+        for win in windows:
+            yield self.fetch(win, pad_to)
+
+
+class ShardedSource(InMemorySource):
+    """One data-parallel worker's contiguous block range.
+
+    Built on `BlockedDataset.shard`; callers keep speaking GLOBAL block
+    ids (so one read_mask/visit order spans the mesh) and the source
+    translates to its local range. `owned(win)` filters a global window
+    down to this worker's share.
+
+    This is the per-worker feed for the manually driven
+    `repro.core.distributed.make_distributed_round` ingest — it is NOT a
+    drop-in dataset for `SharedCountsScheduler`/`run_engine`, whose
+    visit order is 0-based over the whole dataset (the scheduler rejects
+    it explicitly).
+    """
+
+    def __init__(
+        self,
+        dataset: BlockedDataset,
+        num_shards: int,
+        shard_id: int,
+        *,
+        device_resident: bool = True,
+    ):
+        if not (0 <= shard_id < num_shards):
+            raise ValueError(f"need 0 <= shard_id < num_shards, got {shard_id}/{num_shards}")
+        shard = dataset.shard(num_shards, shard_id)
+        super().__init__(shard, device_resident=device_resident)
+        per = -(-dataset.num_blocks // num_shards)
+        self.lo = shard_id * per
+        self.hi = self.lo + shard.num_blocks
+        self.global_num_blocks = dataset.num_blocks
+
+    def owned(self, win: np.ndarray) -> np.ndarray:
+        win = np.asarray(win, np.int32).ravel()
+        return win[(win >= self.lo) & (win < self.hi)]
+
+    def fetch(self, win: np.ndarray, pad_to: Optional[int] = None) -> WindowData:
+        win = np.asarray(win, np.int32).ravel()
+        if win.size and ((win < self.lo) | (win >= self.hi)).any():
+            raise ValueError(
+                f"block ids outside shard range [{self.lo}, {self.hi}); filter with owned()"
+            )
+        wd = super().fetch(win - self.lo, pad_to)
+        return wd._replace(indices=wd.indices + jnp.int32(self.lo))
+
+
+def as_block_source(data) -> BlockSource:
+    """BlockedDataset -> InMemorySource; an existing source passes through."""
+    if isinstance(data, BlockedDataset):
+        return InMemorySource(data)
+    if isinstance(data, BlockSource):
+        return data
+    raise TypeError(f"expected BlockedDataset or BlockSource, got {type(data)!r}")

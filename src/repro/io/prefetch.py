@@ -1,0 +1,88 @@
+"""Double-buffered background-thread block prefetch (paper Sec 4.2).
+
+"The sampling engine must never stall the statistics engine": while the
+device runs round t's ingest+stats, a worker thread gathers window t+1
+from the wrapped source into a bounded queue. With a queue depth of 2
+this is classic double buffering — the consumer always finds the next
+window staged unless the underlying source is genuinely slower than the
+compute, in which case the queue provides back-pressure instead of
+unbounded memory growth.
+
+Abandonment-safe: closing the stream generator mid-pass (a query
+retires, the budget cuts) signals the worker and drains the queue so
+a blocked `put` can never leak the thread.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterable, Iterator, Optional
+
+import numpy as np
+
+from repro.io.block_source import BlockSource, WindowData
+
+__all__ = ["PrefetchSource"]
+
+
+class PrefetchSource:
+    """Wrap any `BlockSource`; `stream` overlaps fetch with consumption."""
+
+    def __init__(self, inner: BlockSource, *, depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"need depth >= 1, got {depth}")
+        self.inner = inner
+        self.depth = depth
+        self.num_blocks = inner.num_blocks
+        self.block_size = inner.block_size
+        self.v_z = inner.v_z
+        self.v_x = inner.v_x
+        self.tuples_per_block = inner.tuples_per_block
+
+    def fetch(self, win: np.ndarray, pad_to: Optional[int] = None) -> WindowData:
+        return self.inner.fetch(win, pad_to)
+
+    def stream(
+        self, windows: Iterable[np.ndarray], pad_to: Optional[int] = None
+    ) -> Iterator[WindowData]:
+        windows = list(windows)
+        q: queue.Queue = queue.Queue(maxsize=self.depth)
+        stop = threading.Event()
+
+        def _put(item) -> bool:
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.05)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
+        def worker():
+            try:
+                for win in windows:
+                    if stop.is_set() or not _put(("data", self.inner.fetch(win, pad_to))):
+                        return
+                _put(("done", None))
+            except BaseException as exc:  # surfaced in the consumer
+                _put(("error", exc))
+
+        t = threading.Thread(target=worker, name="block-prefetch", daemon=True)
+        t.start()
+        try:
+            while True:
+                kind, payload = q.get()
+                if kind == "done":
+                    break
+                if kind == "error":
+                    raise payload
+                yield payload
+        finally:
+            stop.set()
+            try:
+                while True:
+                    q.get_nowait()
+            except queue.Empty:
+                pass
+            t.join(timeout=10)

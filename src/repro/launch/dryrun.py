@@ -204,13 +204,8 @@ def run_fastmatch_cell(mesh_kind: str, profile: str = "baseline", verbose: bool 
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    from repro.core.distributed import (
-        ShardedHistSimState,
-        init_sharded_state,
-        make_distributed_round,
-        state_pspecs,
-    )
-    from repro.core.histsim import HistSimParams
+    from repro.core.distributed import make_distributed_round, multi_state_pspecs
+    from repro.core.multiquery import MultiQuerySpec, init_multi_state
 
     import jax.numpy as _jnp
 
@@ -227,15 +222,17 @@ def run_fastmatch_cell(mesh_kind: str, profile: str = "baseline", verbose: bool 
     # dry-run costs the real TPU math, not a scatter.
     v_z, v_x = 7552, 128  # TAXI-scale, V_Z padded to /16
     n_samples = 512 * 512 * n_data_shards
-    params = HistSimParams(v_z=v_z, v_x=v_x, k=10)
+    # The unified round is multi-query; the single-query cell is its
+    # max_queries=1 specialization (same counts-psum geometry).
+    spec = MultiQuerySpec(v_z=v_z, v_x=v_x, max_queries=1)
     rnd = make_distributed_round(
-        mesh, params, data_axes=data_axes,
+        mesh, spec, data_axes=data_axes,
         histogram_impl="matmul",
         onehot_dtype=_jnp.bfloat16 if profile == "opt" else _jnp.float32,
     )
 
-    specs = state_pspecs(data_axes=data_axes)
-    state_shapes = jax.eval_shape(lambda: init_sharded_state(params, jnp.ones((v_x,))))
+    specs = multi_state_pspecs()
+    state_shapes = jax.eval_shape(lambda: init_multi_state(spec))
     state_sharding = jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
     sample_sharding = NamedSharding(mesh, P(data_axes))
     z = jax.ShapeDtypeStruct((n_samples,), jnp.int32)

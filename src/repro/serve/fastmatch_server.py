@@ -25,6 +25,17 @@ one `SharedCountsScheduler`. Mechanics:
                without any new I/O, and after an exact completion every
                subsequent query is answered instantly and exactly
 
+The loop underneath is the device-resident `multiquery.fused_round`:
+block data arrives through a pluggable `repro.io.BlockSource` (pass a
+`PrefetchSource` to overlap next-window gathering with the current
+round), and with ``poll_every > 1`` the scheduler dispatches that many
+windows between device polls — admission and retirement then lag the
+device by at most ``poll_every - 1`` windows (bounded staleness; the
+generalized paper-Sec 4.2 relaxation) in exchange for ~``poll_every``x
+fewer device↔host round-trips (`scheduler.host_syncs`). With ``mesh``
+given, the shared counts matrix is candidate-sharded over the mesh's
+model axis, so one server spans a data-parallel mesh.
+
 Per-query `MatchResult` counters (blocks/tuples/rounds) measure what
 was read WHILE that query was live — the amortized per-query I/O the
 `benchmarks/serve_throughput.py` benchmark compares against running
@@ -42,7 +53,7 @@ import numpy as np
 
 from repro.core.engine import MatchResult
 from repro.core.multiquery import MultiQuerySpec, QueryOutcome, SharedCountsScheduler
-from repro.data.layout import BlockedDataset
+from repro.io import as_block_source
 
 __all__ = ["MatchQuery", "MatchServer"]
 
@@ -64,7 +75,7 @@ class MatchServer:
 
     def __init__(
         self,
-        dataset: BlockedDataset,
+        dataset,
         *,
         max_queries: int = 8,
         criterion: str = "histsim",
@@ -73,20 +84,27 @@ class MatchServer:
         seed: int = 0,
         start_block: Optional[int] = None,
         max_passes: int = 64,
+        poll_every: int = 1,
+        mesh=None,
+        model_axis: str = "model",
     ):
+        source = as_block_source(dataset)
         self.spec = MultiQuerySpec(
-            v_z=dataset.v_z,
-            v_x=dataset.v_x,
+            v_z=source.v_z,
+            v_x=source.v_x,
             max_queries=max_queries,
             criterion=criterion,
         )
         self.scheduler = SharedCountsScheduler(
-            dataset,
+            source,
             self.spec,
             policy=policy,
             window=lookahead,
             seed=seed,
             start_block=start_block,
+            poll_every=poll_every,
+            mesh=mesh,
+            model_axis=model_axis,
         )
         self.max_passes = max_passes
         self.pending: Deque[MatchQuery] = deque()
@@ -188,7 +206,7 @@ class MatchServer:
                 # Counts complete (or sampling can no longer help) —
                 # finish exactly; every live answer becomes exact.
                 sched.complete_remaining()
-                du = np.asarray(sched.state.delta_upper)
+                du = sched._delta_upper  # fresh: complete_remaining polls
                 for slot in list(sched.tickets):
                     fired = bool(du[slot] < sched.tickets[slot].delta)
                     sched.retire(slot, exact=True, terminated=fired)

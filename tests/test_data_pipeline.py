@@ -99,3 +99,21 @@ class TestTokenStream:
         for _ in range(own + 5):  # exhaust owned blocks -> steal
             next(st)
         assert st.state.stolen > 0 or st.state.epoch > 0
+
+    def test_work_stealing_is_without_replacement(self, corpus):
+        """Regression: steals used to draw WITH replacement, so a worker
+        could ingest the same stolen block twice in one epoch."""
+        rep = select_domains(corpus, k=6, eps=0.1, seed=0)
+        st = TokenStream(corpus, rep.selected_domains, batch_size=1, seq_len=64,
+                         worker=0, num_workers=16, seed=0)
+        for _ in range(st.owned.size):  # drain owned; next calls steal
+            st._next_block()
+        limit = st.others.size // st.num_workers
+        stolen = [st._next_block() for _ in range(limit)]
+        assert st.state.stolen == limit
+        keys = {blk.tobytes() for blk in stolen}
+        assert len(keys) == limit  # every stolen block distinct
+        # and the steal order is checkpoint-deterministic
+        st2 = TokenStream(corpus, rep.selected_domains, batch_size=1, seq_len=64,
+                          worker=0, num_workers=16, seed=0)
+        np.testing.assert_array_equal(st._steal_order, st2._steal_order)

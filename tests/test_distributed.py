@@ -27,35 +27,123 @@ def _run_subprocess(code: str) -> str:
 
 @pytest.mark.slow
 class TestDistributedHistSim:
-    def test_matches_single_host(self):
+    def test_unified_round_matches_single_device_scheduler(self):
+        """The unified make_distributed_round over MultiQueryState (counts
+        sharded over "model", one psum per round, vmapped per-query stats)
+        must reproduce the single-device SharedCountsScheduler for 4
+        concurrent queries: ingesting exactly the blocks the scheduler
+        read yields identical counts and per-slot tau/bounds/top-k."""
         out = _run_subprocess("""
             import jax, jax.numpy as jnp, numpy as np, json
             from jax.sharding import Mesh, PartitionSpec as P, NamedSharding
-            from repro.core.distributed import init_sharded_state, make_distributed_round, state_pspecs
-            from repro.core.histsim import HistSimParams, init_state, run_round
-            from repro.data.synth import SynthSpec, make_dataset
+            from repro.core import histsim
+            from repro.core import multiquery as mq
+            from repro.core.distributed import make_distributed_round, multi_state_pspecs
+            from repro.data.layout import block_layout
+            from repro.data.synth import SynthSpec, make_dataset, perturb_distribution
 
             mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
-            spec = SynthSpec(v_z=64, v_x=16, num_tuples=60_000, k=5, seed=0)
-            ds = make_dataset(spec)
-            params = HistSimParams(v_z=64, v_x=16, k=5)
-            state = init_sharded_state(params, jnp.asarray(ds.target))
-            specs = state_pspecs()
-            state = jax.device_put(state, jax.tree.map(lambda s: NamedSharding(mesh, s), specs))
-            rnd = make_distributed_round(mesh, params)
-            z = jnp.asarray(ds.z[:32000]); x = jnp.asarray(ds.x[:32000])
-            zs = jax.device_put(z, NamedSharding(mesh, P("data")))
-            xs = jax.device_put(x, NamedSharding(mesh, P("data")))
+            spec_s = SynthSpec(v_z=64, v_x=16, num_tuples=300_000, k=5, n_close=5, seed=3)
+            ds = make_dataset(spec_s)
+            blocked = block_layout(ds.z, ds.x, v_z=64, v_x=16, block_size=512, seed=3)
+            spec = mq.MultiQuerySpec(v_z=64, v_x=16, max_queries=4)
+            rng = np.random.default_rng(9)
+            targets = [ds.target] + [
+                perturb_distribution(ds.target, d, rng) for d in (0.01, 0.03, 0.05)
+            ]
+
+            # single-device scheduler: 4 live queries, a few fused windows
+            sched = mq.SharedCountsScheduler(blocked, spec, window=64, seed=0, start_block=0)
+            for t in targets:
+                sched.admit(t, k=5, eps=0.08, delta=0.05)
+            for p in range(0, 6 * 64, 64):
+                sched.run_window(sched.order[p : p + 64])
+
+            # distributed: fresh state, same queries, the same tuples the
+            # scheduler read, ingested in ONE sharded round
+            state = mq.init_multi_state(spec)
+            for slot, t in enumerate(targets):
+                q = np.asarray(t, np.float64).ravel()
+                q = (q / q.sum()).astype(np.float32)
+                state = mq.admit_slot(
+                    state, jnp.asarray(slot, jnp.int32), jnp.asarray(q),
+                    jnp.asarray(5, jnp.int32), jnp.asarray(0.08, jnp.float32),
+                    jnp.asarray(0.05, jnp.float32), spec=spec)
+            read = np.where(sched.read_mask)[0]
+            z = blocked.z_blocks[read].reshape(-1)
+            x = blocked.x_blocks[read].reshape(-1)
+            pad = (-len(z)) % 4  # data-axis divisibility
+            z = np.concatenate([z, np.full(pad, -1, np.int32)])
+            x = np.concatenate([x, np.full(pad, -1, np.int32)])
+            specs = multi_state_pspecs()
+            state = jax.device_put(
+                state, jax.tree.map(lambda s: NamedSharding(mesh, s), specs))
+            zs = jax.device_put(jnp.asarray(z), NamedSharding(mesh, P("data")))
+            xs = jax.device_put(jnp.asarray(x), NamedSharding(mesh, P("data")))
+            rnd = make_distributed_round(mesh, spec)
             with mesh:
                 out = rnd(state, zs, xs)
-            st = init_state(params, jnp.asarray(ds.target))
-            st = run_round(st, z, x, params=params)
-            ok = (np.allclose(np.asarray(out.tau), np.asarray(st.tau), atol=1e-5)
-                  and np.allclose(np.asarray(out.counts), np.asarray(st.counts))
-                  and abs(float(out.delta_upper) - float(st.delta_upper)) < 1e-3)
-            print(json.dumps({"ok": bool(ok)}))
+
+            ids_ok = all(
+                np.array_equal(
+                    np.asarray(histsim.top_k_ids(mq.slot_state(out, s), 5)),
+                    np.asarray(histsim.top_k_ids(mq.slot_state(sched.state, s), 5)))
+                for s in range(4))
+            result = {
+                "counts": bool(np.array_equal(
+                    np.asarray(out.counts), np.asarray(sched.state.counts))),
+                "n": bool(np.array_equal(np.asarray(out.n), np.asarray(sched.state.n))),
+                "tau": bool(np.allclose(
+                    np.asarray(out.tau), np.asarray(sched.state.tau), atol=1e-5)),
+                "du": bool(np.allclose(
+                    np.asarray(out.delta_upper), np.asarray(sched.state.delta_upper),
+                    rtol=1e-4, atol=1e-6)),
+                "ids": bool(ids_ok),
+            }
+            result["ok"] = all(result.values())
+            print(json.dumps(result))
         """)
-        assert json.loads(out.strip().splitlines()[-1])["ok"]
+        res = json.loads(out.strip().splitlines()[-1])
+        assert res["ok"], res
+
+    def test_mesh_server_matches_single_device(self):
+        """MatchServer(mesh=...) — counts candidate-sharded via GSPMD —
+        must resolve the same queries to the same matching sets as the
+        unsharded server."""
+        out = _run_subprocess("""
+            import jax, jax.numpy as jnp, numpy as np, json
+            from jax.sharding import Mesh
+            from repro.data.layout import block_layout
+            from repro.data.synth import SynthSpec, make_dataset, perturb_distribution
+            from repro.serve.fastmatch_server import MatchServer
+
+            mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+            spec_s = SynthSpec(v_z=64, v_x=16, num_tuples=300_000, k=5, n_close=5, seed=3)
+            ds = make_dataset(spec_s)
+            blocked = block_layout(ds.z, ds.x, v_z=64, v_x=16, block_size=512, seed=3)
+            rng = np.random.default_rng(9)
+            targets = [ds.target] + [
+                perturb_distribution(ds.target, d, rng) for d in (0.01, 0.03, 0.05)
+            ]
+
+            ref = MatchServer(blocked, max_queries=4, lookahead=128, seed=11)
+            rids_ref = [ref.submit(t, k=5, eps=0.08, delta=0.05) for t in targets]
+            res_ref = ref.run_until_idle()
+
+            srv = MatchServer(blocked, max_queries=4, lookahead=128, seed=11, mesh=mesh)
+            rids = [srv.submit(t, k=5, eps=0.08, delta=0.05) for t in targets]
+            res = srv.run_until_idle()
+
+            ok = all(
+                sorted(res[r].ids.tolist()) == sorted(res_ref[rr].ids.tolist())
+                and res[r].exact == res_ref[rr].exact
+                for r, rr in zip(rids, rids_ref))
+            print(json.dumps({"ok": bool(ok),
+                              "tuples": srv.metrics["total_tuples_read"],
+                              "tuples_ref": ref.metrics["total_tuples_read"]}))
+        """)
+        res = json.loads(out.strip().splitlines()[-1])
+        assert res["ok"], res
 
 
 @pytest.mark.slow

@@ -117,6 +117,39 @@ class TestMultiQueryState:
         assert view.counts is sched.state.counts  # genuinely shared
 
 
+class TestOutcomeAccounting:
+    def test_retire_before_any_window_reports_zero_passes(self, dataset, targets):
+        """Regression: a query admitted mid-stream that terminates on the
+        warm shared counts — before any window runs while it is live —
+        must report passes=0 (and rounds=0), not a phantom pass."""
+        spec_s, ds, blocked = dataset
+        spec = mq.MultiQuerySpec(v_z=spec_s.v_z, v_x=spec_s.v_x, max_queries=2)
+        sched = mq.SharedCountsScheduler(blocked, spec, window=64, seed=0)
+        q0 = sched.admit(targets[0], k=K, eps=EPS, delta=DELTA)
+        sched.pump()
+        assert sched.passes > 0
+        assert sched.outcomes[q0].passes >= 1
+        # identical query against the warm cache: the bound already holds
+        q1 = sched.admit(targets[0], k=K, eps=EPS, delta=DELTA)
+        sched.pump()
+        out = sched.outcomes[q1]
+        assert out.terminated
+        assert out.rounds == 0
+        assert out.passes == 0  # used to report 1
+
+    def test_mid_pass_query_counts_its_partial_pass(self, dataset, targets):
+        """A query that did see windows inside one running pass still
+        reports passes >= 1."""
+        spec_s, ds, blocked = dataset
+        spec = mq.MultiQuerySpec(v_z=spec_s.v_z, v_x=spec_s.v_x, max_queries=2)
+        sched = mq.SharedCountsScheduler(blocked, spec, window=64, seed=0)
+        qid = sched.admit(targets[0], k=K, eps=EPS, delta=DELTA)
+        sched.pump()
+        out = sched.outcomes[qid]
+        assert out.rounds >= 1
+        assert out.passes >= 1
+
+
 class TestServerEquivalence:
     def test_matches_independent_engines(self, dataset, targets):
         """Tentpole acceptance: same top-k as N run_engine calls, same
