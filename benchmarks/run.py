@@ -21,6 +21,7 @@ from benchmarks import (
     guarantees,
     roofline_report,
     serve_throughput,
+    stats_throughput,
     table4_speedups,
 )
 
@@ -33,6 +34,7 @@ SUITES = {
     "guarantees": guarantees.run,
     "roofline": roofline_report.run,
     "serve": serve_throughput.run,
+    "stats": stats_throughput.run,
 }
 
 

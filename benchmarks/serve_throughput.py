@@ -84,7 +84,7 @@ def _serve(blocked, targets, *, poll_every: int, prefetch: bool):
         source = PrefetchSource(source)
     server = MatchServer(
         source, max_queries=N_QUERIES, lookahead=LOOKAHEAD, seed=200,
-        poll_every=poll_every,
+        poll_every=poll_every, k_cap=K,  # static k bound -> top_k selection
     )
     sched = server.scheduler
     t0 = time.perf_counter()

@@ -19,7 +19,7 @@ under shard_map (candidate-sharded with a tiny all-gather of tau).
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -50,14 +50,13 @@ class DeviationState(NamedTuple):
 def top_k_mask(tau: jax.Array, k: int) -> jax.Array:
     """Boolean mask of the k smallest entries of tau (ties broken by index).
 
-    Uses a rank-based construction rather than a threshold comparison so
-    exactly k entries are selected even under ties — HistSim's M must have
-    |M| = k (Definition 3).
+    Uses `lax.top_k` (stable: equal elements come out lower-index first)
+    rather than a threshold comparison so exactly k entries are selected
+    even under ties — HistSim's M must have |M| = k (Definition 3).
     """
     v_z = tau.shape[0]
-    order = jnp.argsort(tau, stable=True)  # ascending
-    ranks = jnp.zeros((v_z,), jnp.int32).at[order].set(jnp.arange(v_z, dtype=jnp.int32))
-    return ranks < k
+    _, idx = jax.lax.top_k(-tau, min(k, v_z))
+    return jnp.zeros((v_z,), bool).at[idx].set(True)
 
 
 def split_point(tau: jax.Array, k: int) -> jax.Array:
@@ -89,7 +88,8 @@ def assign_deviations(
 
     Thin static-parameter entry point over `assign_deviations_dynamic`
     (one copy of the Sec 3.3 math; the dynamic form is bitwise-identical
-    — see tests/test_multiquery.py).
+    — see tests/test_multiquery.py). The static k doubles as the order
+    cap, so the selection is a true k+1-element `lax.top_k`.
 
     Args:
       tau: (V_Z,) distance estimates.
@@ -98,7 +98,7 @@ def assign_deviations(
       v_x: histogram support size |V_X|.
     """
     return assign_deviations_dynamic(
-        tau, n, k=k, eps=eps, delta=delta, v_x=v_x, criterion="histsim"
+        tau, n, k=k, eps=eps, delta=delta, v_x=v_x, criterion="histsim", k_cap=k
     )
 
 
@@ -111,15 +111,28 @@ def assign_deviations_dynamic(
     delta: jax.Array,
     v_x: int,
     criterion: str = "histsim",
+    k_cap: Optional[int] = None,
 ) -> DeviationState:
     """`assign_deviations` with traced (k, eps, delta) — vmappable.
 
     The multi-query statistics engine (core/multiquery.py) runs one
     deviation assignment per live query with per-query Problem 1
     parameters, so k/eps/delta arrive as scalar arrays rather than
-    Python statics. Selection is done via a full stable argsort instead
-    of `lax.top_k`; both break ties by index, so the produced M, split
-    point and deviations are identical to the static path.
+    Python statics. Selection uses `jax.lax.top_k` on -tau: the k+1
+    smallest order statistics are all the assignment needs (membership
+    in M plus the two split-point neighbors), so there is no full
+    stable argsort + rank scatter per slot per round any more. top_k
+    is documented to break ties by lower index — the same tie rule the
+    argsort construction used — so the produced M, split point and
+    deviations are unchanged, including on exact ties (pinned by
+    tests/test_stats_batched.py::TestTopKSelectionRegression).
+
+    k_cap: static upper bound on the traced k (top_k's k must be a
+    Python int). None means "no bound known" and falls back to V_Z —
+    correct for any k but no cheaper than a sort; callers that know
+    their maximum k (HistSimParams.k, MultiQuerySpec.k_cap) pass it to
+    get the O(V_Z * k) selection. Traced k larger than k_cap is a
+    caller bug (admission validates); the selection would silently cap.
 
     criterion: "histsim" (delta_upper = sum delta_i) | "slowmatch"
     (delta_upper = V_Z * max delta_i), matching `slowmatch_deviations`.
@@ -132,12 +145,21 @@ def assign_deviations_dynamic(
     eps = jnp.asarray(eps, jnp.float32)
     delta = jnp.asarray(delta, jnp.float32)
 
-    order = jnp.argsort(tau, stable=True)  # ascending
-    ranks = jnp.zeros((v_z,), jnp.int32).at[order].set(jnp.arange(v_z, dtype=jnp.int32))
-    in_m = ranks < k
-    sorted_tau = tau[order]
-    kth = sorted_tau[jnp.clip(k - 1, 0, v_z - 1)]
-    k1th = sorted_tau[jnp.clip(k, 0, v_z - 1)]
+    cap = v_z if k_cap is None else int(k_cap)
+    if cap < 1:
+        raise ValueError(f"need k_cap >= 1, got {k_cap}")
+    m = min(cap + 1, v_z)  # k+1 order statistics suffice
+    neg_vals, small_idx = jax.lax.top_k(-tau, m)  # m smallest tau, ties by index
+    sorted_small = -neg_vals  # ascending
+    # Rank-based membership: the j-th returned index has rank j, and
+    # every candidate outside the returned m has rank >= m > k.
+    in_m = (
+        jnp.zeros((v_z,), bool)
+        .at[small_idx]
+        .set(jnp.arange(m, dtype=jnp.int32) < k)
+    )
+    kth = sorted_small[jnp.clip(k - 1, 0, m - 1)]
+    k1th = sorted_small[jnp.clip(k, 0, m - 1)]
     s = jnp.where(k >= v_z, jnp.max(tau), 0.5 * (kth + k1th))
 
     # Sec 3.3: in-M candidates must not cross s + eps/2 and must have
@@ -191,5 +213,5 @@ def slowmatch_deviations(
     termination test `delta_upper < delta` implements the SlowMatch rule.
     """
     return assign_deviations_dynamic(
-        tau, n, k=k, eps=eps, delta=delta, v_x=v_x, criterion="slowmatch"
+        tau, n, k=k, eps=eps, delta=delta, v_x=v_x, criterion="slowmatch", k_cap=k
     )

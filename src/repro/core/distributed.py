@@ -15,23 +15,29 @@ module used to carry is gone — one loop, one state, every width):
   * per round       — each (pod, data) shard histograms its local
                       samples *restricted to the candidate rows of its
                       model shard* (one-hot matmul, so restriction is an
-                      index shift, not a gather), then a single psum
-                      over ("pod", "data") merges partial counts: the
-                      paper's r_partial spinlock handoff becomes one
-                      fused all-reduce of a (V_Z/m, V_X) f32 tile.
+                      index shift, not a gather; the kernel emits the
+                      row-sum delta from the same pass), then a single
+                      psum over ("pod", "data") merges the partial
+                      (counts, rows) pair: the paper's r_partial
+                      spinlock handoff becomes one fused all-reduce of
+                      a (V_Z/m, V_X) f32 tile.
   * statistics      — per-query tau rows computed locally per model
-                      shard (row-local, one `l1_distance` call-site per
-                      query slot), then one tiled all-gather of
-                      (Q, V_Z) + (V_Z,) floats and the same vmapped
-                      per-query deviation assignment the single-device
-                      scheduler uses (`multiquery.apply_stats` — the two
-                      paths share the code, so they cannot drift). The
-                      per-query active words and their union (V_Z bits
-                      packed) return to every shard — the only "control
-                      plane" traffic.
+                      shard with ONE Q-batched `l1_distance_multi`
+                      call (the shard's counts rows are streamed once
+                      for all query slots; unoccupied slots masked),
+                      then one tiled all-gather of (Q, V_Z) + (V_Z,)
+                      floats and the same vmapped per-query deviation
+                      assignment the single-device scheduler uses
+                      (`multiquery.apply_stats` — the two paths share
+                      the code, so they cannot drift). The per-query
+                      active words and their union (V_Z bits packed)
+                      return to every shard — the only "control plane"
+                      traffic.
 
-Communication per round: one psum of the counts delta + one all-gather
-of (Q+1) x V_Z f32 — independent of the number of samples ingested.
+Communication per round: one psum of the (counts, row-sum) delta pair
++ one all-gather of (Q+1) x V_Z f32 — independent of the number of
+samples ingested AND of the number of query slots (the batched tau
+reads each shard's counts rows once, not Q times).
 Sample bytes never cross the network; this is what makes the engine
 scale to 1000+ nodes. `SharedCountsScheduler(mesh=...)` is the GSPMD
 (sharding-propagation) counterpart for serving; this explicit
@@ -121,24 +127,27 @@ def make_distributed_round(
     sample_axes = tuple(data_axes)
 
     def round_fn(state: MultiQueryState, z_idx: jax.Array, x_idx: jax.Array):
-        # ---- ingest: local histogram restricted to this model shard's rows
+        # ---- ingest: local histogram restricted to this model shard's rows,
+        # row-sum delta emitted from the same kernel pass
         shard_id = jax.lax.axis_index(model_axis)
         z_local = z_idx - shard_id * vz_shard
         z_local = jnp.where((z_local >= 0) & (z_local < vz_shard), z_local, -1)
-        h = ops.histogram(
+        h, rows = ops.histogram_with_rowsums(
             z_local, x_idx, v_z=vz_shard, v_x=spec.v_x,
             impl=histogram_impl, onehot_dtype=onehot_dtype,
         )
-        # one fused all-reduce of the counts delta over the data axes
-        h = jax.lax.psum(h, sample_axes)
+        # one fused all-reduce of the (counts, row-sum) delta pair over
+        # the data axes — a single psum call, XLA fuses the pytree
+        h, rows = jax.lax.psum((h, rows), sample_axes)
         counts = state.counts + h
-        n = state.n + jnp.sum(h, axis=1)
+        n = state.n + rows
 
-        # ---- statistics: row-local per-query tau, tiny all-gather,
-        # then the shared vmapped per-query assignment
-        tau_shard = jnp.stack(
-            [ops.l1_distance(counts, state.q_hat[i]) for i in range(spec.max_queries)]
-        )  # (Q, vz_shard)
+        # ---- statistics: row-local Q-batched tau (ONE kernel pass over
+        # this shard's counts rows scores every slot; unoccupied slots
+        # masked to the init value), tiny all-gather, then the shared
+        # vmapped per-query assignment
+        tau_shard = ops.l1_distance_multi(counts, state.q_hat)  # (Q, vz_shard)
+        tau_shard = jnp.where(state.occupied[:, None], tau_shard, 1.0)
         tau = jax.lax.all_gather(tau_shard, model_axis, axis=1, tiled=True)
         n_full = jax.lax.all_gather(n, model_axis, axis=0, tiled=True)
         state = state._replace(counts=counts, n=n)

@@ -173,8 +173,11 @@ def run_engine(
         source = PrefetchSource(source)
 
     t0 = time.perf_counter()
+    # The single query's k is static here, so it doubles as the top_k
+    # selection cap in the deviation assignment.
     spec = MultiQuerySpec(
-        v_z=params.v_z, v_x=params.v_x, max_queries=1, criterion=params.criterion
+        v_z=params.v_z, v_x=params.v_x, max_queries=1, criterion=params.criterion,
+        k_cap=params.k,
     )
 
     if config.variant == "scan":

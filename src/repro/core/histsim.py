@@ -94,18 +94,26 @@ def init_state(params: HistSimParams, target: jax.Array) -> HistSimState:
 def ingest(state: HistSimState, z_idx: jax.Array, x_idx: jax.Array, *, params: HistSimParams) -> HistSimState:
     """Accumulate a padded batch of samples (line 7-8 of Alg. 1).
 
-    z_idx/x_idx: (N,) int32; entries < 0 are padding.
+    z_idx/x_idx: (N,) int32; entries < 0 are padding. The histogram
+    kernel emits the row-sum delta from the same pass, so ``n`` needs
+    no separate full-matrix reduction.
     """
-    delta_counts = ops.histogram(z_idx, x_idx, v_z=params.v_z, v_x=params.v_x)
-    counts = state.counts + delta_counts
-    n = state.n + jnp.sum(delta_counts, axis=1)
-    return state._replace(counts=counts, n=n)
+    delta_counts, delta_n = ops.histogram_with_rowsums(
+        z_idx, x_idx, v_z=params.v_z, v_x=params.v_x
+    )
+    return state._replace(counts=state.counts + delta_counts, n=state.n + delta_n)
 
 
 @functools.partial(jax.jit, static_argnames=("params",))
 def stats_step(state: HistSimState, *, params: HistSimParams) -> HistSimState:
-    """One statistics-engine iteration (lines 8-14 of Alg. 1)."""
-    tau = ops.l1_distance(state.counts, state.q_hat)
+    """One statistics-engine iteration (lines 8-14 of Alg. 1).
+
+    The single-query step is the Q=1 specialization of the batched
+    statistics engine: same `l1_distance_multi` kernel the multi-query
+    scheduler streams the shared counts through (which also lifts the
+    single-query kernel's V_X <= 4096 bound from this path).
+    """
+    tau = ops.l1_distance_multi(state.counts, state.q_hat[None, :])[0]
     assign = dev.assign_deviations if params.criterion == "histsim" else dev.slowmatch_deviations
     d = assign(tau, state.n, k=params.k, eps=params.eps, delta=params.delta, v_x=params.v_x)
     return state._replace(

@@ -107,12 +107,19 @@ class MultiQuerySpec:
     v_x: int
     max_queries: int = 8
     criterion: str = "histsim"  # "histsim" | "slowmatch", applies to all slots
+    # Static upper bound on any slot's k. When set, the per-slot
+    # deviation assignment selects M via a (k_cap+1)-element lax.top_k
+    # instead of a V_Z-sized sort; admission validates k <= k_cap.
+    # None = no bound known (selection falls back to V_Z order stats).
+    k_cap: Optional[int] = None
 
     def __post_init__(self):
         if self.max_queries < 1:
             raise ValueError(f"need max_queries >= 1, got {self.max_queries}")
         if self.criterion not in ("histsim", "slowmatch"):
             raise ValueError(self.criterion)
+        if self.k_cap is not None and not (0 < self.k_cap <= self.v_z):
+            raise ValueError(f"need 0 < k_cap <= V_Z, got k_cap={self.k_cap}")
 
 
 class MultiQueryState(NamedTuple):
@@ -209,7 +216,11 @@ def admit_slot(
 
 @partial(jax.jit, static_argnames=("spec",))
 def clear_slot(state: MultiQueryState, slot: jax.Array, *, spec: MultiQuerySpec) -> MultiQueryState:
-    """Free a slot (query retired): drop it from the active union."""
+    """Free a slot (query retired): drop it from the active union.
+
+    tau is pinned back to the init value 1.0 — the batched `stats_step`
+    masks unoccupied slots out of the tau update, so whatever a freed
+    slot holds would otherwise linger as a stale snapshot."""
     del spec
     slot = jnp.asarray(slot, jnp.int32)
     active_words = state.active_words.at[slot].set(jnp.uint32(0))
@@ -217,6 +228,7 @@ def clear_slot(state: MultiQueryState, slot: jax.Array, *, spec: MultiQuerySpec)
         occupied=state.occupied.at[slot].set(False),
         active=state.active.at[slot].set(False),
         active_words=active_words,
+        tau=state.tau.at[slot].set(1.0),
         delta_upper=state.delta_upper.at[slot].set(0.0),
         union_words=_or_reduce(active_words),
     )
@@ -232,11 +244,15 @@ def ingest(
     state: MultiQueryState, z_idx: jax.Array, x_idx: jax.Array, *, spec: MultiQuerySpec
 ) -> MultiQueryState:
     """Accumulate a padded sample batch into the SHARED counts — one
-    histogram-kernel launch serves every live query."""
-    delta_counts = ops.histogram(z_idx, x_idx, v_z=spec.v_z, v_x=spec.v_x)
+    histogram-kernel launch serves every live query. The kernel emits
+    the per-candidate row-sum delta from the same pass, so advancing
+    ``n_i`` costs no second sweep over the delta matrix."""
+    delta_counts, delta_n = ops.histogram_with_rowsums(
+        z_idx, x_idx, v_z=spec.v_z, v_x=spec.v_x
+    )
     return state._replace(
         counts=state.counts + delta_counts,
-        n=state.n + jnp.sum(delta_counts, axis=1),
+        n=state.n + delta_n,
     )
 
 
@@ -256,7 +272,8 @@ def apply_stats(
 
     def one(tau_q, k, eps, delta, occupied):
         d = dev.assign_deviations_dynamic(
-            tau_q, n, k=k, eps=eps, delta=delta, v_x=spec.v_x, criterion=spec.criterion
+            tau_q, n, k=k, eps=eps, delta=delta, v_x=spec.v_x,
+            criterion=spec.criterion, k_cap=spec.k_cap,
         )
         active = d.active & occupied
         return (
@@ -286,16 +303,20 @@ def apply_stats(
 
 @partial(jax.jit, static_argnames=("spec",))
 def stats_step(state: MultiQueryState, *, spec: MultiQuerySpec) -> MultiQueryState:
-    """One statistics-engine iteration for every slot, vmapped.
+    """One statistics-engine iteration for every slot — no Python loop.
 
-    tau goes through the `ops.l1_distance` kernel call-site once per
-    slot (unrolled — Pallas kernels carry no batching rule, and Q is
-    small); the deviation assignment with each slot's (k, eps, delta)
-    is vmapped over the query axis via `apply_stats`.
+    tau for ALL slots comes from ONE `ops.l1_distance_multi` call: the
+    shared counts matrix is streamed once and scored against the whole
+    (Q, V_X) target batch, so the statistics cost per round is
+    independent of the number of query slots (the PR-2 path unrolled Q
+    single-query kernel calls, re-reading counts per slot — and empty
+    slots burned a full pass against a stale q_hat). Unoccupied slots
+    are masked out of the tau update (pinned at the init value 1.0);
+    the deviation assignment with each slot's (k, eps, delta) is
+    vmapped over the query axis via `apply_stats`.
     """
-    tau = jnp.stack(
-        [ops.l1_distance(state.counts, state.q_hat[i]) for i in range(spec.max_queries)]
-    )
+    tau = ops.l1_distance_multi(state.counts, state.q_hat)
+    tau = jnp.where(state.occupied[:, None], tau, 1.0)
     return apply_stats(state, tau, state.n, spec=spec)
 
 
@@ -583,6 +604,8 @@ class SharedCountsScheduler:
             raise RuntimeError("no free query slot; retire a query first")
         if not (0 < k <= self.spec.v_z):
             raise ValueError(f"need 0 < k <= V_Z, got k={k}")
+        if self.spec.k_cap is not None and k > self.spec.k_cap:
+            raise ValueError(f"k={k} exceeds spec.k_cap={self.spec.k_cap}")
         slot = free[0]
         target = np.asarray(target, np.float64).ravel()
         if target.shape != (self.spec.v_x,):

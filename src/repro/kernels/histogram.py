@@ -16,6 +16,12 @@ stays resident in VMEM across the inner grid dimension.
 
 Padding convention: z or x entries < 0 never match any iota column, so
 padded samples contribute zero — no separate mask operand.
+
+`histogram_with_rowsums_pallas` additionally emits the per-candidate
+row-sum delta (the ingest-side ``n_i`` increment) from the SAME pass:
+the counts block is still VMEM-resident after the last sample tile, so
+the lane reduction is free — `ingest` no longer re-streams the full
+delta matrix from HBM for a separate ``jnp.sum(delta, axis=1)``.
 """
 
 from __future__ import annotations
@@ -26,7 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["histogram_pallas"]
+__all__ = ["histogram_pallas", "histogram_with_rowsums_pallas"]
 
 # Default tile sizes: S_TILE samples per inner step, Z_TILE candidate rows.
 # VMEM footprint: onehot_z (S,Z) f32 + onehot_x (S,X) f32 + out (Z,X) f32.
@@ -35,7 +41,7 @@ _S_TILE = 512
 _Z_TILE = 256
 
 
-def _histogram_kernel(z_ref, x_ref, out_ref, *, v_x: int, z_tile: int):
+def _histogram_kernel(z_ref, x_ref, out_ref, *rows_ref, v_x: int, z_tile: int, num_sb: int):
     zb = pl.program_id(0)
     sb = pl.program_id(1)
 
@@ -62,6 +68,60 @@ def _histogram_kernel(z_ref, x_ref, out_ref, *, v_x: int, z_tile: int):
         preferred_element_type=jnp.float32,
     )
 
+    if rows_ref:  # fused row-sum output: reduce the still-resident block
+        @pl.when(sb == num_sb - 1)
+        def _rows():
+            rows_ref[0][...] = jnp.sum(out_ref[...], axis=1)
+
+
+def _histogram_call(
+    z_idx: jax.Array,
+    x_idx: jax.Array,
+    *,
+    v_z: int,
+    v_x: int,
+    s_tile: int,
+    z_tile: int,
+    with_rowsums: bool,
+    interpret: bool,
+):
+    n = z_idx.shape[0]
+    # Clamp out-of-range ids to the "never matches" value -1.
+    z_idx = jnp.where((z_idx >= 0) & (z_idx < v_z), z_idx, -1).astype(jnp.int32)
+    x_idx = jnp.where((x_idx >= 0) & (x_idx < v_x), x_idx, -1).astype(jnp.int32)
+
+    s_tile = min(s_tile, max(8, n))
+    n_pad = -(-n // s_tile) * s_tile
+    if n_pad != n:
+        z_idx = jnp.pad(z_idx, (0, n_pad - n), constant_values=-1)
+        x_idx = jnp.pad(x_idx, (0, n_pad - n), constant_values=-1)
+
+    z_tile = min(z_tile, v_z)
+    vz_pad = -(-v_z // z_tile) * z_tile
+
+    grid = (vz_pad // z_tile, n_pad // s_tile)
+    out_shape = [jax.ShapeDtypeStruct((vz_pad, v_x), jnp.float32)]
+    out_specs = [pl.BlockSpec((z_tile, v_x), lambda zb, sb: (zb, 0))]
+    if with_rowsums:
+        out_shape.append(jax.ShapeDtypeStruct((vz_pad,), jnp.float32))
+        out_specs.append(pl.BlockSpec((z_tile,), lambda zb, sb: (zb,)))
+    outs = pl.pallas_call(
+        functools.partial(
+            _histogram_kernel, v_x=v_x, z_tile=z_tile, num_sb=grid[1]
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((s_tile,), lambda zb, sb: (sb,)),
+            pl.BlockSpec((s_tile,), lambda zb, sb: (sb,)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(z_idx, x_idx)
+    if with_rowsums:
+        return outs[0][:v_z], outs[1][:v_z]
+    return outs[0][:v_z]
+
 
 def histogram_pallas(
     z_idx: jax.Array,
@@ -78,30 +138,29 @@ def histogram_pallas(
     Entries with z_idx < 0 or x_idx < 0 (or >= bounds) are dropped.
     Inputs are padded to tile multiples internally.
     """
-    n = z_idx.shape[0]
-    # Clamp out-of-range ids to the "never matches" value -1.
-    z_idx = jnp.where((z_idx >= 0) & (z_idx < v_z), z_idx, -1).astype(jnp.int32)
-    x_idx = jnp.where((x_idx >= 0) & (x_idx < v_x), x_idx, -1).astype(jnp.int32)
+    return _histogram_call(
+        z_idx, x_idx, v_z=v_z, v_x=v_x, s_tile=s_tile, z_tile=z_tile,
+        with_rowsums=False, interpret=interpret,
+    )
 
-    s_tile = min(s_tile, max(8, n))
-    n_pad = -(-n // s_tile) * s_tile
-    if n_pad != n:
-        z_idx = jnp.pad(z_idx, (0, n_pad - n), constant_values=-1)
-        x_idx = jnp.pad(x_idx, (0, n_pad - n), constant_values=-1)
 
-    z_tile = min(z_tile, v_z)
-    vz_pad = -(-v_z // z_tile) * z_tile
+def histogram_with_rowsums_pallas(
+    z_idx: jax.Array,
+    x_idx: jax.Array,
+    *,
+    v_z: int,
+    v_x: int,
+    s_tile: int = _S_TILE,
+    z_tile: int = _Z_TILE,
+    interpret: bool = False,
+) -> tuple:
+    """((V_Z, V_X), (V_Z,)) histogram + its row sums, one fused pass.
 
-    grid = (vz_pad // z_tile, n_pad // s_tile)
-    out = pl.pallas_call(
-        functools.partial(_histogram_kernel, v_x=v_x, z_tile=z_tile),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((s_tile,), lambda zb, sb: (sb,)),
-            pl.BlockSpec((s_tile,), lambda zb, sb: (sb,)),
-        ],
-        out_specs=pl.BlockSpec((z_tile, v_x), lambda zb, sb: (zb, 0)),
-        out_shape=jax.ShapeDtypeStruct((vz_pad, v_x), jnp.float32),
-        interpret=interpret,
-    )(z_idx, x_idx)
-    return out[:v_z]
+    The row sums are reduced from the VMEM-resident counts block after
+    the last sample tile, so rows[i] == counts[i].sum() exactly (counts
+    are integer-valued f32 — every reduction order is exact below 2^24).
+    """
+    return _histogram_call(
+        z_idx, x_idx, v_z=v_z, v_x=v_x, s_tile=s_tile, z_tile=z_tile,
+        with_rowsums=True, interpret=interpret,
+    )

@@ -1,0 +1,146 @@
+"""Pallas TPU kernel: Q-batched row-normalized l1 distances (one HBM pass).
+
+Computes, for every query slot q and every candidate row i of a shared
+(V_Z, V_X) counts matrix,
+
+    tau[q, i] = || counts_i / max(sum_x counts_i, 1)  -  q_hat_q ||_1
+
+The multi-query serving loop used to unroll `l1_distance_pallas` once
+per query slot, re-streaming the same counts matrix from HBM Q times
+per statistics iteration. Here each (Z_TILE, V_X) counts tile is loaded
+into VMEM ONCE, row-normalized once, and scored against the whole
+(Q, V_X) target matrix (VMEM-resident) before the next tile is fetched:
+HBM traffic drops from Q * V_Z * V_X to V_Z * V_X + Q * V_X, i.e. the
+statistics engine's cost per round is independent of the number of live
+queries (the paper's O(|V_Z| * |V_X|) per iteration, not Q times it).
+
+Two layouts, chosen by the padded V_X:
+
+  * single-sweep  — V_X fits one VMEM block (<= `_X_TILE` lanes, the
+    old `_MAX_VX` bound): grid (z_tiles,), row sums computed in-block,
+    exactly one HBM read of counts.
+  * lane-tiled    — V_X > `_X_TILE`: grid (z_tiles, 2, x_tiles). The
+    row sum needs the full row before ANY lane tile can be normalized,
+    so each z tile makes two sweeps over its x tiles: phase 0
+    accumulates row sums into a VMEM scratch, phase 1 accumulates the
+    per-query |r_hat - q| partials into the (Q, Z_TILE) output block.
+    Counts are read twice — still independent of Q. This is what lifts
+    the single-query kernel's `_MAX_VX = 4096` rejection.
+
+Rows with zero mass return ||q_hat_q||_1 (= 1), matching ref.py.
+Q is a static shape: the per-query scoring loop is unrolled inside the
+kernel, so the counts tile in VMEM is reused Q times per load.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["l1_distance_multi_pallas"]
+
+_Z_TILE = 256
+# Lane-tile width: one (Z_TILE x X_TILE) f32 block must fit VMEM with
+# headroom (256 x 4096 x 4B = 4 MiB). V_X beyond this is lane-tiled.
+_X_TILE = 4096
+
+
+def _l1_multi_kernel(counts_ref, q_ref, out_ref, *, num_q: int):
+    """Single-sweep: whole (padded) V_X in one block."""
+    counts = counts_ref[...].astype(jnp.float32)  # (Z_TILE, V_X)
+    row = jnp.sum(counts, axis=1, keepdims=True)
+    r_hat = counts / jnp.maximum(row, 1.0)
+    q = q_ref[...].astype(jnp.float32)  # (Q, V_X)
+    for i in range(num_q):  # unrolled: counts tile stays VMEM-resident
+        out_ref[i, :] = jnp.sum(jnp.abs(r_hat - q[i][None, :]), axis=1)
+
+
+def _l1_multi_tiled_kernel(counts_ref, q_ref, out_ref, row_ref, *, num_q: int):
+    """Lane-tiled: phase 0 row sums, phase 1 per-query tau partials."""
+    phase = pl.program_id(1)
+    xb = pl.program_id(2)
+    counts = counts_ref[...].astype(jnp.float32)  # (Z_TILE, X_TILE)
+
+    @pl.when((phase == 0) & (xb == 0))
+    def _init_row():
+        row_ref[...] = jnp.zeros_like(row_ref)
+
+    @pl.when(phase == 0)
+    def _accum_row():
+        row_ref[...] += jnp.sum(counts, axis=1, keepdims=True)
+
+    @pl.when((phase == 1) & (xb == 0))
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(phase == 1)
+    def _accum_tau():
+        r_hat = counts / jnp.maximum(row_ref[:, 0:1], 1.0)
+        q = q_ref[...].astype(jnp.float32)  # (Q, X_TILE)
+        for i in range(num_q):
+            out_ref[i, :] += jnp.sum(jnp.abs(r_hat - q[i][None, :]), axis=1)
+
+
+def l1_distance_multi_pallas(
+    counts: jax.Array,
+    q_hat: jax.Array,
+    *,
+    z_tile: int = _Z_TILE,
+    x_tile: int = _X_TILE,
+    interpret: bool = False,
+) -> jax.Array:
+    """(Q, V_Z) float32 distances tau[q, i] for a (Q, V_X) target batch.
+
+    V_X and V_Z are padded internally; q_hat padding is 0 so padded
+    lanes contribute |0 - 0| = 0. Any V_X is accepted (lane-tiled past
+    ``x_tile``); Q must be the leading q_hat dimension (static).
+    """
+    v_z, v_x = counts.shape
+    num_q, v_xq = q_hat.shape
+    if v_xq != v_x:
+        raise ValueError(f"q_hat V_X={v_xq} does not match counts V_X={v_x}")
+    if x_tile % 128 != 0:
+        raise ValueError(f"x_tile must be a lane multiple of 128, got {x_tile}")
+
+    z_tile = min(z_tile, v_z)
+    vz_pad = -(-v_z // z_tile) * z_tile
+    vx_pad = max(128, -(-v_x // 128) * 128)
+    if vx_pad <= x_tile:
+        x_tile, tiled = vx_pad, False
+    else:
+        vx_pad, tiled = -(-v_x // x_tile) * x_tile, True
+    if (vz_pad, vx_pad) != (v_z, v_x):
+        counts = jnp.pad(counts, ((0, vz_pad - v_z), (0, vx_pad - v_x)))
+        q_hat = jnp.pad(q_hat, ((0, 0), (0, vx_pad - v_x)))
+
+    out_shape = jax.ShapeDtypeStruct((num_q, vz_pad), jnp.float32)
+    if not tiled:
+        out = pl.pallas_call(
+            functools.partial(_l1_multi_kernel, num_q=num_q),
+            grid=(vz_pad // z_tile,),
+            in_specs=[
+                pl.BlockSpec((z_tile, vx_pad), lambda zb: (zb, 0)),
+                pl.BlockSpec((num_q, vx_pad), lambda zb: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((num_q, z_tile), lambda zb: (0, zb)),
+            out_shape=out_shape,
+            interpret=interpret,
+        )(counts, q_hat)
+    else:
+        out = pl.pallas_call(
+            functools.partial(_l1_multi_tiled_kernel, num_q=num_q),
+            grid=(vz_pad // z_tile, 2, vx_pad // x_tile),
+            in_specs=[
+                pl.BlockSpec((z_tile, x_tile), lambda zb, ph, xb: (zb, xb)),
+                pl.BlockSpec((num_q, x_tile), lambda zb, ph, xb: (0, xb)),
+            ],
+            out_specs=pl.BlockSpec((num_q, z_tile), lambda zb, ph, xb: (0, zb)),
+            out_shape=out_shape,
+            scratch_shapes=[pltpu.VMEM((z_tile, 128), jnp.float32)],
+            interpret=interpret,
+        )(counts, q_hat)
+    return out[:, :v_z]

@@ -5,6 +5,32 @@ Dispatch policy: on TPU backends the Pallas kernels run compiled; on CPU
 same math and XLA:CPU executes them far faster than interpret-mode
 Pallas. Tests force ``impl="pallas"`` with ``interpret=True`` to validate
 the kernels themselves against the oracles.
+
+Dispatch table (entry point -> TPU kernel / CPU oracle):
+
+  ======================  ==============================  ==========================
+  op                      pallas (TPU)                    ref (CPU)
+  ======================  ==============================  ==========================
+  histogram               histogram_pallas                histogram_ref
+                                                          (impl="matmul":
+                                                          histogram_matmul)
+  histogram_with_rowsums  histogram_with_rowsums_pallas   histogram_with_rowsums_ref
+                          (row sums reduced from the      (impl="matmul":
+                          VMEM-resident counts block)     histogram_matmul + sum)
+  l1_distance             l1_distance_pallas              l1_distance_ref
+                          (single query, V_X <= 4096)
+  l1_distance_multi       l1_distance_multi_pallas        l1_distance_multi_ref
+                          (Q-batched, one HBM pass over   (r_hat computed once,
+                          counts; V_X lane-tiled past     broadcast over Q)
+                          4096)
+  anyactive               anyactive_pallas                anyactive_ref
+  ======================  ==============================  ==========================
+
+`l1_distance` is the Q=1 legacy entry point; every round in the engine
+(histsim / multiquery / distributed) now routes through
+`l1_distance_multi`, whose HBM traffic is independent of the number of
+live query slots, and through `histogram_with_rowsums`, which emits the
+ingest-side ``n_i`` delta without a second pass over the delta matrix.
 """
 
 from __future__ import annotations
@@ -17,10 +43,18 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.anyactive import anyactive_pallas
-from repro.kernels.histogram import histogram_pallas
+from repro.kernels.histogram import histogram_pallas, histogram_with_rowsums_pallas
 from repro.kernels.l1_distance import l1_distance_pallas
+from repro.kernels.l1_distance_multi import l1_distance_multi_pallas
 
-__all__ = ["histogram", "l1_distance", "anyactive", "default_impl"]
+__all__ = [
+    "histogram",
+    "histogram_with_rowsums",
+    "l1_distance",
+    "l1_distance_multi",
+    "anyactive",
+    "default_impl",
+]
 
 Impl = Literal["auto", "pallas", "ref"]
 
@@ -58,6 +92,35 @@ def histogram(
     return ref.histogram_ref(z_idx, x_idx, v_z=v_z, v_x=v_x)
 
 
+@functools.partial(jax.jit, static_argnames=("v_z", "v_x", "impl", "interpret", "onehot_dtype"))
+def histogram_with_rowsums(
+    z_idx: jax.Array,
+    x_idx: jax.Array,
+    *,
+    v_z: int,
+    v_x: int,
+    impl: Impl = "auto",
+    interpret: bool = False,
+    onehot_dtype=jnp.float32,
+) -> tuple:
+    """((V_Z, V_X), (V_Z,)) histogram + row-sum delta in one fused pass.
+
+    rows == counts.sum(axis=1) exactly (integer-valued f32 counts), so
+    `ingest` can advance ``n_i`` without re-reading the delta matrix.
+    Same impl choices as `histogram`.
+    """
+    if _resolve(impl) == "pallas":
+        return histogram_with_rowsums_pallas(
+            z_idx, x_idx, v_z=v_z, v_x=v_x, interpret=interpret
+        )
+    if impl == "matmul":
+        counts = ref.histogram_matmul(
+            z_idx, x_idx, v_z=v_z, v_x=v_x, onehot_dtype=onehot_dtype
+        )
+        return counts, jnp.sum(counts, axis=1)
+    return ref.histogram_with_rowsums_ref(z_idx, x_idx, v_z=v_z, v_x=v_x)
+
+
 @functools.partial(jax.jit, static_argnames=("impl", "interpret"))
 def l1_distance(
     counts: jax.Array,
@@ -70,6 +133,25 @@ def l1_distance(
     if _resolve(impl) == "pallas":
         return l1_distance_pallas(counts, q_hat, interpret=interpret)
     return ref.l1_distance_ref(counts, q_hat)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+def l1_distance_multi(
+    counts: jax.Array,
+    q_hat: jax.Array,
+    *,
+    impl: Impl = "auto",
+    interpret: bool = False,
+) -> jax.Array:
+    """(Q, V_Z) f32 batched distances for a (Q, V_X) target matrix.
+
+    One pass over the shared counts matrix scores every query slot —
+    HBM traffic Q * V_Z * V_X -> V_Z * V_X + Q * V_X, independent of Q.
+    Unlike the Q=1 `l1_distance`, V_X is unbounded (lane-tiled on TPU).
+    """
+    if _resolve(impl) == "pallas":
+        return l1_distance_multi_pallas(counts, q_hat, interpret=interpret)
+    return ref.l1_distance_multi_ref(counts, q_hat)
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "interpret"))

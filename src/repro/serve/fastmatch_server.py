@@ -87,13 +87,18 @@ class MatchServer:
         poll_every: int = 1,
         mesh=None,
         model_axis: str = "model",
+        k_cap: Optional[int] = None,
     ):
+        # k_cap: static bound on any query's k — lets the per-slot
+        # deviation assignment use a (k_cap+1)-element top_k instead of
+        # V_Z order stats; submissions with k > k_cap are rejected.
         source = as_block_source(dataset)
         self.spec = MultiQuerySpec(
             v_z=source.v_z,
             v_x=source.v_x,
             max_queries=max_queries,
             criterion=criterion,
+            k_cap=k_cap,
         )
         self.scheduler = SharedCountsScheduler(
             source,
@@ -131,6 +136,8 @@ class MatchServer:
             raise ValueError(f"target must have shape ({self.spec.v_x},), got {target.shape}")
         if not (0 < k <= self.spec.v_z):
             raise ValueError(f"need 0 < k <= V_Z={self.spec.v_z}, got k={k}")
+        if self.spec.k_cap is not None and k > self.spec.k_cap:
+            raise ValueError(f"k={k} exceeds the server's k_cap={self.spec.k_cap}")
         rid = self._next_rid
         self._next_rid += 1
         self.pending.append(

@@ -150,6 +150,59 @@ class TestOutcomeAccounting:
         assert out.passes >= 1
 
 
+class TestSlotMasking:
+    def test_readmission_into_retired_slot_matches_fresh_server(self, dataset, targets):
+        """Regression for the empty-slot tau masking: a query admitted
+        into a slot another query retired from must resolve exactly as
+        on a server that never reused the slot."""
+        from repro.serve.fastmatch_server import MatchServer
+
+        spec_s, ds, blocked = dataset
+        recycled = MatchServer(blocked, max_queries=1, lookahead=256, seed=42)
+        first = recycled.submit(targets[0], k=K, eps=EPS, delta=DELTA)
+        recycled.run_until_idle()  # slot 0 retires here
+        late = recycled.submit(targets[2], k=3, eps=0.1, delta=DELTA)
+        r_late = recycled.run_until_idle()[late]
+
+        fresh = MatchServer(blocked, max_queries=1, lookahead=256, seed=42)
+        warm = fresh.submit(targets[0], k=K, eps=EPS, delta=DELTA)
+        fresh.run_until_idle()
+        # same warm cache, but this server's slot 0 has never been
+        # cleared+reused before `late2` (fresh scheduler state otherwise)
+        late2 = fresh.submit(targets[2], k=3, eps=0.1, delta=DELTA)
+        r2 = fresh.run_until_idle()[late2]
+        np.testing.assert_array_equal(r_late.ids, r2.ids)
+        assert r_late.exact == r2.exact
+        assert r_late.tuples_read == r2.tuples_read
+
+    def test_cleared_slot_tau_masked_at_init_value(self, dataset, targets):
+        """After retirement an empty slot's tau reads 1.0 (the init
+        value) and stays there through further stats — not a stale-q_hat
+        distance snapshot."""
+        spec_s, _, blocked = dataset
+        spec = mq.MultiQuerySpec(v_z=spec_s.v_z, v_x=spec_s.v_x, max_queries=2)
+        sched = mq.SharedCountsScheduler(blocked, spec, window=64, seed=0)
+        sched.admit(targets[0], k=K, eps=EPS, delta=DELTA)
+        sched.admit(targets[1], k=K, eps=EPS, delta=DELTA)
+        sched.run_window(sched.order[: sched.window])
+        sched.retire(1, exact=False, terminated=False)
+        st = mq.stats_step(sched.state, spec=spec)
+        np.testing.assert_array_equal(
+            np.asarray(st.tau[1]), np.ones(spec_s.v_z, np.float32)
+        )
+        assert float(st.delta_upper[1]) == 0.0
+
+    def test_k_cap_validated_at_admission(self, dataset, targets):
+        from repro.serve.fastmatch_server import MatchServer
+
+        spec_s, _, blocked = dataset
+        server = MatchServer(blocked, max_queries=2, lookahead=64, seed=0, k_cap=4)
+        with pytest.raises(ValueError, match="k_cap"):
+            server.submit(targets[0], k=5, eps=EPS, delta=DELTA)
+        rid = server.submit(targets[0], k=4, eps=EPS, delta=DELTA)
+        assert len(server.run_until_idle()[rid].ids) == 4
+
+
 class TestServerEquivalence:
     def test_matches_independent_engines(self, dataset, targets):
         """Tentpole acceptance: same top-k as N run_engine calls, same

@@ -1,0 +1,352 @@
+"""Golden equivalence: Q-batched statistics kernels vs the unrolled PR-2 path.
+
+The PR-2 multi-query loop unrolled `ops.l1_distance` once per query
+slot — Q separate HBM passes over the shared counts matrix per
+statistics iteration — and `ingest` re-read the delta matrix for a
+separate ``jnp.sum(delta, axis=1)``. This suite pins the batched
+engine to those semantics:
+
+  * `ops.l1_distance_multi` (interpret-mode Pallas AND the batched ref)
+    must be bit-identical to Q unrolled `ops.l1_distance` calls on
+    integer-valued counts, sweeping Q in {1, 3, 8} and V_X in
+    {64, 4096, 8192} — the last exercising the lifted `_MAX_VX = 4096`
+    single-block rejection of the PR-2 kernel;
+  * `ops.histogram_with_rowsums` must equal `ops.histogram` plus the
+    separate full-matrix reduction, exactly;
+  * `multiquery.stats_step` must reproduce the PR-2 unrolled loop for
+    every OCCUPIED slot, with empty slots masked (tau pinned at the
+    init value 1.0) instead of burning a pass against a stale q_hat;
+  * mid-stream admission into a previously-retired slot must behave as
+    if the slot had never been used.
+
+Counts are integer-valued f32 throughout (they are histograms): every
+f32 sum below 2^24 is exact regardless of reduction order, which is
+what makes bit-equality across kernel layouts a meaningful contract.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import multiquery as mq
+from repro.data.layout import block_layout
+from repro.data.synth import SynthSpec, make_dataset, perturb_distribution
+from repro.kernels import ops, ref
+from repro.kernels.l1_distance import l1_distance_pallas
+from repro.kernels.l1_distance_multi import l1_distance_multi_pallas
+
+_MAX_VX_PR2 = 4096  # the single-query kernel's single-block bound
+
+
+def _counts(rng, v_z, v_x, zero_rows=0.2):
+    c = rng.integers(0, 40, size=(v_z, v_x)).astype(np.float32)
+    c[rng.random(v_z) < zero_rows] = 0.0  # some never-sampled candidates
+    return c
+
+
+def _targets(rng, q, v_x):
+    return np.stack([rng.dirichlet(np.ones(v_x)).astype(np.float32) for _ in range(q)])
+
+
+class TestL1DistanceMultiGolden:
+    @pytest.mark.parametrize("q", [1, 3, 8])
+    @pytest.mark.parametrize("v_x", [64, 4096, 8192])
+    def test_bit_identical_to_unrolled(self, q, v_x, rng):
+        """Batched ref == Q unrolled PR-2 ref calls, bit for bit; the
+        interpret-mode Pallas kernel matches on its single-sweep path
+        and to 1 ulp per lane tile when V_X is lane-tiled."""
+        v_z = 96
+        counts = jnp.asarray(_counts(rng, v_z, v_x))
+        q_hat = jnp.asarray(_targets(rng, q, v_x))
+
+        unrolled = np.stack(
+            [np.asarray(ops.l1_distance(counts, q_hat[i])) for i in range(q)]
+        )
+        batched = np.asarray(ops.l1_distance_multi(counts, q_hat))
+        np.testing.assert_array_equal(batched, unrolled)
+
+        got = np.asarray(l1_distance_multi_pallas(counts, q_hat, interpret=True))
+        if v_x <= _MAX_VX_PR2:  # single sweep: same reduction order
+            np.testing.assert_array_equal(got, unrolled)
+        else:  # lane-tiled: per-tile partial sums may differ in the last ulp
+            np.testing.assert_allclose(got, unrolled, atol=3e-6)
+
+    @pytest.mark.parametrize("v_x", [64, 512])
+    def test_pallas_matches_pr2_kernel_bitwise(self, v_x, rng):
+        """On the PR-2 kernel's own domain the batched kernel is the
+        same arithmetic: interpret-mode outputs are bit-identical."""
+        v_z, q = 200, 4
+        counts = jnp.asarray(_counts(rng, v_z, v_x))
+        q_hat = jnp.asarray(_targets(rng, q, v_x))
+        multi = np.asarray(l1_distance_multi_pallas(counts, q_hat, interpret=True))
+        for i in range(q):
+            single = np.asarray(l1_distance_pallas(counts, q_hat[i], interpret=True))
+            np.testing.assert_array_equal(multi[i], single, err_msg=f"slot {i}")
+
+    def test_lifts_pr2_vx_bound(self, rng):
+        """V_X past 4096: the PR-2 kernel rejects, the batched kernel
+        lane-tiles and matches the oracle."""
+        v_z, v_x = 48, 6000
+        counts = jnp.asarray(_counts(rng, v_z, v_x))
+        q_hat = jnp.asarray(_targets(rng, 2, v_x))
+        with pytest.raises(ValueError, match="exceeds single-block"):
+            l1_distance_pallas(counts, q_hat[0], interpret=True)
+        got = l1_distance_multi_pallas(counts, q_hat, interpret=True)
+        want = ref.l1_distance_multi_ref(counts, q_hat)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-6)
+
+    def test_zero_mass_rows_and_q1_specialization(self, rng):
+        """Empty candidates report ||q_hat||_1 (= 1) in every slot; the
+        Q=1 batch equals the single-query entry point exactly."""
+        v_z, v_x = 33, 24
+        counts = _counts(rng, v_z, v_x)
+        counts[5] = 0.0
+        q_hat = jnp.asarray(_targets(rng, 1, v_x))
+        batched = np.asarray(ops.l1_distance_multi(jnp.asarray(counts), q_hat))
+        assert batched[0, 5] == pytest.approx(1.0, abs=1e-6)
+        single = np.asarray(ops.l1_distance(jnp.asarray(counts), q_hat[0]))
+        np.testing.assert_array_equal(batched[0], single)
+
+
+class TestHistogramWithRowsumsGolden:
+    @pytest.mark.parametrize("v_z,v_x,n", [(161, 24, 5000), (64, 161, 1000), (10, 2, 100)])
+    def test_equals_histogram_plus_reduction(self, v_z, v_x, n, rng):
+        """The fused pass == the PR-2 two-step (histogram, then a
+        separate jnp.sum over the delta matrix), exactly — every impl."""
+        z = jnp.asarray(rng.integers(-1, v_z, size=n).astype(np.int32))
+        x = jnp.asarray(rng.integers(-1, v_x, size=n).astype(np.int32))
+        want_c = ops.histogram(z, x, v_z=v_z, v_x=v_x)
+        want_r = jnp.sum(want_c, axis=1)
+        for kwargs in (
+            dict(impl="ref"),
+            dict(impl="matmul"),
+            dict(impl="pallas", interpret=True),
+        ):
+            c, r = ops.histogram_with_rowsums(z, x, v_z=v_z, v_x=v_x, **kwargs)
+            np.testing.assert_array_equal(np.asarray(c), np.asarray(want_c), err_msg=str(kwargs))
+            np.testing.assert_array_equal(np.asarray(r), np.asarray(want_r), err_msg=str(kwargs))
+
+    def test_rowsums_count_only_fully_valid_pairs(self):
+        """A sample with valid z but invalid x must not advance n_i —
+        rows are the row sums of what was actually binned."""
+        z = jnp.asarray([0, 1, 1, 2, -1], jnp.int32)
+        x = jnp.asarray([0, -1, 1, 99, 0], jnp.int32)
+        c, r = ops.histogram_with_rowsums(z, x, v_z=3, v_x=2)
+        np.testing.assert_array_equal(np.asarray(r), [1.0, 1.0, 0.0])
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(c).sum(axis=1))
+
+
+def _argsort_assignment(tau, n, *, k, eps, delta, v_x):
+    """The pre-top_k deviation selection (full stable argsort + rank
+    scatter), kept verbatim as the tie-behavior oracle."""
+    from repro.core import bounds
+
+    tau = jnp.asarray(tau, jnp.float32)
+    v_z = tau.shape[0]
+    kj = jnp.asarray(k, jnp.int32)
+    order = jnp.argsort(tau, stable=True)
+    ranks = jnp.zeros((v_z,), jnp.int32).at[order].set(jnp.arange(v_z, dtype=jnp.int32))
+    in_m = ranks < kj
+    sorted_tau = tau[order]
+    kth = sorted_tau[jnp.clip(kj - 1, 0, v_z - 1)]
+    k1th = sorted_tau[jnp.clip(kj, 0, v_z - 1)]
+    s = jnp.where(kj >= v_z, jnp.max(tau), 0.5 * (kth + k1th))
+    eps_in = jnp.minimum(eps, s + 0.5 * eps - tau)
+    eps_out = tau - jnp.maximum(s - 0.5 * eps, 0.0)
+    eps_i = jnp.maximum(jnp.where(in_m, eps_in, eps_out), 0.0)
+    log_delta_i = bounds.theorem1_log_delta(eps_i, jnp.asarray(n, jnp.float32), v_x)
+    delta_upper = jnp.sum(jnp.exp(log_delta_i))
+    active = log_delta_i > jnp.log(delta / float(v_z))
+    return in_m, s, eps_i, delta_upper, active
+
+
+class TestTopKSelectionRegression:
+    def test_identical_on_ties(self):
+        """Regression for the argsort -> lax.top_k rewrite in
+        `assign_deviations_dynamic`: heavy ties across the k boundary
+        must produce the same M (by-index tie break), split point,
+        eps_i, delta_upper and active set — for every k_cap, including
+        the None (V_Z order stats) fallback."""
+        from repro.core import deviations as dev
+
+        rng = np.random.default_rng(3)
+        eps, delta, v_x = 0.06, 0.01, 24
+        tie_vectors = [
+            np.repeat([0.1, 0.1, 0.3, 0.3, 0.3, 0.7], 4),  # ties straddle k
+            np.zeros(17, np.float32),  # everything tied at zero
+            np.repeat(0.42, 9),  # everything tied, nonzero
+            np.asarray([0.2, 0.1, 0.2, 0.1, 0.2, 0.1, 0.2, 0.1]),  # interleaved
+        ]
+        for tau in tie_vectors:
+            tau = np.asarray(tau, np.float32)
+            n = rng.integers(1, 10**5, size=len(tau)).astype(np.float32)
+            for k in (1, 2, len(tau) // 2, len(tau) - 1):
+                want = _argsort_assignment(tau, n, k=k, eps=eps, delta=delta, v_x=v_x)
+                for k_cap in (None, k, k + 3, len(tau)):
+                    d = dev.assign_deviations_dynamic(
+                        jnp.asarray(tau), jnp.asarray(n),
+                        k=jnp.int32(k), eps=jnp.float32(eps),
+                        delta=jnp.float32(delta), v_x=v_x, k_cap=k_cap,
+                    )
+                    got = (d.in_top_k, d.split, d.eps_i, d.delta_upper, d.active)
+                    names = ("in_top_k", "split", "eps_i", "delta_upper", "active")
+                    for g, w, name in zip(got, want, names):
+                        np.testing.assert_array_equal(
+                            np.asarray(g), np.asarray(w),
+                            err_msg=f"{name} k={k} k_cap={k_cap} tau={tau[:6]}",
+                        )
+
+    def test_static_entry_point_matches_dynamic(self):
+        """`assign_deviations` (k_cap = its static k) stays bitwise equal
+        to the uncapped dynamic path on tied inputs."""
+        from repro.core import deviations as dev
+
+        tau = jnp.asarray(np.repeat([0.05, 0.2, 0.2, 0.6], 3), jnp.float32)
+        n = jnp.full((12,), 4e4, jnp.float32)
+        a = dev.assign_deviations(tau, n, k=4, eps=0.06, delta=0.01, v_x=24)
+        b = dev.assign_deviations_dynamic(
+            tau, n, k=jnp.int32(4), eps=jnp.float32(0.06),
+            delta=jnp.float32(0.01), v_x=24, k_cap=None,
+        )
+        for f in a._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a, f)), np.asarray(getattr(b, f)), err_msg=f
+            )
+
+    def test_top_k_mask_ties_by_index(self):
+        """`top_k_mask` keeps the |M| = k contract under ties and picks
+        the lower-index candidates (the stable-argsort rule)."""
+        from repro.core import deviations as dev
+
+        tau = jnp.asarray([0.5, 0.2, 0.2, 0.2, 0.9], jnp.float32)
+        m = np.asarray(dev.top_k_mask(tau, 2))
+        np.testing.assert_array_equal(m, [False, True, True, False, False])
+        assert m.sum() == 2
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def _pr2_stats_step(state, *, spec):
+    """The PR-2 statistics iteration, reconstructed: one `ops.l1_distance`
+    call per slot (including empty ones), then the shared assignment.
+    Jitted exactly like `mq.stats_step` so the comparison isolates the
+    tau computation (XLA fuses an eager tail differently at the ulp
+    level, which would test the compiler, not the kernels)."""
+    tau = jnp.stack(
+        [ops.l1_distance(state.counts, state.q_hat[i]) for i in range(spec.max_queries)]
+    )
+    return mq.apply_stats(state, tau, state.n, spec=spec)
+
+
+class TestStatsStepGolden:
+    @pytest.fixture(scope="class")
+    def setting(self):
+        spec_s = SynthSpec(
+            v_z=48, v_x=16, num_tuples=200_000, k=5, n_close=5,
+            close_distance=0.02, far_distance=0.3, zipf_a=0.9, seed=31,
+        )
+        ds = make_dataset(spec_s)
+        blocked = block_layout(ds.z, ds.x, v_z=48, v_x=16, block_size=512, seed=31)
+        rng = np.random.default_rng(17)
+        targets = [ds.target] + [
+            perturb_distribution(ds.target, d, rng) for d in (0.01, 0.03, 0.05)
+        ]
+        return spec_s, ds, blocked, targets
+
+    @staticmethod
+    def _admit(state, spec, slot, target, k=5, eps=0.08, delta=0.05):
+        q = np.asarray(target, np.float64).ravel()
+        q = (q / q.sum()).astype(np.float32)
+        return mq.admit_slot(
+            state, jnp.asarray(slot, jnp.int32), jnp.asarray(q),
+            jnp.asarray(k, jnp.int32), jnp.asarray(eps, jnp.float32),
+            jnp.asarray(delta, jnp.float32), spec=spec,
+        )
+
+    def _ingested_state(self, setting, spec, slots_targets):
+        _, _, blocked, _ = setting
+        state = mq.init_multi_state(spec)
+        for slot, t in slots_targets:
+            state = self._admit(state, spec, slot, t)
+        z = jnp.asarray(blocked.z_blocks[:40].reshape(-1))
+        x = jnp.asarray(blocked.x_blocks[:40].reshape(-1))
+        return mq.ingest(state, z, x, spec=spec)
+
+    def test_occupied_slots_bit_identical_to_pr2(self, setting):
+        """Full house: every per-slot statistic out of the batched step
+        equals the PR-2 unrolled step bit for bit."""
+        _, _, _, targets = setting
+        spec = mq.MultiQuerySpec(v_z=48, v_x=16, max_queries=4)
+        state = self._ingested_state(setting, spec, list(enumerate(targets)))
+        got = mq.stats_step(state, spec=spec)
+        want = _pr2_stats_step(state, spec=spec)
+        for f in ("tau", "eps_i", "log_delta_i", "delta_upper", "active",
+                  "active_words", "union_words", "in_top_k"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got, f)), np.asarray(getattr(want, f)), err_msg=f
+            )
+
+    def test_empty_slots_masked_not_stale(self, setting):
+        """Slots 2-3 empty: occupied statistics still match PR-2, and the
+        empty slots' tau is pinned at the init value 1.0 instead of a
+        stale-q_hat l1 pass. Downstream per-slot outputs stay masked."""
+        _, _, _, targets = setting
+        spec = mq.MultiQuerySpec(v_z=48, v_x=16, max_queries=4)
+        state = self._ingested_state(setting, spec, [(0, targets[0]), (1, targets[1])])
+        got = mq.stats_step(state, spec=spec)
+        want = _pr2_stats_step(state, spec=spec)
+        for slot in (0, 1):
+            np.testing.assert_array_equal(
+                np.asarray(got.tau[slot]), np.asarray(want.tau[slot]), err_msg=str(slot)
+            )
+        np.testing.assert_array_equal(np.asarray(got.union_words), np.asarray(want.union_words))
+        for slot in (2, 3):
+            np.testing.assert_array_equal(np.asarray(got.tau[slot]), np.ones(48, np.float32))
+            assert float(got.delta_upper[slot]) == 0.0
+            assert not np.asarray(got.active[slot]).any()
+            assert not np.asarray(got.in_top_k[slot]).any()
+
+    def test_readmission_into_retired_slot_unaffected(self, setting):
+        """Retire slot 0, admit a different query into it: every statistic
+        must equal a fresh state that only ever saw the new query."""
+        _, _, _, targets = setting
+        spec = mq.MultiQuerySpec(v_z=48, v_x=16, max_queries=2)
+        state = self._ingested_state(setting, spec, [(0, targets[0]), (1, targets[1])])
+        state = mq.stats_step(state, spec=spec)
+        state = mq.clear_slot(state, jnp.asarray(0, jnp.int32), spec=spec)
+        state = self._admit(state, spec, 0, targets[2], k=3, eps=0.1, delta=0.02)
+        got = mq.stats_step(state, spec=spec)
+
+        fresh = self._ingested_state(setting, spec, [(1, targets[1])])
+        fresh = self._admit(fresh, spec, 0, targets[2], k=3, eps=0.1, delta=0.02)
+        want = mq.stats_step(fresh, spec=spec)
+        for f in ("tau", "eps_i", "log_delta_i", "delta_upper", "active",
+                  "active_words", "union_words", "in_top_k", "occupied"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got, f)), np.asarray(getattr(want, f)), err_msg=f
+            )
+
+    def test_mid_stream_admission_sees_shared_counts(self, setting):
+        """An admission between rounds picks up the accumulated shared
+        counts: its post-admission stats equal a PR-2 unrolled step on
+        the same state (the late-query soundness property)."""
+        _, _, blocked, targets = setting
+        spec = mq.MultiQuerySpec(v_z=48, v_x=16, max_queries=3)
+        state = self._ingested_state(setting, spec, [(0, targets[0])])
+        state = mq.stats_step(state, spec=spec)
+        z = jnp.asarray(blocked.z_blocks[40:80].reshape(-1))
+        x = jnp.asarray(blocked.x_blocks[40:80].reshape(-1))
+        state = mq.ingest(state, z, x, spec=spec)
+        state = self._admit(state, spec, 1, targets[3])
+        got = mq.stats_step(state, spec=spec)
+        want = _pr2_stats_step(state, spec=spec)
+        for slot in (0, 1):
+            np.testing.assert_array_equal(
+                np.asarray(got.tau[slot]), np.asarray(want.tau[slot]), err_msg=str(slot)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(got.eps_i[slot]), np.asarray(want.eps_i[slot]), err_msg=str(slot)
+            )
+        assert float(got.n.sum()) == float(state.n.sum()) > 0
