@@ -23,6 +23,7 @@ from benchmarks import (
     serve_throughput,
     stats_throughput,
     table4_speedups,
+    warm_restart,
 )
 
 SUITES = {
@@ -35,6 +36,7 @@ SUITES = {
     "roofline": roofline_report.run,
     "serve": serve_throughput.run,
     "stats": stats_throughput.run,
+    "restart": warm_restart.run,
 }
 
 

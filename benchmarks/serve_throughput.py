@@ -89,8 +89,14 @@ def _serve(blocked, targets, *, poll_every: int, prefetch: bool):
     sched = server.scheduler
     t0 = time.perf_counter()
     rids = [server.submit(t, k=K, eps=EPS, delta=DELTA) for t in targets]
+    # At submit time every request is still QUEUED (none admitted yet):
+    # the split metrics distinguish queue depth from slot occupancy.
+    m = server.metrics
+    assert m["queries_queued"] == len(targets) and m["queries_live"] == 0, m
     syncs0, rounds0 = sched.loop_syncs, sched.rounds
     results = server.run_until_idle()
+    m = server.metrics
+    assert m["queries_queued"] == m["queries_live"] == m["queries_pending"] == 0, m
     wall = time.perf_counter() - t0
     rounds = max(sched.rounds - rounds0, 1)
     syncs_per64 = (sched.loop_syncs - syncs0) / rounds * 64

@@ -12,7 +12,9 @@ Fault-tolerance contract:
     mid-save never corrupts the restore point.
   * restore() picks LATEST, falling back to the newest complete step dir
     if LATEST is missing (half-written LATEST loses one save, not the run).
-  * keep_last N garbage-collects old steps AFTER a successful commit.
+  * keep_last N garbage-collects old steps AFTER a successful commit;
+    the same GC sweeps ``*.tmp.<pid>`` leftovers whose owning process
+    is dead (a killed save cannot clean up after itself).
   * restore_resharded() re-places leaves under a different mesh/sharding
     — elastic restart on fewer/more pods (tested in tests/test_checkpoint).
 
@@ -35,6 +37,16 @@ import jax
 import numpy as np
 
 __all__ = ["CheckpointManager"]
+
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except (PermissionError, OverflowError):
+        return True  # exists but isn't ours (or out of kill range): leave it
+    return True
 
 
 def _flatten_with_names(tree):
@@ -76,26 +88,56 @@ class CheckpointManager:
         (tmp / "META.json").write_text(json.dumps(meta))
         final = self.dir / f"step_{step}"
         if final.exists():
-            shutil.rmtree(final)
+            # Re-saving an existing step: move the old dir ASIDE (atomic
+            # rename) instead of deleting it, so a crash in the commit
+            # window leaves the old snapshot's bits on disk rather than
+            # nothing. The aside name carries our pid under the .tmp.
+            # convention, so the next successful save's GC sweeps it.
+            aside = self.dir / f"step_{step}.old.tmp.{os.getpid()}"
+            if aside.exists():
+                shutil.rmtree(aside)
+            final.rename(aside)
+        else:
+            aside = None
         tmp.rename(final)  # commit 1: the step dir
         latest_tmp = self.dir / f"LATEST.tmp.{os.getpid()}"
         latest_tmp.write_text(f"step_{step}")
         latest_tmp.rename(self.dir / "LATEST")  # commit 2: the pointer
+        if aside is not None:
+            shutil.rmtree(aside, ignore_errors=True)
         self._gc()
         return final
 
     def _gc(self):
+        self._sweep_stale_tmp()
         steps = self.all_steps()
         for s in steps[: -self.keep_last] if self.keep_last else []:
             shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    def _sweep_stale_tmp(self):
+        """Remove orphaned ``*.tmp.<pid>`` leftovers of crashed saves.
+
+        A process killed mid-save cannot clean up after itself, and the
+        atomic-rename protocol guarantees such leftovers are never part
+        of a committed step — without this sweep they accumulate
+        forever. A tmp entry is swept iff its owning pid is dead; our
+        own in-flight save and live concurrent savers are left alone.
+        """
+        for p in self.dir.glob("*.tmp.*"):
+            pid_s = p.name.rsplit(".", 1)[-1]
+            if pid_s.isdigit() and (int(pid_s) == os.getpid() or _pid_alive(int(pid_s))):
+                continue
+            if p.is_dir():
+                shutil.rmtree(p, ignore_errors=True)
+            else:
+                p.unlink(missing_ok=True)
 
     # --------------------------------------------------------------- restore
     def all_steps(self) -> list:
         steps = []
         for p in self.dir.glob("step_*"):
-            if p.is_dir() and not p.name.endswith(tuple(f".tmp.{x}" for x in [""])) and ".tmp." not in p.name:
-                if (p / "META.json").exists():
-                    steps.append(int(p.name.split("_")[1]))
+            if p.is_dir() and ".tmp." not in p.name and (p / "META.json").exists():
+                steps.append(int(p.name.split("_")[1]))
         return sorted(steps)
 
     def latest_step(self) -> Optional[int]:

@@ -52,10 +52,16 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.multiquery import MultiQuerySpec, MultiQueryState, apply_stats
+from repro.core.multiquery import CacheSnapshot, MultiQuerySpec, MultiQueryState, apply_stats
 from repro.kernels import ops
 
-__all__ = ["multi_state_pspecs", "make_distributed_round", "shard_map_compat"]
+__all__ = [
+    "cache_pspecs",
+    "make_distributed_round",
+    "multi_state_pspecs",
+    "place_cache",
+    "shard_map_compat",
+]
 
 
 def shard_map_compat(f, mesh, in_specs, out_specs):
@@ -96,6 +102,45 @@ def multi_state_pspecs(model_axis: str = "model") -> MultiQueryState:
         occupied=P(),
         round_idx=P(),
     )
+
+
+def cache_pspecs(model_axis: str = "model") -> CacheSnapshot:
+    """PartitionSpecs for the warm-start `CacheSnapshot`: the shared
+    counts/n leaves carry the SAME candidate sharding as the live
+    `MultiQueryState` (derived from `multi_state_pspecs`, so the two
+    cannot drift); the sampling cursor and host bookkeeping replicate.
+
+    This is the elastic-restart contract: a snapshot host-gathered from
+    one mesh shape is re-placed onto another by
+    ``CheckpointManager.restore_resharded(like, mesh, cache_pspecs())``
+    — e.g. a cache accumulated on 1 device restored candidate-sharded
+    onto 8, or an 8-way cache restored onto a 4-device mesh."""
+    ms = multi_state_pspecs(model_axis=model_axis)
+    return CacheSnapshot(
+        counts=ms.counts,
+        n=ms.n,
+        read_mask=P(),
+        blocks_read=P(),
+        blocks_considered=P(),
+        tuples_read=P(),
+        rounds=P(),
+        passes=P(),
+        start=P(),
+    )
+
+
+def place_cache(snap: CacheSnapshot, mesh, model_axis: str = "model") -> CacheSnapshot:
+    """Host-gather a (possibly sharded) snapshot and re-place it on
+    ``mesh`` per `cache_pspecs` — the in-memory reshard twin of the
+    checkpoint round-trip, for handing a live scheduler's cache to a
+    differently-shaped mesh without touching disk."""
+    from jax.sharding import NamedSharding
+
+    host = jax.device_get(snap)  # gather: full leaves on host
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), cache_pspecs(model_axis=model_axis)
+    )
+    return jax.tree.map(jax.device_put, host, shardings)
 
 
 def make_distributed_round(

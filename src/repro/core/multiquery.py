@@ -63,6 +63,7 @@ with admission/retirement.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from functools import partial
 from typing import Callable, Dict, NamedTuple, Optional
@@ -71,6 +72,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import config_hash as _checkpoint_config_hash
 from repro.core import deviations as dev
 from repro.core import histsim
 from repro.core.bitmap import pack_active_mask, words_for
@@ -80,12 +82,14 @@ from repro.io import BlockSource, WindowData, as_block_source
 from repro.kernels import ops
 
 __all__ = [
+    "CacheSnapshot",
     "MultiQuerySpec",
     "MultiQueryState",
     "QueryOutcome",
     "SampleCursor",
     "SharedCountsScheduler",
     "apply_stats",
+    "cache_config_hash",
     "fused_round",
     "ingest_round",
     "init_cursor",
@@ -153,6 +157,75 @@ class SampleCursor(NamedTuple):
     blocks_considered: jax.Array  # () i32
     tuples_read: jax.Array  # () i32
     rounds: jax.Array  # () i32 — windows dispatched
+
+
+class CacheSnapshot(NamedTuple):
+    """The serving loop's durable warm-start state — everything a
+    restarted server needs to answer future queries from the
+    accumulated sample instead of from zero.
+
+    Only TARGET-INDEPENDENT state is here: the shared counts matrix and
+    per-candidate row sums (sufficient statistics for every future
+    query — the closeness-testing view), the without-replacement
+    ``read_mask`` plus its monotone counters, and the host-side pass /
+    visit-order bookkeeping. Live query slots are deliberately NOT part
+    of a snapshot: in-flight queries re-enter the serving queue after a
+    restart, and because sampling is target-independent they lose
+    nothing by re-admitting against the restored counts.
+
+    A snapshot is a flat pytree of arrays so `CheckpointManager` can
+    save it crash-atomically and `restore_resharded` can re-place the
+    candidate-sharded leaves onto a different mesh shape
+    (`repro.core.distributed.cache_pspecs`).
+    """
+
+    counts: jax.Array  # (V_Z, V_X) f32 shared empirical counts r_i
+    n: jax.Array  # (V_Z,) f32 shared samples per candidate n_i
+    read_mask: jax.Array  # (num_blocks,) bool without-replacement state
+    blocks_read: jax.Array  # () i32
+    blocks_considered: jax.Array  # () i32
+    tuples_read: jax.Array  # () i32
+    rounds: jax.Array  # () i32 — windows dispatched
+    passes: jax.Array  # () i32 — host-side pass counter
+    start: jax.Array  # () i32 — cyclic visit-order offset
+
+
+def cache_config_hash(source, spec: MultiQuerySpec) -> str:
+    """Fingerprint binding a `CacheSnapshot` to (dataset layout, spec).
+
+    Accumulated counts are sufficient statistics for any future query
+    ONLY over the exact blocked layout they were sampled from: under a
+    different shuffle, block size, or attribute arity the restored
+    ``read_mask``/counts pair silently invalidates every Theorem-1
+    bound. The hash covers the layout dimensions, the per-block tuple
+    counts, the content of up to 64 probe blocks spread evenly across
+    the whole layout, and the `MultiQuerySpec`, so a stale snapshot is
+    REJECTED at restore (ValueError from `CheckpointManager`) instead
+    of corrupting bounds.
+
+    The probe reads O(64) blocks, never the dataset — hashing all
+    content at every warm construction would cost the cold scan the
+    warm start exists to avoid. The even spread catches reshuffles,
+    re-blockings and bulk rewrites anywhere in the layout; an edit
+    confined to unprobed blocks that also preserves every per-block
+    tuple count is the accepted residual risk of this trade.
+    """
+    src = as_block_source(source)
+    probe = np.unique(
+        np.linspace(0, src.num_blocks - 1, min(src.num_blocks, 64)).astype(np.int64)
+    )
+    wd = src.fetch(probe, pad_to=len(probe))
+    fp = hashlib.sha256()
+    fp.update(np.ascontiguousarray(np.asarray(src.tuples_per_block, np.int64)).tobytes())
+    for leaf in (wd.z, wd.x, wd.bitmap):
+        fp.update(np.ascontiguousarray(jax.device_get(leaf)).tobytes())
+    payload = (
+        "fastmatch-cache-v1",
+        (spec.v_z, spec.v_x, spec.max_queries, spec.criterion, spec.k_cap),
+        (src.num_blocks, src.block_size),
+        fp.hexdigest(),
+    )
+    return _checkpoint_config_hash(payload)
 
 
 def init_cursor(num_blocks: int) -> SampleCursor:
@@ -529,6 +602,7 @@ class SharedCountsScheduler:
 
         rng = np.random.default_rng(seed)
         start = start_block if start_block is not None else int(rng.integers(nb))
+        self._start = start  # persisted by export_cache: the visit order
         self.order = np.roll(np.arange(nb), -start)  # cyclic visit order
 
         self.state = init_multi_state(spec)
@@ -580,6 +654,78 @@ class SharedCountsScheduler:
         self.tuples_read = int(cursor.tuples_read)
         self._delta_upper = np.asarray(delta_upper)
         self.host_syncs += 1
+
+    # -- warm-start persistence --------------------------------------------
+
+    def export_cache(self) -> CacheSnapshot:
+        """Snapshot the durable (target-independent) serving state.
+
+        Consistent by construction at any time: counts and cursor are
+        both outputs of the same fused dispatch, and the host handles
+        here always point at the LATEST dispatched round — so even with
+        ``poll_every > 1`` a snapshot never interleaves a round's counts
+        with a different round's read_mask. Live query slots are not
+        exported (see `CacheSnapshot`).
+        """
+        return CacheSnapshot(
+            counts=self.state.counts,
+            n=self.state.n,
+            read_mask=self.cursor.read_mask,
+            blocks_read=self.cursor.blocks_read,
+            blocks_considered=self.cursor.blocks_considered,
+            tuples_read=self.cursor.tuples_read,
+            rounds=self.cursor.rounds,
+            passes=jnp.asarray(self.passes, jnp.int32),
+            start=jnp.asarray(self._start, jnp.int32),
+        )
+
+    def import_cache(self, snap: CacheSnapshot) -> None:
+        """Adopt a restored warm cache: shared counts + sampling cursor +
+        pass/visit-order bookkeeping.
+
+        Must run before any admission — importing under live tickets
+        would invalidate their admission-time counter snapshots, so that
+        is refused. Counts/n are placed with the scheduler's existing
+        sharding (the GSPMD mesh placement when constructed with
+        ``mesh=``); cursor leaves are re-materialized host-side so their
+        placement matches a freshly constructed scheduler's.
+        """
+        if self.tickets:
+            raise RuntimeError("import_cache requires a scheduler with no live queries")
+        nb = self.source.num_blocks
+        counts = jnp.asarray(snap.counts)
+        if counts.shape != (self.spec.v_z, self.spec.v_x):
+            raise ValueError(
+                f"snapshot counts shape {counts.shape} != "
+                f"{(self.spec.v_z, self.spec.v_x)} — wrong dataset/spec for this cache"
+            )
+        read_mask, blocks_read, blocks_considered, tuples_read, rounds, passes, start = (
+            jax.device_get(
+                (snap.read_mask, snap.blocks_read, snap.blocks_considered,
+                 snap.tuples_read, snap.rounds, snap.passes, snap.start)
+            )
+        )
+        read_mask = np.asarray(read_mask, bool)
+        if read_mask.shape != (nb,):
+            raise ValueError(
+                f"snapshot read_mask covers {read_mask.shape[0]} blocks, "
+                f"dataset has {nb} — wrong layout for this cache"
+            )
+        self.state = self.state._replace(
+            counts=jax.device_put(counts.astype(jnp.float32), self.state.counts.sharding),
+            n=jax.device_put(jnp.asarray(snap.n, jnp.float32), self.state.n.sharding),
+        )
+        self.cursor = SampleCursor(
+            read_mask=jnp.asarray(read_mask),
+            blocks_read=jnp.asarray(blocks_read, jnp.int32),
+            blocks_considered=jnp.asarray(blocks_considered, jnp.int32),
+            tuples_read=jnp.asarray(tuples_read, jnp.int32),
+            rounds=jnp.asarray(rounds, jnp.int32),
+        )
+        self._start = int(start)
+        self.order = np.roll(np.arange(nb), -self._start)
+        self.passes = int(passes)
+        self._sync()  # refresh every host mirror from the restored cursor
 
     # -- admission / retirement -------------------------------------------
 

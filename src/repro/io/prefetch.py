@@ -10,11 +10,17 @@ unbounded memory growth.
 
 Abandonment-safe: closing the stream generator mid-pass (a query
 retires, the budget cuts) signals the worker and drains the queue so
-a blocked `put` can never leak the thread.
+a blocked `put` can never leak the thread. A worker exception is
+re-raised at the consumer's next pull while the stream is being
+driven; if the stream was already closed when the worker failed (the
+error has nowhere to surface) it is logged instead of vanishing, as is
+a worker that outlives the closing join (blocked inside a slow
+``inner.fetch``).
 """
 
 from __future__ import annotations
 
+import logging
 import queue
 import threading
 from typing import Iterable, Iterator, Optional
@@ -25,15 +31,24 @@ from repro.io.block_source import BlockSource, WindowData
 
 __all__ = ["PrefetchSource"]
 
+logger = logging.getLogger(__name__)
+
 
 class PrefetchSource:
-    """Wrap any `BlockSource`; `stream` overlaps fetch with consumption."""
+    """Wrap any `BlockSource`; `stream` overlaps fetch with consumption.
 
-    def __init__(self, inner: BlockSource, *, depth: int = 2):
+    ``join_timeout`` bounds how long closing a stream waits for the
+    worker thread (it is a daemon, so an over-timeout worker cannot
+    hang interpreter exit — but it IS still running, which is why the
+    timeout warns instead of passing silently).
+    """
+
+    def __init__(self, inner: BlockSource, *, depth: int = 2, join_timeout: float = 10.0):
         if depth < 1:
             raise ValueError(f"need depth >= 1, got {depth}")
         self.inner = inner
         self.depth = depth
+        self.join_timeout = join_timeout
         self.num_blocks = inner.num_blocks
         self.block_size = inner.block_size
         self.v_z = inner.v_z
@@ -49,6 +64,7 @@ class PrefetchSource:
         windows = list(windows)
         q: queue.Queue = queue.Queue(maxsize=self.depth)
         stop = threading.Event()
+        failure: list = []  # the worker's exception, whether or not it queued
 
         def _put(item) -> bool:
             while not stop.is_set():
@@ -65,17 +81,23 @@ class PrefetchSource:
                     if stop.is_set() or not _put(("data", self.inner.fetch(win, pad_to))):
                         return
                 _put(("done", None))
-            except BaseException as exc:  # surfaced in the consumer
+            except BaseException as exc:
+                # Recorded unconditionally: the queued ("error", ...) item
+                # is lost when the consumer is already closing (stop set,
+                # queue being drained), and an error must never vanish.
+                failure.append(exc)
                 _put(("error", exc))
 
         t = threading.Thread(target=worker, name="block-prefetch", daemon=True)
         t.start()
+        raised = False
         try:
             while True:
                 kind, payload = q.get()
                 if kind == "done":
                     break
                 if kind == "error":
+                    raised = True
                     raise payload
                 yield payload
         finally:
@@ -85,4 +107,15 @@ class PrefetchSource:
                     q.get_nowait()
             except queue.Empty:
                 pass
-            t.join(timeout=10)
+            t.join(timeout=self.join_timeout)
+            if t.is_alive():
+                logger.warning(
+                    "prefetch worker still running %.1fs after stream close "
+                    "(blocked in %s.fetch?); abandoning daemon thread",
+                    self.join_timeout, type(self.inner).__name__,
+                )
+            elif failure and not raised:
+                logger.warning(
+                    "prefetch worker failed after the stream was closed; "
+                    "dropping: %r", failure[0],
+                )

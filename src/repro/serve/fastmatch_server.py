@@ -40,19 +40,61 @@ Per-query `MatchResult` counters (blocks/tuples/rounds) measure what
 was read WHILE that query was live — the amortized per-query I/O the
 `benchmarks/serve_throughput.py` benchmark compares against running
 `run_engine` once per query.
+
+Warm-start persistence (the restart analogue of the serving speedup):
+with ``checkpoint_dir=`` the server snapshots the warm cache — the
+shared counts matrix, per-candidate row sums, the without-replacement
+``read_mask`` + read counters, and the pass/visit-order bookkeeping —
+crash-atomically through `repro.checkpoint.CheckpointManager`, bound to
+the dataset layout + `MultiQuerySpec` by a config hash so a stale cache
+is rejected at restore rather than silently corrupting bounds. The
+contract:
+
+  persisted   — everything target-independent (`multiquery.CacheSnapshot`):
+                counts, n, read_mask, blocks/tuples/rounds counters,
+                passes, the cyclic visit-order offset
+  re-queued   — live query slots and the pending queue are NOT
+                persisted: in-flight queries must be resubmitted after a
+                restart. Because sampling is target-independent this is
+                lossless — a resubmitted query admits against the full
+                restored counts with its full shared ``n_i``, exactly as
+                a late query on an uninterrupted server would.
+  consistency — autosave runs at poll boundaries (after retirements),
+                never per window. Even with ``poll_every > 1`` a
+                snapshot is internally consistent: counts and cursor are
+                outputs of the SAME fused dispatch, so the saved
+                read_mask always matches the saved counts — staleness
+                with respect to still-live queries only shortens the
+                warm prefix, it never invalidates it.
+
+`MatchServer.restore(dataset, checkpoint_dir=...)` is warm
+construction: build, load the newest complete snapshot (elastic across
+mesh shapes via `core.distributed.cache_pspecs` when ``mesh=`` is
+given), and serve — a restarted server answers a fresh query with
+bit-identical counts/tau/result to an uninterrupted one
+(tests/test_warm_restart.py; benchmarks/warm_restart.py measures the
+tuples-per-query gap vs a cold restart).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import pathlib
 import time
 from collections import deque
 from typing import Deque, Dict, Optional
 
+import jax
 import numpy as np
 
+from repro.checkpoint import CheckpointManager
 from repro.core.engine import MatchResult
-from repro.core.multiquery import MultiQuerySpec, QueryOutcome, SharedCountsScheduler
+from repro.core.multiquery import (
+    MultiQuerySpec,
+    QueryOutcome,
+    SharedCountsScheduler,
+    cache_config_hash,
+)
 from repro.io import as_block_source
 
 __all__ = ["MatchQuery", "MatchServer"]
@@ -88,10 +130,22 @@ class MatchServer:
         mesh=None,
         model_axis: str = "model",
         k_cap: Optional[int] = None,
+        checkpoint_dir: Optional[str] = None,
+        autosave_every: int = 8,
+        autosave_rounds: Optional[int] = None,
+        checkpoint_keep_last: int = 3,
     ):
         # k_cap: static bound on any query's k — lets the per-slot
         # deviation assignment use a (k_cap+1)-element top_k instead of
         # V_Z order stats; submissions with k > k_cap are rejected.
+        #
+        # checkpoint_dir: enable warm-start persistence (see module
+        # docstring). autosave_every: snapshot after this many query
+        # retirements (0 disables retirement-cadence autosave);
+        # autosave_rounds: additionally snapshot whenever this many new
+        # device rounds have run since the last save. Both fire at poll
+        # boundaries, off the per-window hot path; `save_cache()` forces
+        # a snapshot at any time.
         source = as_block_source(dataset)
         self.spec = MultiQuerySpec(
             v_z=source.v_z,
@@ -112,6 +166,19 @@ class MatchServer:
             model_axis=model_axis,
         )
         self.max_passes = max_passes
+        self._mesh = mesh
+        self._model_axis = model_axis
+        self._manager: Optional[CheckpointManager] = None
+        if checkpoint_dir is not None:
+            self._manager = CheckpointManager(
+                checkpoint_dir,
+                keep_last=checkpoint_keep_last,
+                config_hash=cache_config_hash(self.scheduler.source, self.spec),
+            )
+        self.autosave_every = autosave_every
+        self.autosave_rounds = autosave_rounds
+        self._retired_since_save = 0
+        self._rounds_at_save = 0
         self.pending: Deque[MatchQuery] = deque()
         self.results: Dict[int, MatchResult] = {}
         self._rid_of_qid: Dict[int, int] = {}
@@ -169,6 +236,8 @@ class MatchServer:
                 continue  # already collected
             del self.scheduler.outcomes[qid]
             self.results[rid] = self._to_result(rid, out)
+            self._retired_since_save += 1
+        self._maybe_autosave()
 
     def _to_result(self, rid: int, out: QueryOutcome) -> MatchResult:
         wall = time.perf_counter() - self._submit_time.pop(rid)
@@ -183,6 +252,83 @@ class MatchServer:
             exact=out.exact,
             passes=out.passes,
         )
+
+    # -- warm-start persistence --------------------------------------------
+
+    def _maybe_autosave(self) -> None:
+        """Autosave cadence check — runs at poll/retirement boundaries
+        (from `_collect`), never inside the window loop."""
+        if self._manager is None:
+            return
+        if self.autosave_every and self._retired_since_save >= self.autosave_every:
+            self.save_cache()
+            return
+        if self.autosave_rounds:
+            # Host mirror of the device round counter: fresh as of the
+            # last poll, which is exactly the cadence autosave rides.
+            if self.scheduler.rounds - self._rounds_at_save >= self.autosave_rounds:
+                self.save_cache()
+
+    def save_cache(self) -> pathlib.Path:
+        """Crash-atomically persist the warm cache; returns the step dir.
+
+        The checkpoint step is the device round counter, so snapshot
+        steps are monotone across restarts (the restored cursor resumes
+        the count) and a newer snapshot always supersedes an older one.
+        A save with no new rounds since the last snapshot bumps past the
+        newest existing step instead of re-writing it: overwriting the
+        step that LATEST points at would reopen the crash window the
+        atomic-rename protocol exists to close.
+        """
+        if self._manager is None:
+            raise RuntimeError("MatchServer was constructed without checkpoint_dir")
+        snap = self.scheduler.export_cache()
+        step = int(jax.device_get(snap.rounds))
+        newest = self._manager.latest_step()
+        if newest is not None and step <= newest:
+            step = newest + 1
+        path = self._manager.save(snap, step)
+        self._retired_since_save = 0
+        self._rounds_at_save = step
+        return path
+
+    def restore_cache(self, step: Optional[int] = None) -> None:
+        """Adopt the newest complete snapshot (or ``step``) from
+        ``checkpoint_dir``. Stale snapshots — different dataset layout
+        or `MultiQuerySpec` — are rejected with ValueError via the
+        config hash; a missing checkpoint raises FileNotFoundError.
+        With ``mesh=`` the candidate-sharded leaves are re-placed onto
+        THIS server's mesh shape, whatever shape wrote the snapshot
+        (elastic restart)."""
+        if self._manager is None:
+            raise RuntimeError("MatchServer was constructed without checkpoint_dir")
+        like = self.scheduler.export_cache()  # fresh-state shapes/dtypes
+        if self._mesh is not None:
+            from repro.core.distributed import cache_pspecs
+
+            snap = self._manager.restore_resharded(
+                like, self._mesh, cache_pspecs(model_axis=self._model_axis), step=step
+            )
+        else:
+            snap = self._manager.restore(like, step=step)
+        self.scheduler.import_cache(snap)
+        self._retired_since_save = 0
+        self._rounds_at_save = self.scheduler.rounds
+        self._pass_order = None  # step()'s cursor must rebuild from the restored mask
+
+    @classmethod
+    def restore(
+        cls, dataset, *, checkpoint_dir: str, step: Optional[int] = None, **kwargs
+    ) -> "MatchServer":
+        """Warm construction: build a server over ``dataset`` and adopt
+        the newest complete snapshot in ``checkpoint_dir``. Serving
+        parameters (lookahead, poll_every, ...) come from ``kwargs``
+        exactly as in `__init__`; the snapshot only has to match the
+        dataset layout and the spec-shaping arguments
+        (max_queries/criterion/k_cap), which the config hash enforces."""
+        server = cls(dataset, checkpoint_dir=checkpoint_dir, **kwargs)
+        server.restore_cache(step=step)
+        return server
 
     # -- serving loop ------------------------------------------------------
 
@@ -265,6 +411,13 @@ class MatchServer:
         done = len(self.results)
         return {
             "queries_done": done,
+            # queued (waiting for a slot) vs live (admitted, burning I/O)
+            # are different saturation signals: a deep queue with full
+            # slots means add capacity; empty queue with live queries is
+            # just work in flight. queries_pending stays as their sum
+            # for dashboard compatibility.
+            "queries_queued": len(self.pending),
+            "queries_live": sched.num_live,
             "queries_pending": len(self.pending) + sched.num_live,
             "total_blocks_read": sched.blocks_read,
             "total_tuples_read": sched.tuples_read,

@@ -83,6 +83,44 @@ class TestFaultTolerance:
         with pytest.raises(ValueError):
             m2.restore(_state())
 
+    def test_same_step_resave_never_deletes_before_commit(self, tmp_path):
+        """Re-saving an existing step must move the old dir aside
+        (atomic rename), not rmtree it — a kill in the commit window
+        leaves the old snapshot's bits on disk. After a successful
+        commit the aside is cleaned up and the new content wins."""
+        m = CheckpointManager(str(tmp_path))
+        m.save(_state(0), 5)
+        m.save(_state(1), 5)
+        back = m.restore(_state(0), step=5)
+        np.testing.assert_array_equal(
+            np.asarray(back["params"]["w"]), np.asarray(_state(1)["params"]["w"]))
+        assert not list(tmp_path.glob("*.old.tmp.*"))
+        assert m.all_steps() == [5]
+
+    def test_gc_sweeps_orphaned_tmp_dirs(self, tmp_path):
+        """A process killed mid-save leaves step_<N>.tmp.<pid> behind;
+        the next successful save's GC must sweep it (dead owner pid)."""
+        m = CheckpointManager(str(tmp_path))
+        dead_dir = tmp_path / "step_7.tmp.4190001"
+        dead_dir.mkdir()
+        (dead_dir / "arr_0.npy").write_bytes(b"junk")
+        dead_latest = tmp_path / "LATEST.tmp.4190002"
+        dead_latest.write_text("step_7")
+        m.save(_state(), 8)
+        assert not dead_dir.exists()
+        assert not dead_latest.exists()
+        assert m.all_steps() == [8]
+
+    def test_gc_spares_live_owners_tmp(self, tmp_path):
+        """A tmp dir owned by a LIVE process (a concurrent saver) must
+        survive the sweep — only orphans are garbage."""
+        m = CheckpointManager(str(tmp_path))
+        live = tmp_path / f"step_9.tmp.{os.getppid()}"
+        live.mkdir()
+        m.save(_state(), 10)
+        assert live.exists()
+        assert m.all_steps() == [10]  # and it never counts as a step
+
 
 class TestElasticReshard:
     def test_restore_resharded_roundtrip(self, tmp_path):

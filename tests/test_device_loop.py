@@ -371,3 +371,72 @@ class TestBlockSourceContract:
         windows = [np.arange(2), np.array([blocked.num_blocks + 5])]  # 2nd is OOB
         with pytest.raises(IndexError):
             list(src.stream(windows, pad_to=2))
+
+    def test_prefetch_error_after_close_is_logged_not_lost(self, dataset, caplog):
+        """A worker exception racing the generator's close has nowhere to
+        re-raise — it must be logged, never silently dropped."""
+        import logging
+        import threading
+
+        _, _, blocked = dataset
+        release = threading.Event()
+        inner = InMemorySource(blocked, device_resident=False)
+
+        class FailsAfterClose:
+            num_blocks = inner.num_blocks
+            block_size = inner.block_size
+            v_z = inner.v_z
+            v_x = inner.v_x
+            tuples_per_block = inner.tuples_per_block
+
+            def fetch(self, win, pad_to=None):
+                if len(win) == 1:  # the second (sentinel) window
+                    release.wait(5)  # don't fail until the consumer closed
+                    raise RuntimeError("backend fell over")
+                return inner.fetch(win, pad_to)
+
+            def stream(self, windows, pad_to=None):
+                for w in windows:
+                    yield self.fetch(w, pad_to)
+
+        src = PrefetchSource(FailsAfterClose(), depth=1)
+        g = src.stream([np.arange(2), np.array([0])], pad_to=2)
+        next(g)
+        with caplog.at_level(logging.WARNING, logger="repro.io.prefetch"):
+            release.set()
+            g.close()
+        assert any("prefetch worker failed" in r.message for r in caplog.records)
+
+    def test_prefetch_join_timeout_warns(self, dataset, caplog):
+        """A worker stuck in a slow inner.fetch outlives the closing
+        join; that must produce a warning, not a silent abandon."""
+        import logging
+        import threading
+
+        _, _, blocked = dataset
+        hang = threading.Event()
+        inner = InMemorySource(blocked, device_resident=False)
+
+        class SlowSource:
+            num_blocks = inner.num_blocks
+            block_size = inner.block_size
+            v_z = inner.v_z
+            v_x = inner.v_x
+            tuples_per_block = inner.tuples_per_block
+
+            def fetch(self, win, pad_to=None):
+                if len(win) == 1:
+                    hang.wait(5)  # longer than join_timeout below
+                return inner.fetch(win, pad_to)
+
+            def stream(self, windows, pad_to=None):
+                for w in windows:
+                    yield self.fetch(w, pad_to)
+
+        src = PrefetchSource(SlowSource(), depth=1, join_timeout=0.2)
+        g = src.stream([np.arange(2), np.array([0])], pad_to=2)
+        next(g)
+        with caplog.at_level(logging.WARNING, logger="repro.io.prefetch"):
+            g.close()
+        hang.set()  # let the worker finish and exit
+        assert any("still running" in r.message for r in caplog.records)

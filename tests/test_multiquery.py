@@ -235,7 +235,14 @@ class TestServerEquivalence:
         spec_s, ds, blocked = dataset
         server = MatchServer(blocked, max_queries=2, lookahead=256, seed=3)
         rids = [server.submit(t, k=K, eps=EPS, delta=DELTA) for t in targets]
+        # metrics must split saturation (full slots) from backlog (queue):
+        # 4 submitted into 2 slots -> all 4 queued until the drain admits
+        m = server.metrics
+        assert m["queries_queued"] == len(targets) and m["queries_live"] == 0
+        assert m["queries_pending"] == m["queries_queued"] + m["queries_live"]
         results = server.run_until_idle()
+        m = server.metrics
+        assert m["queries_queued"] == m["queries_live"] == m["queries_pending"] == 0
         assert set(results) == set(rids)
         for rid in rids:
             assert len(results[rid].ids) == K
