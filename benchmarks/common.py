@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.core.engine import EngineConfig, run_engine
 from repro.core.histsim import HistSimParams
-from repro.data.layout import BlockedDataset, block_layout
+from repro.data.layout import block_layout
 from repro.data.synth import SynthSpec, make_dataset
 
 # paper defaults (Sec 5.2)

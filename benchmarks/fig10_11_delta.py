@@ -6,7 +6,6 @@ Theorem 1's insensitivity to delta (the 1/|V_X| exponent in the log).
 
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import delta_d, get_query, run_variant
 

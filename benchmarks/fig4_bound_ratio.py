@@ -8,7 +8,6 @@ equivalently we report n_ours/n_waggoner at fixed eps).
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import bounds
 

@@ -19,6 +19,7 @@ from benchmarks import (
     fig9_lookahead,
     fig10_11_delta,
     guarantees,
+    pump_throughput,
     roofline_report,
     serve_throughput,
     stats_throughput,
@@ -37,15 +38,23 @@ SUITES = {
     "serve": serve_throughput.run,
     "stats": stats_throughput.run,
     "restart": warm_restart.run,
+    "pump": pump_throughput.run,
 }
 
 
 def main() -> None:
     wanted = sys.argv[1:] or list(SUITES)
+    # Validate the whole request up front: a typo'd name must exit
+    # non-zero BEFORE any suite runs, not after minutes of earlier
+    # suites (a CI step asking for a renamed benchmark must fail the
+    # workflow, never silently measure the wrong thing).
+    unknown = [name for name in wanted if name not in SUITES]
+    if unknown:
+        raise SystemExit(
+            f"unknown suite(s) {unknown}; have {sorted(SUITES)}"
+        )
     rows: list = []
     for name in wanted:
-        if name not in SUITES:
-            raise SystemExit(f"unknown suite {name!r}; have {list(SUITES)}")
         t0 = time.time()
         SUITES[name](rows)
         print(f"# suite {name} done in {time.time() - t0:.1f}s", file=sys.stderr)

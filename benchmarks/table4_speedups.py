@@ -40,6 +40,6 @@ def run(csv_rows: list) -> None:
             dict(
                 name=f"table4.{q}.scan",
                 us_per_call=scan_wall * 1e6,
-                derived=f"speedup=1.00x tuples_frac=1.000 blocks_frac=1.000 exact=1 delta_d=0.0",
+                derived="speedup=1.00x tuples_frac=1.000 blocks_frac=1.000 exact=1 delta_d=0.0",
             )
         )

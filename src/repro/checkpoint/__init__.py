@@ -1,1 +1,3 @@
 from repro.checkpoint.manager import CheckpointManager, config_hash
+
+__all__ = ["CheckpointManager", "config_hash"]

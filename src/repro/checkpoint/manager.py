@@ -168,16 +168,16 @@ class CheckpointManager:
                 f"checkpoint config hash {meta['config_hash']} != expected {self.config_hash}"
             )
         names, leaves, treedef = _flatten_with_names(like)
-        saved_names = [l["name"] for l in meta["leaves"]]
+        saved_names = [leaf["name"] for leaf in meta["leaves"]]
         if names != saved_names:
             raise ValueError(
                 "checkpoint structure mismatch: "
                 f"{set(saved_names) ^ set(names) or 'ordering differs'}"
             )
         arrays = []
-        for i, l in enumerate(meta["leaves"]):
+        for i, leaf in enumerate(meta["leaves"]):
             a = np.load(path / f"arr_{i}.npy")
-            if l["dtype"] == "bfloat16":
+            if leaf["dtype"] == "bfloat16":
                 import ml_dtypes
 
                 a = a.view(ml_dtypes.bfloat16)

@@ -6,3 +6,12 @@ from repro.configs.base import (
     get_smoke_config,
     list_archs,
 )
+
+__all__ = [
+    "ModelConfig",
+    "Shape",
+    "SHAPES",
+    "get_config",
+    "get_smoke_config",
+    "list_archs",
+]

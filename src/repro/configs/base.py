@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Optional, Tuple
+from typing import Tuple
 
 __all__ = ["ModelConfig", "Shape", "SHAPES", "get_config", "get_smoke_config", "list_archs"]
 

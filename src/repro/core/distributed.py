@@ -42,6 +42,17 @@ Sample bytes never cross the network; this is what makes the engine
 scale to 1000+ nodes. `SharedCountsScheduler(mesh=...)` is the GSPMD
 (sharding-propagation) counterpart for serving; this explicit
 shard_map round is the collective-auditable data-parallel ingest path.
+
+The PUMP round (`make_pump_round`) is the self-feeding variant of the
+same collective structure, built for `repro.core.pump.DistributedPump`:
+each data-parallel worker brings its OWN window of block data (gathered
+shard-locally from its `ShardedSource`), and the round additionally
+runs the AnyActive marking against the replicated union active words
+and advances a `SampleCursor` whose ``read_mask`` is sharded over the
+data axes (`cursor_pspecs`) so each worker owns exactly its contiguous
+global-id range. Per-round cross-worker traffic stays the single psum
+of the (counts, rows, counter-increment) pytree + the tiny stats
+all-gather — window bytes never leave the worker that read them.
 """
 
 from __future__ import annotations
@@ -52,15 +63,27 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.multiquery import CacheSnapshot, MultiQuerySpec, MultiQueryState, apply_stats
+from repro.core.multiquery import (
+    CacheSnapshot,
+    MultiQuerySpec,
+    MultiQueryState,
+    SampleCursor,
+    apply_stats,
+)
+from repro.core.policies import mark_window
+from repro.io import WindowData
 from repro.kernels import ops
 
 __all__ = [
     "cache_pspecs",
+    "cursor_pspecs",
     "make_distributed_round",
+    "make_pump_ingest_round",
+    "make_pump_round",
     "multi_state_pspecs",
     "place_cache",
     "shard_map_compat",
+    "window_pspecs",
 ]
 
 
@@ -129,6 +152,38 @@ def cache_pspecs(model_axis: str = "model") -> CacheSnapshot:
     )
 
 
+def cursor_pspecs(data_axes=("data",)) -> SampleCursor:
+    """PartitionSpecs for the pump's device `SampleCursor`: the
+    without-replacement ``read_mask`` is sharded over the data axes —
+    worker w owns exactly the mask slice for its contiguous global-id
+    block range [w*per, (w+1)*per) (`ShardedSource` ordering, padded to
+    per * num_workers) — while the monotone counters stay replicated
+    (every worker holds the mesh-wide totals; the round psums the
+    per-worker increments)."""
+    return SampleCursor(
+        read_mask=P(tuple(data_axes)),
+        blocks_read=P(),
+        blocks_considered=P(),
+        tuples_read=P(),
+        rounds=P(),
+    )
+
+
+def window_pspecs(data_axes=("data",)) -> WindowData:
+    """PartitionSpecs for a pump round's `WindowData`: dim 0 (the
+    lookahead-window axis) carries one window per data-parallel worker,
+    so each worker's shard IS the window its own `ShardedSource`
+    gathered; block contents replicate over the model axis."""
+    d = tuple(data_axes)
+    return WindowData(
+        indices=P(d),
+        z=P(d, None),
+        x=P(d, None),
+        bitmap=P(d, None),
+        valid=P(d),
+    )
+
+
 def place_cache(snap: CacheSnapshot, mesh, model_axis: str = "model") -> CacheSnapshot:
     """Host-gather a (possibly sharded) snapshot and re-place it on
     ``mesh`` per `cache_pspecs` — the in-memory reshard twin of the
@@ -172,35 +227,213 @@ def make_distributed_round(
     sample_axes = tuple(data_axes)
 
     def round_fn(state: MultiQueryState, z_idx: jax.Array, x_idx: jax.Array):
-        # ---- ingest: local histogram restricted to this model shard's rows,
-        # row-sum delta emitted from the same kernel pass
-        shard_id = jax.lax.axis_index(model_axis)
-        z_local = z_idx - shard_id * vz_shard
-        z_local = jnp.where((z_local >= 0) & (z_local < vz_shard), z_local, -1)
-        h, rows = ops.histogram_with_rowsums(
-            z_local, x_idx, v_z=vz_shard, v_x=spec.v_x,
-            impl=histogram_impl, onehot_dtype=onehot_dtype,
+        state = _shard_ingest(
+            state, z_idx, x_idx, spec=spec, vz_shard=vz_shard,
+            sample_axes=sample_axes, model_axis=model_axis,
+            histogram_impl=histogram_impl, onehot_dtype=onehot_dtype,
         )
-        # one fused all-reduce of the (counts, row-sum) delta pair over
-        # the data axes — a single psum call, XLA fuses the pytree
-        h, rows = jax.lax.psum((h, rows), sample_axes)
-        counts = state.counts + h
-        n = state.n + rows
-
-        # ---- statistics: row-local Q-batched tau (ONE kernel pass over
-        # this shard's counts rows scores every slot; unoccupied slots
-        # masked to the init value), tiny all-gather, then the shared
-        # vmapped per-query assignment
-        tau_shard = ops.l1_distance_multi(counts, state.q_hat)  # (Q, vz_shard)
-        tau_shard = jnp.where(state.occupied[:, None], tau_shard, 1.0)
-        tau = jax.lax.all_gather(tau_shard, model_axis, axis=1, tiled=True)
-        n_full = jax.lax.all_gather(n, model_axis, axis=0, tiled=True)
-        state = state._replace(counts=counts, n=n)
-        return apply_stats(state, tau, n_full, spec=spec)
+        return _shard_stats(state, spec=spec, model_axis=model_axis)
 
     specs = multi_state_pspecs(model_axis=model_axis)
     sample_spec = P(sample_axes)
     shmapped = shard_map_compat(
         round_fn, mesh, in_specs=(specs, sample_spec, sample_spec), out_specs=specs
+    )
+    return jax.jit(shmapped)
+
+
+def _shard_ingest(
+    state: MultiQueryState,
+    z_idx: jax.Array,
+    x_idx: jax.Array,
+    *,
+    spec: MultiQuerySpec,
+    vz_shard: int,
+    sample_axes,
+    model_axis: str,
+    histogram_impl: str,
+    onehot_dtype,
+) -> MultiQueryState:
+    """Ingest (inside shard_map): local histogram restricted to this
+    model shard's candidate rows — an index shift, not a gather — with
+    the row-sum delta emitted from the same kernel pass, then ONE fused
+    all-reduce of the (counts, row-sum) delta pair over the data axes
+    (a single psum call, XLA fuses the pytree)."""
+    shard_id = jax.lax.axis_index(model_axis)
+    z_local = z_idx - shard_id * vz_shard
+    z_local = jnp.where((z_local >= 0) & (z_local < vz_shard), z_local, -1)
+    h, rows = ops.histogram_with_rowsums(
+        z_local, x_idx, v_z=vz_shard, v_x=spec.v_x,
+        impl=histogram_impl, onehot_dtype=onehot_dtype,
+    )
+    h, rows = jax.lax.psum((h, rows), sample_axes)
+    return state._replace(counts=state.counts + h, n=state.n + rows)
+
+
+def _shard_stats(
+    state: MultiQueryState, *, spec: MultiQuerySpec, model_axis: str
+) -> MultiQueryState:
+    """Statistics tail (inside shard_map): row-local Q-batched tau (ONE
+    kernel pass over this shard's counts rows scores every slot;
+    unoccupied slots masked to the init value), tiny all-gather, then
+    the shared vmapped per-query assignment."""
+    tau_shard = ops.l1_distance_multi(state.counts, state.q_hat)  # (Q, vz_shard)
+    tau_shard = jnp.where(state.occupied[:, None], tau_shard, 1.0)
+    tau = jax.lax.all_gather(tau_shard, model_axis, axis=1, tiled=True)
+    n_full = jax.lax.all_gather(state.n, model_axis, axis=0, tiled=True)
+    return apply_stats(state, tau, n_full, spec=spec)
+
+
+def _worker_lo(mesh, data_axes, blocks_per_worker: int) -> jax.Array:
+    """This worker's first owned global block id (inside shard_map).
+
+    The linear worker index folds the data axes in mesh-row-major order
+    — the same order `P(tuple(data_axes))` lays shards out in — so the
+    read_mask shard at linear position w is exactly the id range of
+    `ShardedSource(dataset, num_workers, w)`."""
+    wid = jax.lax.axis_index(data_axes[0])
+    for ax in data_axes[1:]:
+        wid = wid * mesh.shape[ax] + jax.lax.axis_index(ax)
+    return wid * blocks_per_worker
+
+
+def _advance_shard_cursor(
+    cursor: SampleCursor,
+    wd: WindowData,
+    marks: jax.Array,
+    local_idx: jax.Array,
+    sample_axes,
+) -> SampleCursor:
+    """Per-worker twin of `multiquery._advance_cursor`: the scatter hits
+    only this worker's read_mask shard (local ids; window padding
+    repeats an owned id with a zero contribution), while the counter
+    increments are psum'd so every worker carries the mesh-wide totals
+    — one fused collective for the whole increment pytree."""
+    read_mask = (
+        cursor.read_mask.astype(jnp.int32).at[local_idx].add(marks.astype(jnp.int32)) > 0
+    )
+    inc_read, inc_considered, inc_tuples = jax.lax.psum(
+        (
+            jnp.sum(marks.astype(jnp.int32)),
+            jnp.sum(wd.valid.astype(jnp.int32)),
+            jnp.sum(jnp.where(marks, jnp.sum((wd.z >= 0).astype(jnp.int32), axis=1), 0)),
+        ),
+        sample_axes,
+    )
+    return SampleCursor(
+        read_mask=read_mask,
+        blocks_read=cursor.blocks_read + inc_read,
+        blocks_considered=cursor.blocks_considered + inc_considered,
+        tuples_read=cursor.tuples_read + inc_tuples,
+        rounds=cursor.rounds + 1,
+    )
+
+
+def _check_vz(spec: MultiQuerySpec, mesh, model_axis: str) -> int:
+    model_size = mesh.shape[model_axis]
+    if spec.v_z % model_size != 0:
+        raise ValueError(
+            f"V_Z={spec.v_z} must divide by model axis size {model_size} "
+            "(pad candidates to a multiple; padded rows are never sampled)"
+        )
+    return spec.v_z // model_size
+
+
+def make_pump_round(
+    mesh,
+    spec: MultiQuerySpec,
+    *,
+    blocks_per_worker: int,
+    data_axes=("data",),
+    model_axis: str = "model",
+    policy: str = "anyactive",
+    histogram_impl: str = "auto",
+    onehot_dtype=jnp.float32,
+):
+    """Build the jitted shard_map PUMP round: the fused sampling round
+    (`multiquery.fused_round` semantics — mark + gather-mask + ingest +
+    stats + read bookkeeping) where each data-parallel worker feeds
+    itself from its own window.
+
+    Signature of the returned function: (state, cursor, wd) ->
+    (state, cursor), with state placed per `multi_state_pspecs`, cursor
+    per `cursor_pspecs` (read_mask length blocks_per_worker *
+    num_workers) and wd a `WindowData` whose dim 0 stacks one
+    per-worker window, placed per `window_pspecs`.
+
+    Semantics are pinned to `fused_round` on the union of the worker
+    windows: marking uses the replicated union active words and each
+    worker's own read_mask shard, and an all-empty round (no block
+    marked mesh-wide) leaves the statistics — including ``round_idx`` —
+    untouched. The empty-round guard is a branchless select rather than
+    fused_round's lax.cond (collectives inside a cond branch do not
+    lower reliably under shard_map); selected leaves are bit-identical
+    either way.
+    """
+    vz_shard = _check_vz(spec, mesh, model_axis)
+    sample_axes = tuple(data_axes)
+
+    def round_fn(state: MultiQueryState, cursor: SampleCursor, wd: WindowData):
+        local_idx = wd.indices - _worker_lo(mesh, sample_axes, blocks_per_worker)
+        marks = mark_window(wd.bitmap, state.union_words, policy=policy)
+        marks = marks & wd.valid & ~cursor.read_mask[local_idx]
+        zw = jnp.where(marks[:, None], wd.z, jnp.int32(-1)).reshape(-1)
+        xw = jnp.where(marks[:, None], wd.x, jnp.int32(-1)).reshape(-1)
+        new_state = _shard_ingest(
+            state, zw, xw, spec=spec, vz_shard=vz_shard,
+            sample_axes=sample_axes, model_axis=model_axis,
+            histogram_impl=histogram_impl, onehot_dtype=onehot_dtype,
+        )
+        new_state = _shard_stats(new_state, spec=spec, model_axis=model_axis)
+        n_marked = jax.lax.psum(jnp.sum(marks.astype(jnp.int32)), sample_axes)
+        state = jax.tree.map(
+            lambda new, old: jnp.where(n_marked > 0, new, old), new_state, state
+        )
+        return state, _advance_shard_cursor(cursor, wd, marks, local_idx, sample_axes)
+
+    specs = multi_state_pspecs(model_axis=model_axis)
+    cspecs = cursor_pspecs(data_axes=sample_axes)
+    wspecs = window_pspecs(data_axes=sample_axes)
+    shmapped = shard_map_compat(
+        round_fn, mesh, in_specs=(specs, cspecs, wspecs), out_specs=(specs, cspecs)
+    )
+    return jax.jit(shmapped)
+
+
+def make_pump_ingest_round(
+    mesh,
+    spec: MultiQuerySpec,
+    *,
+    blocks_per_worker: int,
+    data_axes=("data",),
+    model_axis: str = "model",
+    histogram_impl: str = "auto",
+    onehot_dtype=jnp.float32,
+):
+    """Build the jitted shard_map exact-completion round — the pump twin
+    of `multiquery.ingest_round`: every unread block of each worker's
+    window goes into the shared counts, no marking, no stats (the
+    caller runs one stats step after the last chunk). Same signature
+    and placement contract as `make_pump_round`."""
+    vz_shard = _check_vz(spec, mesh, model_axis)
+    sample_axes = tuple(data_axes)
+
+    def round_fn(state: MultiQueryState, cursor: SampleCursor, wd: WindowData):
+        local_idx = wd.indices - _worker_lo(mesh, sample_axes, blocks_per_worker)
+        marks = wd.valid & ~cursor.read_mask[local_idx]
+        zw = jnp.where(marks[:, None], wd.z, jnp.int32(-1)).reshape(-1)
+        xw = jnp.where(marks[:, None], wd.x, jnp.int32(-1)).reshape(-1)
+        state = _shard_ingest(
+            state, zw, xw, spec=spec, vz_shard=vz_shard,
+            sample_axes=sample_axes, model_axis=model_axis,
+            histogram_impl=histogram_impl, onehot_dtype=onehot_dtype,
+        )
+        return state, _advance_shard_cursor(cursor, wd, marks, local_idx, sample_axes)
+
+    specs = multi_state_pspecs(model_axis=model_axis)
+    cspecs = cursor_pspecs(data_axes=sample_axes)
+    wspecs = window_pspecs(data_axes=sample_axes)
+    shmapped = shard_map_compat(
+        round_fn, mesh, in_specs=(specs, cspecs, wspecs), out_specs=(specs, cspecs)
     )
     return jax.jit(shmapped)

@@ -17,7 +17,7 @@ A.3.1  No-index operation = the ScanMatch variant (core/engine.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

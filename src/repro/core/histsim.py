@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -74,7 +74,6 @@ def init_state(params: HistSimParams, target: jax.Array) -> HistSimState:
     target = jnp.asarray(target, jnp.float32)
     q_hat = target / jnp.maximum(jnp.sum(target), 1e-30)
     v_z, v_x = params.v_z, params.v_x
-    w = -(-v_z // 32)
     return HistSimState(
         counts=jnp.zeros((v_z, v_x), jnp.float32),
         n=jnp.zeros((v_z,), jnp.float32),

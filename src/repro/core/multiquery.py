@@ -606,7 +606,7 @@ class SharedCountsScheduler:
         self.order = np.roll(np.arange(nb), -start)  # cyclic visit order
 
         self.state = init_multi_state(spec)
-        self.cursor = init_cursor(nb)
+        self.cursor = self._place_cursor(init_cursor(nb))
         if mesh is not None:
             from jax.sharding import NamedSharding
             from repro.core.distributed import multi_state_pspecs
@@ -634,6 +634,27 @@ class SharedCountsScheduler:
         # the steady-state cadence poll_every controls — excludes the
         # per-query fixed polls at admission
         self.loop_syncs = 0
+
+    # -- device placement hooks (overridden by the data-parallel pump) -----
+
+    def _place_cursor(self, cursor: SampleCursor) -> SampleCursor:
+        """Place a freshly built (host-side) sampling cursor on device.
+
+        The base scheduler keeps the cursor on the default device;
+        `repro.core.pump.DistributedPump` overrides this to pad the
+        ``read_mask`` to the worker grid and shard it over the data
+        axes (`distributed.cursor_pspecs`). Called from __init__ and
+        `import_cache`, so a restored snapshot always lands with the
+        same placement as a fresh cursor."""
+        return cursor
+
+    def _global_read_mask(self) -> jax.Array:
+        """The (num_blocks,) global read_mask view of the device cursor
+        — what `export_cache` persists. The pump overrides this to
+        gather its data-sharded mask and strip the worker-grid padding,
+        so snapshots stay interchangeable across pump widths and with
+        the single-stream scheduler."""
+        return self.cursor.read_mask
 
     # -- host/device synchronisation --------------------------------------
 
@@ -670,7 +691,7 @@ class SharedCountsScheduler:
         return CacheSnapshot(
             counts=self.state.counts,
             n=self.state.n,
-            read_mask=self.cursor.read_mask,
+            read_mask=self._global_read_mask(),
             blocks_read=self.cursor.blocks_read,
             blocks_considered=self.cursor.blocks_considered,
             tuples_read=self.cursor.tuples_read,
@@ -715,13 +736,13 @@ class SharedCountsScheduler:
             counts=jax.device_put(counts.astype(jnp.float32), self.state.counts.sharding),
             n=jax.device_put(jnp.asarray(snap.n, jnp.float32), self.state.n.sharding),
         )
-        self.cursor = SampleCursor(
+        self.cursor = self._place_cursor(SampleCursor(
             read_mask=jnp.asarray(read_mask),
             blocks_read=jnp.asarray(blocks_read, jnp.int32),
             blocks_considered=jnp.asarray(blocks_considered, jnp.int32),
             tuples_read=jnp.asarray(tuples_read, jnp.int32),
             rounds=jnp.asarray(rounds, jnp.int32),
-        )
+        ))
         self._start = int(start)
         self.order = np.roll(np.arange(nb), -self._start)
         self.passes = int(passes)
@@ -833,6 +854,37 @@ class SharedCountsScheduler:
 
     # -- the loop ----------------------------------------------------------
 
+    def _open_pass_stream(self, pass_order: np.ndarray) -> tuple:
+        """(round stream, number of rounds) for one pass over
+        ``pass_order``. The base scheduler chunks the global visit
+        order into lookahead windows served by its single source; the
+        data-parallel pump overrides this to zip one shard-local window
+        stream per worker. The returned stream must support .close()."""
+        windows = [
+            pass_order[p : p + self.window]
+            for p in range(0, pass_order.size, self.window)
+        ]
+        return self.source.stream(windows, pad_to=self.window), len(windows)
+
+    def _dispatch_round(self, wd: WindowData) -> None:
+        """One fused sampling round over prepared window data (no host
+        sync — polling is the loop's cadence decision)."""
+        self.state, self.cursor = fused_round(
+            self.state, self.cursor, wd, spec=self.spec, policy=self.policy
+        )
+
+    def _fetch_window(self, win: np.ndarray) -> WindowData:
+        """Window data for one ad-hoc (global-id) window — the pump
+        overrides this to split the window by block ownership and
+        assemble the per-worker shards."""
+        return self.source.fetch(win, pad_to=max(self.window, win.size))
+
+    def _dispatch_ingest(self, wd: WindowData) -> None:
+        """One exact-completion ingest round over prepared window data."""
+        self.state, self.cursor = ingest_round(
+            self.state, self.cursor, wd, spec=self.spec
+        )
+
     def run_window(self, win: np.ndarray) -> int:
         """Mark one lookahead window against the union active set and
         ingest the marked blocks; polls immediately (poll_every=1
@@ -842,10 +894,7 @@ class SharedCountsScheduler:
         if win.size == 0:
             return 0
         before = self.blocks_read
-        wd = self.source.fetch(win, pad_to=max(self.window, win.size))
-        self.state, self.cursor = fused_round(
-            self.state, self.cursor, wd, spec=self.spec, policy=self.policy
-        )
+        self._dispatch_round(self._fetch_window(win))
         self._sync()
         self.loop_syncs += 1
         return self.blocks_read - before
@@ -864,12 +913,12 @@ class SharedCountsScheduler:
         if remaining.size == 0:
             return
         self.passes += 1
-        for s in range(0, remaining.size, self.window):
-            chunk = remaining[s : s + self.window]
-            wd = self.source.fetch(chunk, pad_to=self.window)
-            self.state, self.cursor = ingest_round(
-                self.state, self.cursor, wd, spec=self.spec
-            )
+        stream, _ = self._open_pass_stream(remaining)
+        try:
+            for wd in stream:
+                self._dispatch_ingest(wd)
+        finally:
+            stream.close()
         self.state = stats_step(self.state, spec=self.spec)
         self._sync()
 
@@ -910,17 +959,11 @@ class SharedCountsScheduler:
             self.passes += 1
             pass_start_rounds = self.rounds
             pass_start_blocks = self.blocks_read
-            windows = [
-                pass_order[p : p + self.window]
-                for p in range(0, pass_order.size, self.window)
-            ]
-            stream = self.source.stream(windows, pad_to=self.window)
+            stream, n_rounds = self._open_pass_stream(pass_order)
             try:
                 for dispatched, wd in enumerate(stream, start=1):
-                    self.state, self.cursor = fused_round(
-                        self.state, self.cursor, wd, spec=self.spec, policy=self.policy
-                    )
-                    if dispatched % self.poll_every == 0 or dispatched == len(windows):
+                    self._dispatch_round(wd)
+                    if dispatched % self.poll_every == 0 or dispatched == n_rounds:
                         self._sync()
                         self.loop_syncs += 1
                         self._poll_terminated()

@@ -6,3 +6,12 @@ from repro.distributed.sharding import (
     data_axes,
     cache_pspecs,
 )
+
+__all__ = [
+    "param_pspecs",
+    "param_shardings",
+    "batch_pspec",
+    "guard_pspec",
+    "data_axes",
+    "cache_pspecs",
+]

@@ -19,7 +19,6 @@ by tests/test_pipeline.py and launch/dryrun.py --pipeline.
 
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

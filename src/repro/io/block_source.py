@@ -26,7 +26,13 @@ __all__ = ["BlockSource", "InMemorySource", "ShardedSource", "WindowData", "as_b
 
 
 class WindowData(NamedTuple):
-    """One padded lookahead window of block data, ready for the round."""
+    """One padded lookahead window of block data, ready for the round.
+
+    Leaves are device arrays from a device-resident source and host
+    numpy arrays from a host-resident one (jit converts at dispatch —
+    one host→device transfer, paid exactly once; the data-parallel pump
+    relies on this to assemble per-worker windows on host and place the
+    sharded result in a single device_put)."""
 
     indices: jax.Array  # (L,) i32 global block ids (padding repeats a real id)
     z: jax.Array  # (L, B) i32 candidate ids, -1 padded within blocks
@@ -94,13 +100,10 @@ class InMemorySource:
         if self.device_resident:
             j = jnp.asarray(idx)
             return WindowData(j, self._z[j], self._x[j], self._bitmap[j], jnp.asarray(valid))
-        return WindowData(
-            jnp.asarray(idx),
-            jnp.asarray(self._z[idx]),
-            jnp.asarray(self._x[idx]),
-            jnp.asarray(self._bitmap[idx]),
-            jnp.asarray(valid),
-        )
+        # Host-resident: stay numpy — the consumer decides when the one
+        # host→device transfer happens (jit dispatch, or the pump's
+        # sharded device_put of the assembled multi-worker window).
+        return WindowData(idx, self._z[idx], self._x[idx], self._bitmap[idx], valid)
 
     def stream(
         self, windows: Iterable[np.ndarray], pad_to: Optional[int] = None
@@ -152,7 +155,10 @@ class ShardedSource(InMemorySource):
                 f"block ids outside shard range [{self.lo}, {self.hi}); filter with owned()"
             )
         wd = super().fetch(win - self.lo, pad_to)
-        return wd._replace(indices=wd.indices + jnp.int32(self.lo))
+        # match the leaf residency: a jnp scalar would silently drag a
+        # host-resident window onto the default device
+        lo = (np.int32 if isinstance(wd.indices, np.ndarray) else jnp.int32)(self.lo)
+        return wd._replace(indices=wd.indices + lo)
 
 
 def as_block_source(data) -> BlockSource:

@@ -2,3 +2,5 @@
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
 from repro.kernels import ops
+
+__all__ = ["ops"]

@@ -39,7 +39,7 @@ import traceback
 
 import jax
 
-from repro.configs.base import ALIASES, SHAPES, ModelConfig, get_config, list_archs
+from repro.configs.base import ALIASES, SHAPES, get_config, list_archs
 from repro.launch.hlo_parse import parse_hlo_collectives
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import build_case

@@ -16,7 +16,7 @@ from jax.tree_util import DictKey, SequenceKey
 
 from repro.configs.base import SHAPES, ModelConfig, Shape, get_config
 from repro.distributed import sharding as shr
-from repro.models.model_zoo import Model, get_model
+from repro.models.model_zoo import get_model
 from repro.optimizer import get_optimizer
 from repro.train.step import make_train_step
 from repro.train.train_state import TrainState

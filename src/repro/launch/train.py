@@ -13,14 +13,12 @@ smoke / examples, and under a mesh (pjit) when one is provided.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import signal
 import sys
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import CheckpointManager, config_hash
 from repro.configs.base import ALIASES, get_config, get_smoke_config

@@ -337,7 +337,7 @@ def attention_chunked(
     hkv = spec.num_kv_heads
 
     def body(carry, xs):
-        m, l, acc = carry  # (B,H,Sq), (B,H,Sq), (B,Sq,H,hd) f32
+        m, denom, acc = carry  # (B,H,Sq), (B,H,Sq), (B,Sq,H,hd) f32
         kci, vci, pci = xs
         if grouped:
             q5 = qf.reshape(b, sq, hkv, groups, hd)
@@ -352,7 +352,7 @@ def attention_chunked(
         m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
         p = jnp.exp(s - m_safe[..., None])
         alpha = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_safe))
-        l_new = l * alpha + jnp.sum(p, axis=-1)
+        denom_new = denom * alpha + jnp.sum(p, axis=-1)
         if grouped:
             p5 = p.astype(qf.dtype).reshape(b, hkv, groups, sq, -1)
             pv = jnp.einsum("bhgqk,bkhd->bqhgd", p5, vci, preferred_element_type=jnp.float32)
@@ -361,14 +361,14 @@ def attention_chunked(
             vci = _repeat_kv(vci, groups)
             pv = jnp.einsum("bhqk,bkhd->bqhd", p.astype(qf.dtype), vci, preferred_element_type=jnp.float32)
         acc_new = acc * alpha.transpose(0, 2, 1)[..., None] + pv
-        return (m_new, l_new, acc_new), None
+        return (m_new, denom_new, acc_new), None
 
     m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
     l0 = jnp.zeros((b, h, sq), jnp.float32)
     acc0 = jnp.zeros((b, sq, h, hd), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kc, vc, pc))
-    l = jnp.maximum(l, 1e-30)
-    out = acc / l.transpose(0, 2, 1)[..., None]
+    (m, denom, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kc, vc, pc))
+    denom = jnp.maximum(denom, 1e-30)
+    out = acc / denom.transpose(0, 2, 1)[..., None]
     return out.astype(q.dtype)
 
 
@@ -408,7 +408,6 @@ def decode_attention(
 
     Returns (attn_out (B,1,H*hd pre-wo-proj applied), new_k, new_v).
     """
-    b = x.shape[0]
     q, k, v = qkv_proj(params, x, spec)
     if rope_theta:
         q = apply_rope(q, pos[:, None], rope_theta)

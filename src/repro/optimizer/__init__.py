@@ -3,6 +3,15 @@ from repro.optimizer.adafactor import adafactor
 from repro.optimizer.base import Optimizer, clip_by_global_norm
 from repro.optimizer.compress import compress_gradients
 
+__all__ = [
+    "Optimizer",
+    "adafactor",
+    "adamw",
+    "clip_by_global_norm",
+    "compress_gradients",
+    "get_optimizer",
+]
+
 
 def get_optimizer(name: str, lr, **kw) -> Optimizer:
     if name == "adamw":

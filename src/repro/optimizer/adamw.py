@@ -25,7 +25,8 @@ def adamw(
     lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
 
     def init(params):
-        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def zeros(p):
+            return jnp.zeros(p.shape, jnp.float32)
         return {
             "mu": jax.tree.map(zeros, params),
             "nu": jax.tree.map(zeros, params),

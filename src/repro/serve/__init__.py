@@ -1,2 +1,4 @@
 from repro.serve.engine import ServeEngine, Request
 from repro.serve.fastmatch_server import MatchQuery, MatchServer
+
+__all__ = ["ServeEngine", "Request", "MatchQuery", "MatchServer"]

@@ -13,8 +13,7 @@ lower: `serve_step` = one decode tick against a seq_len-deep cache.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp

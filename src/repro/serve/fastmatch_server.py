@@ -34,7 +34,12 @@ device by at most ``poll_every - 1`` windows (bounded staleness; the
 generalized paper-Sec 4.2 relaxation) in exchange for ~``poll_every``x
 fewer device↔host round-trips (`scheduler.host_syncs`). With ``mesh``
 given, the shared counts matrix is candidate-sharded over the mesh's
-model axis, so one server spans a data-parallel mesh.
+model axis, so one server spans a data-parallel mesh; add ``pump=True``
+to replace the single gathered window stream with one `ShardedSource`
+stream per data-parallel worker feeding the explicit-collective pump
+round — ingest bandwidth then scales with worker count (see the
+GSPMD-vs-pump dispatch table and per-round collective inventory in
+`repro.core.pump`).
 
 Per-query `MatchResult` counters (blocks/tuples/rounds) measure what
 was read WHILE that query was live — the amortized per-query I/O the
@@ -129,6 +134,9 @@ class MatchServer:
         poll_every: int = 1,
         mesh=None,
         model_axis: str = "model",
+        pump: bool = False,
+        data_axes=("data",),
+        prefetch: bool = False,
         k_cap: Optional[int] = None,
         checkpoint_dir: Optional[str] = None,
         autosave_every: int = 8,
@@ -139,6 +147,15 @@ class MatchServer:
         # deviation assignment use a (k_cap+1)-element top_k instead of
         # V_Z order stats; submissions with k > k_cap are rejected.
         #
+        # pump: with mesh given, serve through the data-parallel
+        # `repro.core.pump.DistributedPump` — one ShardedSource window
+        # stream per worker along ``data_axes`` feeding the explicit
+        # shard_map round — instead of the GSPMD fused round over one
+        # global stream (see the dispatch table in core/pump.py).
+        # Requires the raw BlockedDataset. ``prefetch`` overlaps the
+        # next-window gather with the current round — per worker in
+        # pump mode, on the single stream otherwise.
+        #
         # checkpoint_dir: enable warm-start persistence (see module
         # docstring). autosave_every: snapshot after this many query
         # retirements (0 disables retirement-cadence autosave);
@@ -146,25 +163,62 @@ class MatchServer:
         # device rounds have run since the last save. Both fire at poll
         # boundaries, off the per-window hot path; `save_cache()` forces
         # a snapshot at any time.
-        source = as_block_source(dataset)
-        self.spec = MultiQuerySpec(
-            v_z=source.v_z,
-            v_x=source.v_x,
-            max_queries=max_queries,
-            criterion=criterion,
-            k_cap=k_cap,
-        )
-        self.scheduler = SharedCountsScheduler(
-            source,
-            self.spec,
-            policy=policy,
-            window=lookahead,
-            seed=seed,
-            start_block=start_block,
-            poll_every=poll_every,
-            mesh=mesh,
-            model_axis=model_axis,
-        )
+        if pump:
+            if mesh is None:
+                raise ValueError("pump=True is the data-parallel mesh path; pass mesh=")
+            from repro.core.pump import DistributedPump
+
+            self.spec = MultiQuerySpec(
+                v_z=dataset.v_z,
+                v_x=dataset.v_x,
+                max_queries=max_queries,
+                criterion=criterion,
+                k_cap=k_cap,
+            )
+            self.scheduler = DistributedPump(
+                dataset,
+                self.spec,
+                mesh=mesh,
+                data_axes=data_axes,
+                model_axis=model_axis,
+                policy=policy,
+                window=lookahead,
+                seed=seed,
+                start_block=start_block,
+                poll_every=poll_every,
+                prefetch=prefetch,
+            )
+        else:
+            if tuple(data_axes) != ("data",):
+                raise ValueError(
+                    "data_axes only shapes the data-parallel pump; pass pump=True"
+                )
+            source = as_block_source(dataset)
+            if prefetch:
+                # Same semantics as pump mode: overlap the next window's
+                # gather with the current round (worthwhile when the
+                # source is host-resident or remote).
+                from repro.io import PrefetchSource
+
+                source = PrefetchSource(source)
+            self.spec = MultiQuerySpec(
+                v_z=source.v_z,
+                v_x=source.v_x,
+                max_queries=max_queries,
+                criterion=criterion,
+                k_cap=k_cap,
+            )
+            self.scheduler = SharedCountsScheduler(
+                source,
+                self.spec,
+                policy=policy,
+                window=lookahead,
+                seed=seed,
+                start_block=start_block,
+                poll_every=poll_every,
+                mesh=mesh,
+                model_axis=model_axis,
+            )
         self.max_passes = max_passes
         self._mesh = mesh
         self._model_axis = model_axis

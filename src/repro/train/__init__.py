@@ -1,2 +1,4 @@
 from repro.train.step import make_train_step, make_eval_step, cross_entropy_loss
 from repro.train.train_state import TrainState
+
+__all__ = ["make_train_step", "make_eval_step", "cross_entropy_loss", "TrainState"]

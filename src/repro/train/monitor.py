@@ -47,7 +47,6 @@ class ActivationMonitor:
     reference: Optional[np.ndarray] = None  # (num_tensors, bins)
 
     def _histogram(self, tensors: Dict[str, jax.Array]) -> np.ndarray:
-        n_t = len(self.names)
         rows = []
         for name in self.names:
             ids = _bin_ids(tensors[name], self.lo, self.hi, self.bins)

@@ -11,13 +11,11 @@ the step increments, metrics record the skip).
 
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 from repro.models.model_zoo import Model
 from repro.optimizer.base import Optimizer, clip_by_global_norm, global_norm
 from repro.train.train_state import TrainState

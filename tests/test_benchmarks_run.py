@@ -1,0 +1,55 @@
+"""The benchmark aggregator's CLI contract.
+
+A typo'd suite name must exit non-zero BEFORE any suite runs: CI steps
+invoke `python -m benchmarks.run <names>`, and a renamed benchmark that
+silently ran nothing (or ran the other requested suites first and then
+died after minutes) would green-light a workflow that measured nothing.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+import benchmarks.run as brun
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+class TestUnknownSuiteName:
+    def test_exits_before_running_anything(self, monkeypatch):
+        """One bad name in a multi-suite request must abort up front —
+        even the VALID names requested alongside it must not run."""
+        ran = []
+        monkeypatch.setattr(
+            brun, "SUITES", {"good": lambda rows: ran.append("good")}
+        )
+        monkeypatch.setattr(sys, "argv", ["run", "good", "nonsense"])
+        with pytest.raises(SystemExit) as exc:
+            brun.main()
+        assert "nonsense" in str(exc.value)
+        assert exc.value.code != 0
+        assert ran == []  # the valid suite was NOT run first
+
+    def test_known_names_listed_in_error(self, monkeypatch):
+        monkeypatch.setattr(brun, "SUITES", {"only": lambda rows: None})
+        monkeypatch.setattr(sys, "argv", ["run", "bogus"])
+        with pytest.raises(SystemExit, match="only"):
+            brun.main()
+
+    @pytest.mark.slow
+    def test_cli_process_exits_nonzero(self):
+        """End to end through the real interpreter: the exact command a
+        CI step would run."""
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "no_such_bench"],
+            capture_output=True, text=True, env=env, cwd=REPO, timeout=300,
+        )
+        assert out.returncode != 0
+        assert "no_such_bench" in out.stderr
+
+    def test_pump_suite_registered(self):
+        assert "pump" in brun.SUITES

@@ -1,8 +1,6 @@
 """Theorem 1 bound: algebraic properties + empirical coverage."""
 
-import math
 
-import jax.numpy as jnp
 import numpy as np
 import pytest
 pytest.importorskip("hypothesis")  # property tests need it; skip on minimal installs

@@ -1,0 +1,119 @@
+"""The benchmark-regression gate's comparison logic (no jax needed)."""
+
+import json
+
+import pytest
+
+from benchmarks.check_regression import GATES, Gate, check_suite, main
+
+
+def _write(path, payload):
+    path.write_text(json.dumps(payload))
+
+
+@pytest.fixture()
+def dirs(tmp_path):
+    base = tmp_path / "baselines"
+    res = tmp_path / "results"
+    base.mkdir()
+    res.mkdir()
+    return base, res
+
+
+PUMP_BASE = dict(
+    config=dict(smoke=True),
+    sync_reduction_w8=7.4, rounds_reduction_w8=7.4, recall_min=1.0,
+    w1_equivalent=True, ok=True,
+)
+
+
+def _check_pump(base_dir, res_dir):
+    return check_suite("pump", results_dir=res_dir, baselines_dir=base_dir)
+
+
+class TestGate:
+    def test_min_gate_tolerates_small_drift(self):
+        g = Gate("m", "min", 0.25)
+        assert g.check(8.0, 7.0) == ""       # within 25%
+        assert "fell below" in g.check(8.0, 5.0)
+
+    def test_max_gate(self):
+        g = Gate("m", "max", 0.10)
+        assert g.check(1.0, 1.05) == ""
+        assert "rose above" in g.check(1.0, 1.5)
+
+    def test_exact_gate(self):
+        g = Gate("m", "exact")
+        assert g.check(True, True) == ""
+        assert "!=" in g.check(True, False)
+
+
+class TestCheckSuite:
+    def test_pass_when_metrics_hold(self, dirs):
+        base, res = dirs
+        _write(base / "BENCH_pump.json", PUMP_BASE)
+        _write(res / "BENCH_pump.json", {**PUMP_BASE, "sync_reduction_w8": 6.9})
+        assert _check_pump(base, res) == []
+
+    def test_fails_on_regressed_metric(self, dirs):
+        base, res = dirs
+        _write(base / "BENCH_pump.json", PUMP_BASE)
+        _write(res / "BENCH_pump.json", {**PUMP_BASE, "sync_reduction_w8": 2.0})
+        failures = _check_pump(base, res)
+        assert len(failures) == 1 and "sync_reduction_w8" in failures[0]
+
+    def test_fails_on_broken_equivalence(self, dirs):
+        base, res = dirs
+        _write(base / "BENCH_pump.json", PUMP_BASE)
+        _write(res / "BENCH_pump.json", {**PUMP_BASE, "w1_equivalent": False})
+        assert any("w1_equivalent" in f for f in _check_pump(base, res))
+
+    def test_missing_result_is_a_failure(self, dirs):
+        """A smoke step that silently didn't run must fail the gate,
+        not vacuously pass it."""
+        base, res = dirs
+        _write(base / "BENCH_pump.json", PUMP_BASE)
+        failures = _check_pump(base, res)
+        assert len(failures) == 1 and "missing result" in failures[0]
+
+    def test_missing_baseline_is_a_failure(self, dirs):
+        base, res = dirs
+        _write(res / "BENCH_pump.json", PUMP_BASE)
+        assert any("missing baseline" in f for f in _check_pump(base, res))
+
+    def test_smoke_flag_mismatch_refused(self, dirs):
+        """A full-config report must never be judged against a smoke
+        baseline (different workloads, meaningless comparison)."""
+        base, res = dirs
+        _write(base / "BENCH_pump.json", PUMP_BASE)
+        _write(res / "BENCH_pump.json",
+               {**PUMP_BASE, "config": dict(smoke=False)})
+        assert any("smoke" in f for f in _check_pump(base, res))
+
+    def test_missing_gated_key_is_a_failure(self, dirs):
+        base, res = dirs
+        _write(base / "BENCH_pump.json", PUMP_BASE)
+        slim = {k: v for k, v in PUMP_BASE.items() if k != "recall_min"}
+        _write(res / "BENCH_pump.json", slim)
+        assert any("recall_min" in f for f in _check_pump(base, res))
+
+
+class TestCli:
+    def test_unknown_suite_exits_nonzero(self, capsys):
+        assert main(["no_such_suite"]) == 2
+        assert "no_such_suite" in capsys.readouterr().err
+
+    def test_committed_baselines_cover_every_gated_suite(self):
+        """The gate table and the committed baselines must not drift
+        apart — a gated suite without a baseline fails in CI."""
+        from benchmarks.check_regression import BASELINES
+
+        for fname, gates in GATES.values():
+            path = BASELINES / fname
+            assert path.exists(), f"missing committed baseline {path}"
+            base = json.loads(path.read_text())
+            for gate in gates:
+                assert gate.key in base, (
+                    f"baseline {fname} lacks gated key {gate.key!r}")
+            assert base.get("config", {}).get("smoke") is True, (
+                f"baseline {fname} must be a smoke-run snapshot")

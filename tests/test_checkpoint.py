@@ -1,15 +1,13 @@
 """Checkpoint manager: atomicity, resume, GC, elastic reshard."""
 
-import json
 import os
-import pathlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import CheckpointManager, config_hash
+from repro.checkpoint import CheckpointManager
 
 
 def _state(seed=0):

@@ -189,7 +189,6 @@ class TestPipelineParallel:
 class TestShardingRules:
     def test_param_specs_resolution(self):
         import jax
-        import jax.numpy as jnp
         from jax.sharding import Mesh, PartitionSpec as P
 
         from repro.configs import get_smoke_config

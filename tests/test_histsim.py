@@ -1,6 +1,5 @@
 """HistSim + FastMatch engine: end-to-end correctness and guarantees."""
 
-import dataclasses
 
 import numpy as np
 import pytest

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_config, get_smoke_config, list_archs, SHAPES
+from repro.configs import get_config, get_smoke_config, list_archs
 from repro.models.model_zoo import get_model
 from repro.models.transformer import embed_tokens
 from repro.optimizer import get_optimizer
@@ -140,7 +140,8 @@ class TestLongContextArchs:
         model = get_model(cfg)
         cache = jax.eval_shape(lambda: model.init_cache(1, 8192))
         max_kv = max(
-            (l.shape[1] for l in jax.tree.leaves(cache) if hasattr(l, "shape") and len(l.shape) == 4),
+            (leaf.shape[1] for leaf in jax.tree.leaves(cache)
+             if hasattr(leaf, "shape") and len(leaf.shape) == 4),
             default=0,
         )
         assert max_kv <= cfg.local_window

@@ -159,13 +159,13 @@ class TestSlotMasking:
 
         spec_s, ds, blocked = dataset
         recycled = MatchServer(blocked, max_queries=1, lookahead=256, seed=42)
-        first = recycled.submit(targets[0], k=K, eps=EPS, delta=DELTA)
+        recycled.submit(targets[0], k=K, eps=EPS, delta=DELTA)
         recycled.run_until_idle()  # slot 0 retires here
         late = recycled.submit(targets[2], k=3, eps=0.1, delta=DELTA)
         r_late = recycled.run_until_idle()[late]
 
         fresh = MatchServer(blocked, max_queries=1, lookahead=256, seed=42)
-        warm = fresh.submit(targets[0], k=K, eps=EPS, delta=DELTA)
+        fresh.submit(targets[0], k=K, eps=EPS, delta=DELTA)
         fresh.run_until_idle()
         # same warm cache, but this server's slot 0 has never been
         # cleared+reused before `late2` (fresh scheduler state otherwise)
@@ -259,7 +259,7 @@ class TestServerEquivalence:
         )
 
         server = MatchServer(blocked, max_queries=2, lookahead=512, seed=7)
-        first = server.submit(targets[0], k=K, eps=EPS, delta=DELTA)
+        server.submit(targets[0], k=K, eps=EPS, delta=DELTA)
         server.run_until_idle()
         warm_tuples = server.metrics["total_tuples_read"]
         assert warm_tuples > 0

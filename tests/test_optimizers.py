@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.optimizer import adafactor, adamw, get_optimizer
+from repro.optimizer import adafactor, adamw
 from repro.optimizer.base import clip_by_global_norm, global_norm
 from repro.optimizer.compress import (
     compress_gradients,

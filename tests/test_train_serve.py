@@ -54,7 +54,7 @@ class TestTrainLoop:
                   select_k=4, log_fn=lambda *_: None, seed=3)
         full = train_loop(steps=20, **kw)
         # run 10, "crash", resume to 20
-        part = train_loop(steps=10, ckpt_dir=str(tmp_path / "ck"), ckpt_every=10, **kw)
+        train_loop(steps=10, ckpt_dir=str(tmp_path / "ck"), ckpt_every=10, **kw)
         resumed = train_loop(steps=20, ckpt_dir=str(tmp_path / "ck"), ckpt_every=10, **kw)
         w_full = jax.tree.leaves(full["state"].params)[0]
         w_res = jax.tree.leaves(resumed["state"].params)[0]

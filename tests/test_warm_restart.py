@@ -343,3 +343,89 @@ class TestReshardedRestore:
         assert res["eq_18"] and res["eq_84"] and res["sharded"], res
         assert res["ids_18"] and res["ids_84"], res
         assert res["tuples"][0] == res["tuples"][1] == res["tuples"][2], res
+
+    def test_pump_reshard_8_to_4_workers(self, tmp_path):
+        """Pump-mode elastic restart: a cache checkpointed under an
+        8-worker pump restores into a 4-worker pump (and into the
+        single-stream GSPMD server — snapshots are global, not
+        per-worker) with bit-identical counts/read_mask/counters, and a
+        fresh query covered by the warm cache answers with bit-identical
+        counts/tau/result on every restored width. (A query that must
+        KEEP sampling sees each width's own per-worker visit
+        interleaving — answers agree as matching sets, compared below —
+        but the warm prefix itself must be width-invariant bit for bit.)
+        """
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        code = textwrap.dedent(f"""
+            import json, numpy as np, jax
+            from jax.sharding import Mesh
+            from repro.data.layout import block_layout
+            from repro.data.synth import SynthSpec, make_dataset, perturb_distribution
+            from repro.serve.fastmatch_server import MatchServer
+
+            ckpt = {str(tmp_path)!r}
+            spec = SynthSpec(v_z=64, v_x=16, num_tuples=400_000, k=5, n_close=5,
+                             close_distance=0.02, far_distance=0.3, zipf_a=0.9, seed=5)
+            ds = make_dataset(spec)
+            blocked = block_layout(ds.z, ds.x, v_z=64, v_x=16, block_size=512, seed=5)
+            rng = np.random.default_rng(9)
+            kw = dict(max_queries=4, lookahead=64)
+
+            mesh8 = Mesh(np.array(jax.devices()).reshape(8, 1), ("data", "model"))
+            a = MatchServer(blocked, seed=3, checkpoint_dir=ckpt, mesh=mesh8,
+                            pump=True, **kw)
+            for d in (0.0, 0.01, 0.03):
+                a.submit(perturb_distribution(ds.target, d, rng) if d else ds.target,
+                         k=5, eps=0.08, delta=0.05)
+            a.run_until_idle()
+            a.save_cache()
+
+            mesh4 = Mesh(np.array(jax.devices()[:4]).reshape(4, 1), ("data", "model"))
+            b = MatchServer.restore(blocked, checkpoint_dir=ckpt, mesh=mesh4,
+                                    pump=True, **kw)
+            plain = MatchServer.restore(blocked, checkpoint_dir=ckpt, **kw)
+            eq = lambda x, y: bool(np.array_equal(np.asarray(x), np.asarray(y)))
+            restore_ok = (
+                eq(a.scheduler.state.counts, b.scheduler.state.counts)
+                and eq(a.scheduler.read_mask, b.scheduler.read_mask)
+                and eq(a.scheduler.state.counts, plain.scheduler.state.counts)
+                and a.scheduler.rounds == b.scheduler.rounds == plain.scheduler.rounds
+                and a.scheduler.tuples_read == b.scheduler.tuples_read
+                    == plain.scheduler.tuples_read)
+
+            # covered fresh query: zero new I/O on every width -> the
+            # whole answer (ids, tau, counts) must be bit-identical
+            covered = perturb_distribution(ds.target, 0.02, np.random.default_rng(4))
+            outs = []
+            for srv in (a, b, plain):
+                rid = srv.submit(covered, k=5, eps=0.08, delta=0.05)
+                outs.append(srv.run_until_idle()[rid])
+            ra, rb, rp = outs
+            covered_ok = (
+                eq(ra.ids, rb.ids) and eq(ra.ids, rp.ids)
+                and eq(ra.state.tau, rb.state.tau) and eq(ra.state.tau, rp.state.tau)
+                and ra.tuples_read == rb.tuples_read == rp.tuples_read == 0)
+
+            # demanding fresh query: must keep sampling; widths may
+            # interleave blocks differently but the matching SET agrees
+            hard = perturb_distribution(ds.target, 0.05, np.random.default_rng(11))
+            sets = []
+            for srv in (a, b, plain):
+                rid = srv.submit(hard, k=5, eps=0.04, delta=0.01)
+                r = srv.run_until_idle()[rid]
+                sets.append((sorted(r.ids.tolist()), r.exact))
+            print(json.dumps(dict(
+                restore_ok=restore_ok, covered_ok=covered_ok,
+                hard_ok=sets[0] == sets[1] == sets[2])))
+        """)
+        out = subprocess.run(
+            [sys.executable, "-c", code], capture_output=True, text=True, env=env,
+            timeout=900,
+        )
+        assert out.returncode == 0, out.stderr[-4000:]
+        res = json.loads(out.stdout.strip().splitlines()[-1])
+        assert res["restore_ok"], res
+        assert res["covered_ok"], res
+        assert res["hard_ok"], res
