@@ -24,6 +24,7 @@ from benchmarks import (
     serve_throughput,
     stats_throughput,
     table4_speedups,
+    telemetry_overhead,
     warm_restart,
 )
 
@@ -39,6 +40,7 @@ SUITES = {
     "stats": stats_throughput.run,
     "restart": warm_restart.run,
     "pump": pump_throughput.run,
+    "telemetry": telemetry_overhead.run,
 }
 
 

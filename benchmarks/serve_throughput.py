@@ -33,6 +33,7 @@ Set SERVE_BENCH_SMOKE=1 for the tiny CI configuration (same code path,
 from __future__ import annotations
 
 import os
+import pathlib
 import time
 
 import numpy as np
@@ -43,6 +44,7 @@ from repro.core.histsim import HistSimParams
 from repro.data.layout import block_layout
 from repro.data.synth import SynthSpec, make_dataset, perturb_distribution
 from repro.io import InMemorySource, PrefetchSource
+from repro.obs import Telemetry
 from repro.serve.fastmatch_server import MatchServer
 
 N_QUERIES = 8
@@ -76,15 +78,16 @@ def _recall(ids, truth: set) -> float:
     return len(set(ids.tolist()) & truth) / len(truth)
 
 
-def _serve(blocked, targets, *, poll_every: int, prefetch: bool):
+def _serve(blocked, targets, *, poll_every: int, prefetch: bool, telemetry=None):
     """One full shared-serving run; returns (server, rids, results, wall,
     loop_syncs_per64)."""
     source = InMemorySource(blocked)
     if prefetch:
-        source = PrefetchSource(source)
+        source = PrefetchSource(source, telemetry=telemetry)
     server = MatchServer(
         source, max_queries=N_QUERIES, lookahead=LOOKAHEAD, seed=200,
         poll_every=poll_every, k_cap=K,  # static k bound -> top_k selection
+        telemetry=telemetry,
     )
     sched = server.scheduler
     t0 = time.perf_counter()
@@ -131,8 +134,12 @@ def run(rows: list) -> None:
     # poll_every=8 + PrefetchSource is the device-resident configuration.
     _, rids1, results1, _, syncs64_poll1 = _serve(
         blocked, targets, poll_every=1, prefetch=False)
+    # The device-resident run carries telemetry: its JSONL trace is the
+    # CI serve-smoke artifact (and `repro.obs` is bit-equivalence-tested,
+    # so the observed run IS the benchmarked run).
+    telemetry = Telemetry()
     server, rids, results, shared_wall, syncs64_poll8 = _serve(
-        blocked, targets, poll_every=8, prefetch=True)
+        blocked, targets, poll_every=8, prefetch=True, telemetry=telemetry)
     shared_tuples = server.metrics["total_tuples_read"]
 
     truths = [_true_top_k(ds, t, K) for t in targets]
@@ -150,6 +157,11 @@ def run(rows: list) -> None:
     late = server.submit(targets[1], k=K, eps=EPS, delta=DELTA)
     server.run_until_idle()[late]
     late_tuples = server.metrics["total_tuples_read"] - before
+
+    # the full lifecycle trace of the shared run (incl. the late query)
+    results_dir = pathlib.Path(__file__).parent / "results"
+    results_dir.mkdir(exist_ok=True)
+    n_events = server.export_trace(results_dir / "serve_trace.jsonl")
 
     rows.append(dict(name="serve_solo_total",
                      us_per_call=1e6 * solo_wall, derived=solo_tuples))
@@ -175,7 +187,8 @@ def run(rows: list) -> None:
           f"solo={solo_tuples:,} ({solo_tuples / max(shared_tuples, 1):.1f}x), "
           f"recall {shared_acc:.3f} vs {solo_acc:.3f} (poll1 {poll1_acc:.3f}), "
           f"syncs/64win {syncs64_poll1:.1f} -> {syncs64_poll8:.1f} "
-          f"({sync_reduction:.1f}x) -> {'PASS' if ok else 'FAIL'}")
+          f"({sync_reduction:.1f}x), trace {n_events} events -> "
+          f"{'PASS' if ok else 'FAIL'}")
     if SMOKE and not ok:
         raise SystemExit("serve_throughput smoke FAILED")
 

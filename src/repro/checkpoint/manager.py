@@ -57,14 +57,54 @@ def _flatten_with_names(tree):
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, *, keep_last: int = 3, config_hash: str = ""):
+    def __init__(self, directory: str, *, keep_last: int = 3, config_hash: str = "",
+                 telemetry=None):
         self.dir = pathlib.Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep_last = keep_last
         self.config_hash = config_hash
+        self.telemetry = telemetry
+        # Observable even without a telemetry sink: a sweep that removes
+        # orphaned tmp dirs is a crashed save being cleaned up after,
+        # and a failed save is an event an operator must see — neither
+        # should be knowable only by grepping the filesystem.
+        self.gc_swept = 0
+        self.save_failures = 0
+        if telemetry is not None:
+            reg = telemetry.registry
+            self._c_saves = reg.counter(
+                "checkpoint_saves_total", "successful committed snapshots")
+            self._c_save_bytes = reg.counter(
+                "checkpoint_save_bytes_total", "bytes written by committed saves")
+            self._c_failures = reg.counter(
+                "checkpoint_save_failures_total", "saves that raised before commit")
+            self._c_gc_swept = reg.counter(
+                "checkpoint_gc_swept_total",
+                "orphaned tmp leftovers removed (dead-pid crashed saves)")
+            self._h_save = reg.histogram(
+                "checkpoint_save_seconds", help="wall time of a committed save")
 
     # ------------------------------------------------------------------ save
     def save(self, state: Any, step: int) -> pathlib.Path:
+        t0 = time.perf_counter()
+        try:
+            final, nbytes = self._save(state, step)
+        except BaseException:
+            self.save_failures += 1
+            if self.telemetry is not None:
+                self._c_failures.inc(1)
+            raise
+        if self.telemetry is not None:
+            dur = time.perf_counter() - t0
+            self._c_saves.inc(1)
+            self._c_save_bytes.inc(nbytes)
+            self._h_save.observe(dur)
+            self.telemetry.tracer.emit(
+                "checkpoint_save", step=int(step), bytes=nbytes, save_s=dur
+            )
+        return final
+
+    def _save(self, state: Any, step: int):
         names, leaves, _ = _flatten_with_names(state)
         tmp = self.dir / f"step_{step}.tmp.{os.getpid()}"
         if tmp.exists():
@@ -76,12 +116,14 @@ class CheckpointManager:
             "config_hash": self.config_hash,
             "leaves": [],
         }
+        nbytes = 0
         for i, (name, leaf) in enumerate(zip(names, leaves)):
             arr = np.asarray(jax.device_get(leaf))
             logical_dtype = str(arr.dtype)
             if logical_dtype == "bfloat16":  # npy has no bf16: store bits
                 arr = arr.view(np.uint16)
             np.save(tmp / f"arr_{i}.npy", arr)
+            nbytes += int(arr.nbytes)
             meta["leaves"].append(
                 {"name": name, "dtype": logical_dtype, "shape": list(arr.shape)}
             )
@@ -106,7 +148,7 @@ class CheckpointManager:
         if aside is not None:
             shutil.rmtree(aside, ignore_errors=True)
         self._gc()
-        return final
+        return final, nbytes
 
     def _gc(self):
         self._sweep_stale_tmp()
@@ -123,6 +165,7 @@ class CheckpointManager:
         forever. A tmp entry is swept iff its owning pid is dead; our
         own in-flight save and live concurrent savers are left alone.
         """
+        swept = 0
         for p in self.dir.glob("*.tmp.*"):
             pid_s = p.name.rsplit(".", 1)[-1]
             if pid_s.isdigit() and (int(pid_s) == os.getpid() or _pid_alive(int(pid_s))):
@@ -131,6 +174,12 @@ class CheckpointManager:
                 shutil.rmtree(p, ignore_errors=True)
             else:
                 p.unlink(missing_ok=True)
+            swept += 1
+        if swept:
+            self.gc_swept += swept
+            if self.telemetry is not None:
+                self._c_gc_swept.inc(swept)
+                self.telemetry.tracer.emit("checkpoint_gc", swept=swept)
 
     # --------------------------------------------------------------- restore
     def all_steps(self) -> list:

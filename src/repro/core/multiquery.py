@@ -64,6 +64,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import math
 import time
 from functools import partial
 from typing import Callable, Dict, NamedTuple, Optional
@@ -80,6 +81,7 @@ from repro.core.histsim import HistSimState
 from repro.core.policies import mark_window
 from repro.io import BlockSource, WindowData, as_block_source
 from repro.kernels import ops
+from repro.obs.telemetry import Telemetry
 
 __all__ = [
     "CacheSnapshot",
@@ -523,6 +525,52 @@ class QueryOutcome:
     wall_time_s: float
 
 
+def _theorem1_eps_np(n: float, delta_i: float, v_x: int) -> float:
+    """Host-side Theorem 1 eps(n) — scalar mirror of
+    `repro.core.bounds.theorem1_epsilon` so recording a trajectory point
+    never dispatches device work (tests pin the two against each other).
+    `math` rather than numpy: this runs per live query per poll, and
+    numpy scalar ops are ~10x slower than libm calls.
+    """
+    n = max(float(n), 1.0)
+    return math.sqrt((2.0 / n) * (v_x * math.log(2.0) - math.log(delta_i)))
+
+
+class _BatchAcc:
+    """Host-side wall-time accumulators for one poll's round batch.
+
+    Filled between polls (two `perf_counter` reads per window — the only
+    telemetry cost off the poll boundary), drained into one
+    ``round_batch`` trace event at each poll.
+    """
+
+    __slots__ = ("windows", "gather_s", "dispatch_s", "sync_s")
+
+    def __init__(self):
+        self.reset()
+
+    def reset(self) -> None:
+        self.windows = 0
+        self.gather_s = 0.0
+        self.dispatch_s = 0.0
+        self.sync_s = 0.0
+
+
+def _timed_iter(stream, acc: _BatchAcc):
+    """Yield from ``stream`` accumulating per-window gather wall time
+    (time spent waiting on the source — with `PrefetchSource` underneath
+    this is the residual stall, not the full fetch cost)."""
+    it = iter(stream)
+    while True:
+        t0 = time.perf_counter()
+        try:
+            wd = next(it)
+        except StopIteration:
+            return
+        acc.gather_s += time.perf_counter() - t0
+        yield wd
+
+
 class SharedCountsScheduler:
     """The FastMatch execution loop over a shared counts matrix.
 
@@ -577,6 +625,7 @@ class SharedCountsScheduler:
         poll_every: int = 1,
         mesh=None,
         model_axis: str = "model",
+        telemetry: Optional[Telemetry] = None,
     ):
         source: BlockSource = as_block_source(dataset)
         if spec.v_z != source.v_z or spec.v_x != source.v_x:
@@ -635,6 +684,51 @@ class SharedCountsScheduler:
         # per-query fixed polls at admission
         self.loop_syncs = 0
 
+        # Telemetry is poll-boundary only: every record below rides an
+        # existing host sync, so the jitted round path and the dispatch
+        # sequence are identical with telemetry on and off (the
+        # bit-equivalence guard in tests/test_obs.py).
+        self.telemetry = telemetry
+        if telemetry is not None:
+            reg = telemetry.registry
+            self._tel_tau = np.ones((spec.max_queries, spec.v_z), np.float32)
+            self._tel_n = np.zeros(spec.v_z, np.float32)
+            self._tel_last = {"rounds": 0, "blocks": 0, "tuples": 0, "passes": 0}
+            # Poll-time recording is two appends (see `_record_poll`);
+            # everything dict/registry-shaped happens in
+            # `flush_telemetry`, batched, at lifecycle boundaries or on
+            # first read — per-poll python shaping runs cache-cold right
+            # after a device phase and costs ~10x its warm price.
+            self._poll_buf: list = []
+            self._tel_pending = {"syncs": 0, "rounds": 0, "blocks": 0,
+                                 "tuples": 0, "passes": 0}
+            telemetry.add_flush_hook(self.flush_telemetry)
+            self._c_syncs = reg.counter(
+                "fastmatch_host_syncs_total", "device-host polls performed")
+            self._c_rounds = reg.counter(
+                "fastmatch_rounds_total", "windows dispatched (stats iterations)")
+            self._c_blocks = reg.counter(
+                "fastmatch_blocks_read_total", "blocks ingested into shared counts")
+            self._c_tuples = reg.counter(
+                "fastmatch_tuples_read_total", "tuples drawn (m of Theorem 1)")
+            self._c_passes = reg.counter(
+                "fastmatch_passes_total", "cyclic passes over the block layout")
+            self._c_admitted = reg.counter(
+                "fastmatch_queries_admitted_total", "queries admitted into slots")
+            self._c_retired = reg.counter(
+                "fastmatch_queries_retired_total", "queries retired with an answer")
+            self._h_batch = reg.histogram(
+                "fastmatch_round_batch_seconds",
+                help="host wall per round batch (gather+dispatch+sync)")
+            self._h_q_tuples = reg.histogram(
+                "fastmatch_query_tuples", edges=tuple(float(10 ** e) for e in range(2, 11)),
+                help="tuples read while a query was live (per-query m)")
+            self._h_q_rounds = reg.histogram(
+                "fastmatch_query_rounds", edges=tuple(float(2 ** e) for e in range(0, 14)),
+                help="rounds to retirement (paper Fig. 5)")
+            self._h_q_wall = reg.histogram(
+                "fastmatch_query_wall_seconds", help="admit-to-retire wall time")
+
     # -- device placement hooks (overridden by the data-parallel pump) -----
 
     def _place_cursor(self, cursor: SampleCursor) -> SampleCursor:
@@ -667,7 +761,18 @@ class SharedCountsScheduler:
         loop performs. Retirement snapshots (`retire`) transfer result
         data per retired query and are not part of the loop cadence.
         """
-        cursor, delta_upper = jax.device_get((self.cursor, self.state.delta_upper))
+        if self.telemetry is None:
+            cursor, delta_upper = jax.device_get((self.cursor, self.state.delta_upper))
+        else:
+            # Same single batched poll, two extra (small) leaves: the
+            # per-slot tau matrix and per-candidate n feed the
+            # confidence-trajectory points. Pure reads — device state
+            # and the dispatch sequence are untouched.
+            cursor, delta_upper, tau, n = jax.device_get(
+                (self.cursor, self.state.delta_upper, self.state.tau, self.state.n)
+            )
+            self._tel_tau = np.asarray(tau)
+            self._tel_n = np.asarray(n)
         self.read_mask = np.asarray(cursor.read_mask)
         self.rounds = int(cursor.rounds)
         self.blocks_read = int(cursor.blocks_read)
@@ -675,6 +780,101 @@ class SharedCountsScheduler:
         self.tuples_read = int(cursor.tuples_read)
         self._delta_upper = np.asarray(delta_upper)
         self.host_syncs += 1
+        if self.telemetry is not None:
+            self._record_poll()
+
+    def _record_poll(self) -> None:
+        """Stage this poll's mirrors for telemetry (called from `_sync`
+        only). Deliberately minimal — counter deltas into plain ints and
+        one tuple of array refs into the poll buffer (`_sync` rebinds
+        fresh arrays each poll, so refs are stable snapshots); all
+        shaping happens batched in `flush_telemetry`."""
+        last = self._tel_last
+        p = self._tel_pending
+        p["syncs"] += 1
+        p["rounds"] += self.rounds - last["rounds"]
+        p["blocks"] += self.blocks_read - last["blocks"]
+        p["tuples"] += self.tuples_read - last["tuples"]
+        p["passes"] += self.passes - last["passes"]
+        last.update(rounds=self.rounds, blocks=self.blocks_read,
+                    tuples=self.tuples_read, passes=self.passes)
+        if self.tickets:
+            # The entry carries its own snapshot of the live ticket set
+            # (shallow copy — tickets are immutable after admit), so
+            # admit/retire never need to drain the buffer: each staged
+            # poll is shaped under the set that was live when it was
+            # sampled, no matter when the flush runs.
+            self._poll_buf.append(
+                (self.rounds, self.tuples_read, self._tel_n,
+                 self._tel_tau, self._delta_upper, list(self.tickets.items()))
+            )
+            if len(self._poll_buf) >= 256:
+                self.flush_telemetry()  # bound buffer memory on long pumps
+
+    def flush_telemetry(self) -> None:
+        """Drain staged polls into the registry and the per-query
+        trajectories.
+
+        Each buffered poll carries its own snapshot of the then-live
+        ticket set, so the flush needs no relationship to admit/retire
+        boundaries: it runs at pump() exit, when the buffer hits its
+        memory bound, and lazily from `Telemetry`'s read accessors —
+        large warm batches instead of per-poll (or per-boundary)
+        shaping on the serve loop's cache-cold path.
+        """
+        tel = self.telemetry
+        if tel is None:
+            return
+        p = self._tel_pending
+        if p["syncs"]:
+            self._c_syncs.inc(p["syncs"])
+            self._c_rounds.inc(p["rounds"])
+            self._c_blocks.inc(p["blocks"])
+            self._c_tuples.inc(p["tuples"])
+            self._c_passes.inc(p["passes"])
+            for key in p:
+                p[key] = 0
+        buf = self._poll_buf
+        if not buf:
+            return
+        self._poll_buf = []
+        # vectorize the per-poll reductions across the whole batch
+        n_mins = np.stack([b[2] for b in buf]).min(axis=1)  # (P,)
+        tau_mins = np.stack([b[3] for b in buf]).min(axis=2)  # (P, Q)
+        v_z, v_x = self.spec.v_z, self.spec.v_x
+        for i, (rounds, tuples, _n, _tau, du, live) in enumerate(buf):
+            n_min = float(n_mins[i])
+            for slot, t in live:
+                d_up = float(du[slot])
+                tel.record_curve_point(t.qid, dict(
+                    round=rounds,
+                    tuples=tuples,
+                    tuples_live=tuples - t.admit_tuples_read,
+                    n_min=n_min,
+                    tau_min=float(tau_mins[i, slot]),
+                    # eps(n) at the per-candidate failure budget
+                    # delta/|V_Z| — the AnyActive threshold the stats
+                    # tail compares against.
+                    eps_n=_theorem1_eps_np(n_min, t.delta / v_z, v_x),
+                    delta_upper=d_up,
+                    confidence=max(0.0, 1.0 - d_up),
+                ))
+
+    def _round_batch_extra(self) -> dict:
+        """Extra ``round_batch`` fields — the data-parallel pump adds
+        per-worker gather and assembly timing here."""
+        return {}
+
+    def _emit_round_batch(self, acc: _BatchAcc) -> None:
+        """Drain one poll's timing accumulators into a trace event."""
+        self._h_batch.observe(acc.gather_s + acc.dispatch_s + acc.sync_s)
+        self.telemetry.tracer.emit(
+            "round_batch", windows=acc.windows, rounds=self.rounds,
+            blocks_read=self.blocks_read, tuples_read=self.tuples_read,
+            gather_s=acc.gather_s, dispatch_s=acc.dispatch_s,
+            sync_s=acc.sync_s, **self._round_batch_extra(),
+        )
+        acc.reset()
 
     # -- warm-start persistence --------------------------------------------
 
@@ -804,6 +1004,22 @@ class SharedCountsScheduler:
             admit_blocks_considered=self.blocks_considered,
             admit_tuples_read=self.tuples_read,
         )
+        if self.telemetry is not None:
+            self._c_admitted.inc(1)
+            self.telemetry.tracer.emit(
+                "query_admit", qid=qid, slot=slot, k=int(k), eps=float(eps),
+                delta=float(delta), round=self.rounds, tuples=self.tuples_read,
+            )
+            # The ticket didn't exist yet when admission's _sync polled
+            # (its buffer entry's snapshot predates the insert) — stage
+            # a first point (possibly already terminal on the warm
+            # cache) from those same fresh mirrors, shaped later with
+            # the rest of the buffer.
+            self._poll_buf.append(
+                (self.rounds, self.tuples_read, self._tel_n,
+                 self._tel_tau, self._delta_upper,
+                 [(slot, self.tickets[slot])])
+            )
         return qid
 
     def retire(self, slot: int, *, exact: bool, terminated: bool) -> QueryOutcome:
@@ -840,6 +1056,18 @@ class SharedCountsScheduler:
         )
         self.state = clear_slot(self.state, jnp.asarray(slot, jnp.int32), spec=self.spec)
         self.outcomes[t.qid] = outcome
+        if self.telemetry is not None:
+            self._c_retired.inc(1)
+            self._h_q_tuples.observe(outcome.tuples_read)
+            self._h_q_rounds.observe(outcome.rounds)
+            self._h_q_wall.observe(outcome.wall_time_s)
+            self.telemetry.tracer.emit(
+                "query_retire", qid=t.qid, slot=slot, exact=outcome.exact,
+                terminated=outcome.terminated, rounds=outcome.rounds,
+                passes=outcome.passes, blocks=outcome.blocks_read,
+                tuples=outcome.tuples_read,
+                delta_upper=outcome.delta_upper, wall_s=outcome.wall_time_s,
+            )
         return outcome
 
     def _poll_terminated(self) -> None:
@@ -894,8 +1122,22 @@ class SharedCountsScheduler:
         if win.size == 0:
             return 0
         before = self.blocks_read
-        self._dispatch_round(self._fetch_window(win))
-        self._sync()
+        if self.telemetry is None:
+            self._dispatch_round(self._fetch_window(win))
+            self._sync()
+        else:
+            acc = _BatchAcc()
+            t0 = time.perf_counter()
+            wd = self._fetch_window(win)
+            acc.gather_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            self._dispatch_round(wd)
+            acc.dispatch_s = time.perf_counter() - t0
+            acc.windows = 1
+            t0 = time.perf_counter()
+            self._sync()
+            acc.sync_s = time.perf_counter() - t0
+            self._emit_round_batch(acc)
         self.loop_syncs += 1
         return self.blocks_read - before
 
@@ -913,14 +1155,23 @@ class SharedCountsScheduler:
         if remaining.size == 0:
             return
         self.passes += 1
+        t0 = time.perf_counter()
+        windows = 0
         stream, _ = self._open_pass_stream(remaining)
         try:
             for wd in stream:
                 self._dispatch_ingest(wd)
+                windows += 1
         finally:
             stream.close()
         self.state = stats_step(self.state, spec=self.spec)
         self._sync()
+        if self.telemetry is not None:
+            self.telemetry.tracer.emit(
+                "exact_completion", windows=windows, blocks=int(remaining.size),
+                rounds=self.rounds, tuples_read=self.tuples_read,
+                dur_s=time.perf_counter() - t0,
+            )
 
     def pump(
         self,
@@ -946,7 +1197,24 @@ class SharedCountsScheduler:
         lifetime: a long-lived server calling pump per batch gets the
         full budget every time.
         """
+        tel = self.telemetry
         self.budget_exhausted = False
+        try:
+            self._pump(max_rounds=max_rounds, max_passes=max_passes,
+                       on_round=on_round)
+        finally:
+            # one batched drain per pump call — counters and curves are
+            # current whenever the loop hands control back
+            self.flush_telemetry()
+
+    def _pump(
+        self,
+        *,
+        max_rounds: int,
+        max_passes: int,
+        on_round: Optional[Callable[["SharedCountsScheduler"], None]],
+    ) -> None:
+        tel = self.telemetry
         self._sync()
         rounds0, passes0 = self.rounds, self.passes
         # A late-admitted query may already terminate on the accumulated
@@ -960,11 +1228,31 @@ class SharedCountsScheduler:
             pass_start_rounds = self.rounds
             pass_start_blocks = self.blocks_read
             stream, n_rounds = self._open_pass_stream(pass_order)
+            if tel is None:
+                acc = None
+                rounds_iter = stream
+            else:
+                tel.tracer.emit("pass_start", passes=self.passes,
+                                windows=n_rounds, unread=int(pass_order.size))
+                acc = _BatchAcc()
+                rounds_iter = _timed_iter(stream, acc)
             try:
-                for dispatched, wd in enumerate(stream, start=1):
-                    self._dispatch_round(wd)
+                for dispatched, wd in enumerate(rounds_iter, start=1):
+                    if acc is None:
+                        self._dispatch_round(wd)
+                    else:
+                        t0 = time.perf_counter()
+                        self._dispatch_round(wd)
+                        acc.dispatch_s += time.perf_counter() - t0
+                        acc.windows += 1
                     if dispatched % self.poll_every == 0 or dispatched == n_rounds:
-                        self._sync()
+                        if acc is None:
+                            self._sync()
+                        else:
+                            t0 = time.perf_counter()
+                            self._sync()
+                            acc.sync_s += time.perf_counter() - t0
+                            self._emit_round_batch(acc)
                         self.loop_syncs += 1
                         self._poll_terminated()
                         if on_round is not None:
@@ -974,6 +1262,11 @@ class SharedCountsScheduler:
                             # (the caller decides; no silent exact
                             # completion).
                             self.budget_exhausted = True
+                            if tel is not None:
+                                tel.tracer.emit(
+                                    "budget_exhausted", rounds=self.rounds,
+                                    live=len(self.tickets),
+                                )
                             return
                         if not self.tickets:
                             break

@@ -66,6 +66,7 @@ I/O bandwidth.
 
 from __future__ import annotations
 
+import time
 from typing import Optional
 
 import jax
@@ -125,6 +126,7 @@ class DistributedPump(SharedCountsScheduler):
         prefetch: bool = False,
         histogram_impl: str = "auto",
         onehot_dtype=jnp.float32,
+        telemetry=None,
     ):
         if not isinstance(dataset, BlockedDataset):
             raise TypeError(
@@ -154,8 +156,15 @@ class DistributedPump(SharedCountsScheduler):
                 "with no blocks; use fewer workers (or more blocks)"
             )
         self._stream_sources = [
-            PrefetchSource(s) if prefetch else s for s in self.shards
+            PrefetchSource(s, telemetry=telemetry) if prefetch else s
+            for s in self.shards
         ]
+        # Per-worker ingest-side timing, drained into each round_batch
+        # event (`_round_batch_extra`): how long each worker's next-window
+        # gather took (per-worker I/O skew) + the host assemble/device_put
+        # cost of stacking the W shards.
+        self._worker_gather_s = np.zeros(self.num_workers)
+        self._assemble_s = 0.0
         self._cursor_shardings = jax.tree.map(
             lambda s: NamedSharding(mesh, s), cursor_pspecs(data_axes=self.data_axes)
         )
@@ -175,6 +184,7 @@ class DistributedPump(SharedCountsScheduler):
             poll_every=poll_every,
             mesh=mesh,
             model_axis=model_axis,
+            telemetry=telemetry,
         )
         self._round = make_pump_round(
             mesh, spec, blocks_per_worker=self._blocks_per_worker,
@@ -259,13 +269,44 @@ class DistributedPump(SharedCountsScheduler):
                 for src, wins in zip(self._stream_sources, win_lists)
             ]
             try:
-                for wds in zip(*streams):
-                    yield self._assemble(wds)
+                if self.telemetry is None:
+                    for wds in zip(*streams):
+                        yield self._assemble(wds)
+                else:
+                    # zip with per-worker gather timing: worker w's
+                    # accumulator measures how long ITS next window took
+                    # (the per-worker I/O skew the psum round then has
+                    # to wait out).
+                    while True:
+                        wds = []
+                        for w, st in enumerate(streams):
+                            t0 = time.perf_counter()
+                            try:
+                                wd = next(st)
+                            except StopIteration:
+                                return
+                            self._worker_gather_s[w] += time.perf_counter() - t0
+                            wds.append(wd)
+                        t0 = time.perf_counter()
+                        out = self._assemble(wds)
+                        self._assemble_s += time.perf_counter() - t0
+                        yield out
             finally:
                 for st in streams:
                     st.close()
 
         return rounds(), n_rounds
+
+    def _round_batch_extra(self) -> dict:
+        """Per-worker gather + assemble wall accumulated since the last
+        poll (see `SharedCountsScheduler._emit_round_batch`)."""
+        extra = {
+            "worker_gather_s": [float(s) for s in self._worker_gather_s],
+            "assemble_s": float(self._assemble_s),
+        }
+        self._worker_gather_s[:] = 0.0
+        self._assemble_s = 0.0
+        return extra
 
     def _fetch_window(self, win: np.ndarray) -> WindowData:
         """Ad-hoc global window (MatchServer.step / run_window): split

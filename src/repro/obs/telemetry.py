@@ -1,0 +1,130 @@
+"""The `Telemetry` facade: one handle wired through the serving stack.
+
+Bundles the three concerns every instrumented layer needs:
+
+  registry — `MetricsRegistry` (counters / gauges / latency histograms)
+  tracer   — `Tracer` (per-query lifecycle + per-round-batch events)
+  curves   — per-query confidence trajectories: the (tuples, eps(n),
+             delta_upper) points the scheduler records at every poll
+             boundary, i.e. the tuples-to-confidence curve of each
+             query (the measurable form of Theorem 1's n ↦ eps(n) and
+             the precursor of the ROADMAP's anytime API)
+
+A `MatchServer(telemetry=True)` owns one instance and threads it into
+its scheduler/pump, each `PrefetchSource`, and the `CheckpointManager`;
+every instrumentation point in those layers guards on ``telemetry is
+not None`` so the default (off) path stays untouched. One Telemetry
+instance belongs to one server — query ids key the curve store.
+
+Curve points are dicts with a fixed column set (`CURVE_COLUMNS`);
+`confidence_curve` returns them as a float ndarray and
+`export_confidence_csv` writes the classic curve file the
+`examples/telemetry_trace.py` demo renders. Per-query point count is
+bounded (``max_curve_points``, earliest points kept — the interesting
+shape of a confidence curve is its rise); drops are counted, never
+silent.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.obs.registry import MetricsRegistry
+from repro.obs.tracer import Tracer
+
+__all__ = ["Telemetry", "CURVE_COLUMNS"]
+
+# Column order of a confidence-trajectory point (see
+# `SharedCountsScheduler.flush_telemetry` for where each is measured).
+CURVE_COLUMNS = (
+    "round",        # device rounds (windows dispatched) at the poll
+    "tuples",       # shared tuples_read total at the poll
+    "tuples_live",  # tuples read while THIS query was live (cost accounting)
+    "n_min",        # min_i n_i — the worst-sampled candidate's sample count
+    "tau_min",      # min_i tau_i — distance estimate of the current best
+    "eps_n",        # Theorem 1 eps at n_min and per-candidate budget delta/V_Z
+    "delta_upper",  # the stats tail's failure bound sum_i delta_i
+    "confidence",   # max(0, 1 - delta_upper)
+)
+
+
+class Telemetry:
+    """Registry + tracer + per-query confidence-trajectory store."""
+
+    def __init__(self, *, tracer_capacity: int = 8192,
+                 max_curve_points: int = 4096, clock=None):
+        self.registry = MetricsRegistry()
+        self.tracer = Tracer(capacity=tracer_capacity, clock=clock)
+        self.max_curve_points = max_curve_points
+        self._curves: Dict[int, List[dict]] = {}
+        self.curve_drops = 0  # points not recorded due to the per-query cap
+        self._lock = threading.Lock()
+        self._flush_hooks: List = []
+
+    # -- producer flush hooks ----------------------------------------------
+
+    def add_flush_hook(self, fn) -> None:
+        """Register a producer-side drain (e.g. the scheduler's
+        `flush_telemetry`). Producers may stage raw measurements and
+        shape them in batches off their hot path; every read accessor
+        below runs the hooks first, so readers always see current data.
+        """
+        self._flush_hooks.append(fn)
+
+    def _flush(self) -> None:
+        # outside self._lock: hooks call record_curve_point themselves
+        for fn in self._flush_hooks:
+            fn()
+
+    # -- confidence trajectories -------------------------------------------
+
+    def record_curve_point(self, qid: int, point: dict) -> None:
+        """Append one poll-boundary point to a query's trajectory."""
+        with self._lock:
+            pts = self._curves.setdefault(qid, [])
+            if pts and all(
+                pts[-1][c] == point[c] for c in ("round", "tuples", "delta_upper")
+            ):
+                return  # repeat poll at the same round (e.g. an admission
+                # boundary right after a loop poll) — nothing new to plot
+            if len(pts) >= self.max_curve_points:
+                self.curve_drops += 1
+                return
+            pts.append(point)
+
+    def trajectory(self, qid: int) -> List[dict]:
+        """The recorded points for one query (oldest first)."""
+        self._flush()
+        with self._lock:
+            return list(self._curves.get(qid, ()))
+
+    def query_ids(self) -> List[int]:
+        self._flush()
+        with self._lock:
+            return sorted(self._curves)
+
+    def confidence_curve(self, qid: int) -> np.ndarray:
+        """(num_points, len(CURVE_COLUMNS)) float64 array for one query."""
+        pts = self.trajectory(qid)
+        if not pts:
+            return np.zeros((0, len(CURVE_COLUMNS)))
+        return np.asarray(
+            [[float(p[c]) for c in CURVE_COLUMNS] for p in pts], np.float64
+        )
+
+    def export_confidence_csv(self, path, qid: Optional[int] = None) -> int:
+        """Write trajectories (one query, or all) as CSV; returns rows."""
+        qids = [qid] if qid is not None else self.query_ids()
+        rows = 0
+        with open(path, "w") as f:
+            f.write("qid," + ",".join(CURVE_COLUMNS) + "\n")
+            for q in qids:
+                for p in self.trajectory(q):
+                    f.write(
+                        f"{q}," + ",".join(repr(float(p[c])) for c in CURVE_COLUMNS) + "\n"
+                    )
+                    rows += 1
+        return rows

@@ -1,0 +1,108 @@
+"""Per-query lifecycle tracing: bounded ring buffer + JSONL export.
+
+Events are plain dicts — ``{"seq", "ts", "kind", ...payload}`` — pushed
+by the serving layers at host-sync/poll boundaries only (the jitted
+round path never records anything; see the `repro.obs` package
+docstring for the event vocabulary). The ring is a ``deque(maxlen=...)``
+so a long-lived server holds a bounded trace tail; ``export_jsonl``
+writes whatever the ring currently holds.
+
+Determinism contract (tests/test_obs.py golden span-tree test): the
+SEQUENCE of events — kinds, per-query ordering (enqueue → admit →
+round_batch* → retire), slot assignments, round counts — is a pure
+function of the workload for a seeded run. Only the ``ts``/``*_s``
+timing fields vary between runs, which is why the golden test compares
+the event skeleton with timing fields stripped
+(`Tracer.skeleton`).
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from collections import deque
+from contextlib import contextmanager
+from typing import Dict, Iterator, List, Optional
+
+__all__ = ["Tracer", "TIMING_FIELDS"]
+
+# Fields whose values are wall-clock measurements: stripped by
+# `skeleton()` so golden tests can compare traces across runs.
+TIMING_FIELDS = frozenset({
+    "ts", "dur_s", "gather_s", "dispatch_s", "sync_s", "assemble_s",
+    "wall_s", "wait_s", "fetch_s", "hidden_s", "stall_frac", "save_s",
+    "worker_gather_s",
+})
+
+
+class Tracer:
+    """Bounded in-memory event trace with a JSONL sink.
+
+    capacity  — ring size (oldest events drop first); ``events_total``
+                keeps counting past the cap so truncation is visible.
+    clock     — injectable time source (tests pin it for reproducible
+                ``ts`` values); defaults to ``time.perf_counter``
+                re-based to the tracer's construction.
+    """
+
+    def __init__(self, capacity: int = 8192, clock=None):
+        if capacity < 1:
+            raise ValueError(f"need capacity >= 1, got {capacity}")
+        self.capacity = capacity
+        self._ring: deque = deque(maxlen=capacity)
+        self._lock = threading.Lock()
+        self._seq = 0
+        self.events_total = 0
+        self._clock = clock if clock is not None else time.perf_counter
+        self._epoch = self._clock()
+
+    def emit(self, kind: str, **fields) -> dict:
+        """Record one event; returns the event dict (already in the ring)."""
+        with self._lock:
+            ev = {"seq": self._seq, "ts": self._clock() - self._epoch, "kind": kind}
+            ev.update(fields)
+            self._seq += 1
+            self.events_total += 1
+            self._ring.append(ev)
+        return ev
+
+    @contextmanager
+    def span(self, kind: str, **fields) -> Iterator[dict]:
+        """Time a with-block; the event (with ``dur_s``) is emitted at
+        exit so the trace stays ordered by completion time."""
+        t0 = self._clock()
+        extra: Dict[str, object] = dict(fields)
+        try:
+            yield extra
+        finally:
+            extra["dur_s"] = self._clock() - t0
+            self.emit(kind, **extra)
+
+    def events(self, kind: Optional[str] = None) -> List[dict]:
+        """Current ring contents (oldest first), optionally one kind."""
+        with self._lock:
+            evs = list(self._ring)
+        if kind is not None:
+            evs = [e for e in evs if e["kind"] == kind]
+        return evs
+
+    def skeleton(self, kind: Optional[str] = None) -> List[dict]:
+        """Events with timing fields stripped — the deterministic part
+        of the trace (what golden tests compare)."""
+        return [
+            {k: v for k, v in e.items() if k not in TIMING_FIELDS}
+            for e in self.events(kind)
+        ]
+
+    def clear(self) -> None:
+        with self._lock:
+            self._ring.clear()
+
+    def export_jsonl(self, path) -> int:
+        """Write the ring to ``path`` as JSON Lines; returns event count."""
+        evs = self.events()
+        with open(path, "w") as f:
+            for e in evs:
+                f.write(json.dumps(e, sort_keys=True) + "\n")
+        return len(evs)

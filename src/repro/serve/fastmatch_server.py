@@ -101,6 +101,7 @@ from repro.core.multiquery import (
     cache_config_hash,
 )
 from repro.io import as_block_source
+from repro.obs import Telemetry
 
 __all__ = ["MatchQuery", "MatchServer"]
 
@@ -142,6 +143,7 @@ class MatchServer:
         autosave_every: int = 8,
         autosave_rounds: Optional[int] = None,
         checkpoint_keep_last: int = 3,
+        telemetry=None,
     ):
         # k_cap: static bound on any query's k — lets the per-slot
         # deviation assignment use a (k_cap+1)-element top_k instead of
@@ -163,6 +165,23 @@ class MatchServer:
         # device rounds have run since the last save. Both fire at poll
         # boundaries, off the per-window hot path; `save_cache()` forces
         # a snapshot at any time.
+        #
+        # telemetry: True builds a fresh `repro.obs.Telemetry`; an
+        # existing instance is adopted as-is (one instance per server —
+        # query ids key its curve store). The handle is threaded into
+        # the scheduler/pump, every PrefetchSource, and the
+        # CheckpointManager; None (default) leaves every layer on its
+        # untouched zero-overhead path.
+        if telemetry is True:
+            telemetry = Telemetry()
+        elif telemetry is False:
+            telemetry = None
+        self.telemetry = telemetry
+        if telemetry is not None:
+            self._c_submitted = telemetry.registry.counter(
+                "fastmatch_queries_submitted_total",
+                "requests accepted into the queue",
+            )
         if pump:
             if mesh is None:
                 raise ValueError("pump=True is the data-parallel mesh path; pass mesh=")
@@ -187,6 +206,7 @@ class MatchServer:
                 start_block=start_block,
                 poll_every=poll_every,
                 prefetch=prefetch,
+                telemetry=telemetry,
             )
         else:
             if tuple(data_axes) != ("data",):
@@ -200,7 +220,7 @@ class MatchServer:
                 # source is host-resident or remote).
                 from repro.io import PrefetchSource
 
-                source = PrefetchSource(source)
+                source = PrefetchSource(source, telemetry=telemetry)
             self.spec = MultiQuerySpec(
                 v_z=source.v_z,
                 v_x=source.v_x,
@@ -218,6 +238,7 @@ class MatchServer:
                 poll_every=poll_every,
                 mesh=mesh,
                 model_axis=model_axis,
+                telemetry=telemetry,
             )
         self.max_passes = max_passes
         self._mesh = mesh
@@ -228,6 +249,7 @@ class MatchServer:
                 checkpoint_dir,
                 keep_last=checkpoint_keep_last,
                 config_hash=cache_config_hash(self.scheduler.source, self.spec),
+                telemetry=telemetry,
             )
         self.autosave_every = autosave_every
         self.autosave_rounds = autosave_rounds
@@ -271,6 +293,12 @@ class MatchServer:
                 submit_time=time.perf_counter(),
             )
         )
+        if self.telemetry is not None:
+            self._c_submitted.inc(1)
+            self.telemetry.tracer.emit(
+                "query_enqueue", rid=rid, k=k, eps=eps, delta=delta,
+                queued=len(self.pending),
+            )
         return rid
 
     def _admit_free(self, _sched: Optional[SharedCountsScheduler] = None) -> None:
@@ -289,8 +317,16 @@ class MatchServer:
             if rid is None:
                 continue  # already collected
             del self.scheduler.outcomes[qid]
-            self.results[rid] = self._to_result(rid, out)
+            res = self.results[rid] = self._to_result(rid, out)
             self._retired_since_save += 1
+            if self.telemetry is not None:
+                # The rid↔qid join point: query_enqueue events carry the
+                # request id, the scheduler's admit/retire events the
+                # slot-assigned qid — this event links the two.
+                self.telemetry.tracer.emit(
+                    "query_done", rid=rid, qid=qid, exact=res.exact,
+                    tuples=res.tuples_read, wall_s=res.wall_time_s,
+                )
         self._maybe_autosave()
 
     def _to_result(self, rid: int, out: QueryOutcome) -> MatchResult:
@@ -477,5 +513,21 @@ class MatchServer:
             "total_tuples_read": sched.tuples_read,
             "total_rounds": sched.rounds,
             "fraction_read": float(sched.read_mask.mean()) if sched.read_mask.size else 0.0,
-            "tuples_per_query": sched.tuples_read / done if done else float("nan"),
+            # 0.0, not nan, before the first completion: nan poisons any
+            # dashboard aggregation and JSON round-trips it as a string.
+            "tuples_per_query": float(sched.tuples_read / done) if done else 0.0,
         }
+
+    def export_trace(self, path) -> int:
+        """Dump the lifecycle/round trace as JSONL; returns event count."""
+        if self.telemetry is None:
+            raise RuntimeError("MatchServer was constructed without telemetry")
+        self.scheduler.flush_telemetry()
+        return self.telemetry.tracer.export_jsonl(path)
+
+    def prometheus_metrics(self) -> str:
+        """The registry in Prometheus text exposition format."""
+        if self.telemetry is None:
+            raise RuntimeError("MatchServer was constructed without telemetry")
+        self.scheduler.flush_telemetry()
+        return self.telemetry.registry.to_prometheus()
