@@ -1,0 +1,138 @@
+"""Autotuner end-to-end smoke: tune, persist, reload, dispatch — deterministically.
+
+Runs the real `repro.kernels.autotune` tuner over a small grid of shape
+keys and proves the machinery round-trips:
+
+  1. tune_tau / tune_ingest measure the full candidate space per key and
+     pick a winner (margin-biased toward the unrolled/fused comparator);
+  2. the winning plans persist to ``results/tuned_smoke/<backend>.json``
+     (a scratch dir — NEVER the committed ``results/tuned/`` artifact,
+     which this benchmark must not clobber with noisy-runner timings);
+  3. a fresh `PlanRegistry.load` of that file reproduces byte-identical
+     ``decisions()`` — the determinism contract CI gates on: two
+     processes loading the same plan file dispatch the same programs;
+  4. a deliberately stale-schema copy falls back to default plans with
+     a warning instead of crashing.
+
+What is and is not gated: the ROUND-TRIP and FALLBACK booleans and the
+key counts are deterministic and gated by check_regression.py; the
+*winners* are timing-dependent on a shared runner and are reported in
+BENCH_autotune.json for inspection only.
+
+Set AUTOTUNE_SMOKE=1 for the tiny CI grid (exits non-zero on any
+contract failure).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import time
+import warnings
+
+from benchmarks.common import env_stamp
+from repro.kernels import autotune
+
+SMOKE = bool(int(os.environ.get("AUTOTUNE_SMOKE", "0")))
+# (v_z, v_x, [qs]) tuning grid; smoke stays tiny so the CI step is seconds.
+GRID = [(64, 64, (1, 2))] if SMOKE else [(256, 256, (1, 2, 4, 8)), (4096, 1024, (1, 2, 4, 8))]
+REPS = 3 if SMOKE else 15
+
+RESULTS = pathlib.Path(__file__).parent / "results"
+
+
+def run(rows: list) -> None:
+    out_dir = RESULTS / "tuned_smoke"
+    out_dir.mkdir(parents=True, exist_ok=True)
+    backend = env_stamp()["backend"]
+    reg = autotune.PlanRegistry(backend=backend)
+
+    t0 = time.time()
+    winners = {"tau": {}, "ingest": {}}
+    n_candidates = 0
+    for v_z, v_x, qs in GRID:
+        for q in qs:
+            plan, timed = autotune.tune_tau(v_z, v_x, q, reps=REPS)
+            reg.tau[autotune.tau_key(v_z, v_x, q)] = plan
+            winners["tau"][autotune.tau_key(v_z, v_x, q)] = dict(
+                **dataclasses.asdict(plan),
+                us=round(1e6 * timed[plan], 1),
+                n_candidates=len(timed),
+            )
+            n_candidates += len(timed)
+        plan, timed = autotune.tune_ingest(v_z, v_x, reps=REPS)
+        reg.ingest[autotune.ingest_key(v_z, v_x)] = plan
+        winners["ingest"][autotune.ingest_key(v_z, v_x)] = dict(
+            **dataclasses.asdict(plan),
+            us=round(1e6 * timed[plan], 1),
+            n_candidates=len(timed),
+        )
+        n_candidates += len(timed)
+    tune_wall = time.time() - t0
+
+    # contract 3: save -> load reproduces byte-identical decisions
+    path = reg.save(out_dir / f"{backend}.json")
+    reloaded = autotune.PlanRegistry.load(path=path, backend=backend)
+    roundtrip = reloaded.decisions() == reg.decisions()
+    # and a second independent load is byte-stable too (no dict-order or
+    # float-repr drift between loads of the same file)
+    roundtrip &= (
+        autotune.PlanRegistry.load(path=path, backend=backend).decisions()
+        == reloaded.decisions()
+    )
+
+    # contract 4: stale schema -> warn + default plans, never a crash
+    stale_path = out_dir / f"{backend}.stale.json"
+    doc = json.loads(path.read_text())
+    doc["schema"] = autotune.PLAN_SCHEMA + 999
+    stale_path.write_text(json.dumps(doc))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        stale_reg = autotune.PlanRegistry.load(path=stale_path, backend=backend)
+    stale_fallback = (
+        not stale_reg.tau
+        and not stale_reg.ingest
+        and stale_reg.tau_plan(64, 64, 1) == autotune.DEFAULT_TAU
+        and any("schema" in str(w.message) for w in caught)
+    )
+    stale_path.unlink()
+
+    ok = roundtrip and stale_fallback and bool(reg.tau) and bool(reg.ingest)
+    report = dict(
+        config=dict(grid=[[v_z, v_x, list(qs)] for v_z, v_x, qs in GRID],
+                    reps=REPS, smoke=SMOKE, **env_stamp()),
+        plan_file=str(path),
+        n_tau_keys=len(reg.tau),
+        n_ingest_keys=len(reg.ingest),
+        n_candidates_measured=n_candidates,
+        tune_wall_s=round(tune_wall, 2),
+        winners=winners,  # timing-dependent: reported, never gated
+        roundtrip_byte_stable=roundtrip,
+        stale_schema_fallback=stale_fallback,
+        ok=ok,
+    )
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "BENCH_autotune.json").write_text(json.dumps(report, indent=2) + "\n")
+
+    rows.append(dict(name="autotune_keys", us_per_call=1e6 * tune_wall,
+                     derived=len(reg.tau) + len(reg.ingest)))
+    rows.append(dict(name="autotune_roundtrip", us_per_call=0.0,
+                     derived=1.0 if roundtrip else 0.0))
+    rows.append(dict(name="autotune_stale_fallback", us_per_call=0.0,
+                     derived=1.0 if stale_fallback else 0.0))
+
+    print(f"# autotune_smoke: {len(reg.tau)} tau + {len(reg.ingest)} ingest keys "
+          f"({n_candidates} candidates) tuned in {tune_wall:.1f}s -> {path}, "
+          f"roundtrip={roundtrip}, stale_fallback={stale_fallback} "
+          f"-> {'PASS' if ok else 'FAIL'}")
+    if SMOKE and not ok:
+        raise SystemExit("autotune smoke FAILED")
+
+
+if __name__ == "__main__":
+    rows: list = []
+    run(rows)
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

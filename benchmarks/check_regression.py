@@ -20,7 +20,11 @@ generous (floats may drift in low bits across jax/jaxlib versions, and
 the tier-1 matrix runs both a pinned floor and latest); a real
 regression — a lost amortization, a broken equivalence — lands far
 outside them. The smoke flag of both runs must agree, so a full-config
-report is never judged against a smoke baseline.
+report is never judged against a smoke baseline — and when both reports
+carry a hardware stamp (``config.backend`` via `common.env_stamp`), a
+backend mismatch refuses the comparison outright: an XLA:CPU baseline
+cannot gate a GPU run. Device-kind and jax-version drift are printed as
+notes, not failures.
 
 Refreshing a baseline after an intentional change: run the smoke
 benchmark locally and copy the report over the baseline file, e.g.
@@ -83,6 +87,14 @@ GATES = {
         Gate("tau_bytes_reduction_q8", "min", 0.10),       # analytic byte model
         Gate("batched_bytes_growth_q1_to_q8", "max", 0.10),
         Gate("batched_bit_identical", "exact"),
+        # Tuned-dispatch determinism: with the SAME committed plan file,
+        # the chosen variant per Q, the tuned analytic bytes, and the
+        # tuned-arm bit-identity are exact — only the tuned wall-clock
+        # (reported, not gated) may move between runners.
+        Gate("tuned_bit_identical", "exact"),
+        Gate("tuned_variants", "exact"),
+        Gate("ingest_winner", "exact"),
+        Gate("tuned_tau_bytes_reduction_q8", "min", 0.10),
         Gate("ok", "exact"),
     ]),
     "restart": ("BENCH_restart.json", [
@@ -103,6 +115,15 @@ GATES = {
         Gate("bit_identical", "exact"),
         Gate("curve_matches", "exact"),
         Gate("trace_events", "min", 0.25),  # seeded event count
+        Gate("ok", "exact"),
+    ]),
+    # Tuner winners are timing-dependent (never gated); the persistence
+    # contracts and the tuned key counts are deterministic.
+    "autotune": ("BENCH_autotune.json", [
+        Gate("n_tau_keys", "exact"),
+        Gate("n_ingest_keys", "exact"),
+        Gate("roundtrip_byte_stable", "exact"),
+        Gate("stale_schema_fallback", "exact"),
         Gate("ok", "exact"),
     ]),
 }
@@ -134,6 +155,26 @@ def check_suite(
             " — smoke baselines only gate smoke runs"
         ]
     failures = []
+    # Hardware provenance: an XLA:CPU baseline says nothing about a GPU
+    # run, so a backend mismatch is a hard failure when both reports are
+    # stamped. Device-kind / jax-version drift is informational only —
+    # the tier-1 matrix deliberately runs both a pinned floor and
+    # latest, and tolerances already absorb low-bit float drift.
+    backend_b = base.get("config", {}).get("backend")
+    backend_r = res.get("config", {}).get("backend")
+    if backend_b is not None and backend_r is not None and backend_b != backend_r:
+        return [
+            f"{name}: config.backend mismatch (baseline {backend_b!r} vs run"
+            f" {backend_r!r}) — refusing to compare across hardware"
+        ]
+    if backend_b is None or backend_r is None:
+        print(f"# note: {name} {'baseline' if backend_b is None else 'result'} "
+              "has no backend stamp; cross-hardware comparison not checked")
+    for key in ("device_kind", "jax_version"):
+        kb = base.get("config", {}).get(key)
+        kr = res.get("config", {}).get(key)
+        if kb is not None and kr is not None and kb != kr:
+            print(f"# note: {name} config.{key} differs (baseline {kb!r} vs run {kr!r})")
     for gate in gates:
         if gate.key not in base:
             failures.append(f"{name}: baseline lacks gated key {gate.key!r}")

@@ -21,6 +21,23 @@ from repro.core.histsim import HistSimParams
 from repro.data.layout import block_layout
 from repro.data.synth import SynthSpec, make_dataset
 
+def env_stamp() -> dict:
+    """Hardware/runtime provenance stamped into every BENCH_*.json
+    ``config`` block: `check_regression.py` refuses to compare reports
+    whose ``backend`` differs (an XLA:CPU baseline says nothing about a
+    GPU run) and annotates device-kind / jax-version drift, so results
+    from different hardware can't be silently gated against each
+    other."""
+    import jax
+
+    return {
+        "backend": jax.default_backend(),
+        "device_kind": jax.devices()[0].device_kind,
+        "device_count": jax.device_count(),
+        "jax_version": jax.__version__,
+    }
+
+
 # paper defaults (Sec 5.2)
 EPS_DEFAULT = 0.06
 DELTA_DEFAULT = 0.01

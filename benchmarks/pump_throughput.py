@@ -50,6 +50,8 @@ import time
 
 import numpy as np
 
+from benchmarks.common import env_stamp
+
 SMOKE = bool(int(os.environ.get("PUMP_BENCH_SMOKE", "0")))
 WORKERS = (1, 2, 8)
 N_QUERIES = 8
@@ -175,7 +177,7 @@ def run(rows: list) -> None:
     report = dict(
         config=dict(
             workers=list(WORKERS), n_queries=N_QUERIES, lookahead=LOOKAHEAD,
-            k=K, eps=EPS, delta=DELTA, smoke=SMOKE,
+            k=K, eps=EPS, delta=DELTA, smoke=SMOKE, **env_stamp(),
         ),
         serve=m,
         sync_reduction_w8=round(sync_reduction, 3),

@@ -14,6 +14,7 @@ import sys
 import time
 
 from benchmarks import (
+    autotune_smoke,
     fig4_bound_ratio,
     fig7_8_epsilon,
     fig9_lookahead,
@@ -41,6 +42,7 @@ SUITES = {
     "restart": warm_restart.run,
     "pump": pump_throughput.run,
     "telemetry": telemetry_overhead.run,
+    "autotune": autotune_smoke.run,
 }
 
 

@@ -61,6 +61,7 @@ import time
 import jax
 import numpy as np
 
+from benchmarks.common import env_stamp
 from repro.core import multiquery
 from repro.core.bounds import theorem1_epsilon
 from repro.data.layout import block_layout
@@ -346,7 +347,7 @@ def run(rows: list) -> None:
             v_z=SPEC.v_z, v_x=SPEC.v_x, num_tuples=SPEC.num_tuples,
             n_queries=N_QUERIES, max_active=MAX_ACTIVE, lookahead=LOOKAHEAD,
             poll_every=4, k=K, eps=EPS, delta=DELTA, repeats=REPEATS,
-            smoke=SMOKE,
+            smoke=SMOKE, **env_stamp(),
         ),
         off_s=round(off_s, 4),
         on_s=round(on_s, 4),

@@ -46,6 +46,7 @@ import time
 
 import numpy as np
 
+from benchmarks.common import env_stamp
 from repro.data.layout import block_layout
 from repro.data.synth import SynthSpec, make_dataset, perturb_distribution
 from repro.serve.fastmatch_server import MatchServer
@@ -197,7 +198,7 @@ def run(rows: list) -> None:
         config=dict(
             v_z=SPEC.v_z, v_x=SPEC.v_x, num_tuples=SPEC.num_tuples,
             n_warmup=N_WARMUP, n_fresh=N_FRESH, lookahead=LOOKAHEAD,
-            k=K, eps=EPS, delta=DELTA, smoke=SMOKE,
+            k=K, eps=EPS, delta=DELTA, smoke=SMOKE, **env_stamp(),
         ),
         cold=dict(tuples_per_query=cold_tuples, total_tuples=cold_total,
                   recall=cold_recall, serve_s=round(cold_s, 4)),

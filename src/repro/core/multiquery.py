@@ -80,7 +80,7 @@ from repro.core.bitmap import pack_active_mask, words_for
 from repro.core.histsim import HistSimState
 from repro.core.policies import mark_window
 from repro.io import BlockSource, WindowData, as_block_source
-from repro.kernels import ops
+from repro.kernels import autotune, ops
 from repro.obs.telemetry import Telemetry
 
 __all__ = [
@@ -314,16 +314,22 @@ def _or_reduce(words: jax.Array) -> jax.Array:
     return jax.lax.reduce(words, jnp.uint32(0), jax.lax.bitwise_or, dimensions=[0])
 
 
-@partial(jax.jit, static_argnames=("spec",))
+@partial(jax.jit, static_argnames=("spec", "plan"))
 def ingest(
-    state: MultiQueryState, z_idx: jax.Array, x_idx: jax.Array, *, spec: MultiQuerySpec
+    state: MultiQueryState,
+    z_idx: jax.Array,
+    x_idx: jax.Array,
+    *,
+    spec: MultiQuerySpec,
+    plan=None,
 ) -> MultiQueryState:
     """Accumulate a padded sample batch into the SHARED counts — one
     histogram-kernel launch serves every live query. The kernel emits
-    the per-candidate row-sum delta from the same pass, so advancing
-    ``n_i`` costs no second sweep over the delta matrix."""
+    the per-candidate row-sum delta from the same pass (or via the
+    two-step form when the tuned ``plan`` measured it faster), so
+    advancing ``n_i`` costs no second sweep over the delta matrix."""
     delta_counts, delta_n = ops.histogram_with_rowsums(
-        z_idx, x_idx, v_z=spec.v_z, v_x=spec.v_x
+        z_idx, x_idx, v_z=spec.v_z, v_x=spec.v_x, plan=plan if plan is not None else "auto"
     )
     return state._replace(
         counts=state.counts + delta_counts,
@@ -376,8 +382,10 @@ def apply_stats(
     )
 
 
-@partial(jax.jit, static_argnames=("spec",))
-def stats_step(state: MultiQueryState, *, spec: MultiQuerySpec) -> MultiQueryState:
+@partial(jax.jit, static_argnames=("spec", "plan"))
+def stats_step(
+    state: MultiQueryState, *, spec: MultiQuerySpec, plan=None
+) -> MultiQueryState:
     """One statistics-engine iteration for every slot — no Python loop.
 
     tau for ALL slots comes from ONE `ops.l1_distance_multi` call: the
@@ -388,18 +396,31 @@ def stats_step(state: MultiQueryState, *, spec: MultiQuerySpec) -> MultiQuerySta
     slots burned a full pass against a stale q_hat). Unoccupied slots
     are masked out of the tau update (pinned at the init value 1.0);
     the deviation assignment with each slot's (k, eps, delta) is
-    vmapped over the query axis via `apply_stats`.
+    vmapped over the query axis via `apply_stats`. ``plan`` pins the
+    tuned tau variant (`autotune.TauPlan`); None consults the plan
+    registry at trace time.
     """
-    tau = ops.l1_distance_multi(state.counts, state.q_hat)
+    tau = ops.l1_distance_multi(
+        state.counts, state.q_hat, plan=plan if plan is not None else "auto"
+    )
     tau = jnp.where(state.occupied[:, None], tau, 1.0)
     return apply_stats(state, tau, state.n, spec=spec)
 
 
 def run_round(
-    state: MultiQueryState, z_idx: jax.Array, x_idx: jax.Array, *, spec: MultiQuerySpec
+    state: MultiQueryState,
+    z_idx: jax.Array,
+    x_idx: jax.Array,
+    *,
+    spec: MultiQuerySpec,
+    plans: Optional[autotune.PlanPair] = None,
 ) -> MultiQueryState:
     """Shared ingest + vmapped stats — one full multi-query round."""
-    return stats_step(ingest(state, z_idx, x_idx, spec=spec), spec=spec)
+    return stats_step(
+        ingest(state, z_idx, x_idx, spec=spec, plan=plans.ingest if plans else None),
+        spec=spec,
+        plan=plans.tau if plans else None,
+    )
 
 
 def _advance_cursor(cursor: SampleCursor, wd: WindowData, marks: jax.Array) -> SampleCursor:
@@ -420,7 +441,7 @@ def _advance_cursor(cursor: SampleCursor, wd: WindowData, marks: jax.Array) -> S
     )
 
 
-@partial(jax.jit, static_argnames=("spec", "policy"))
+@partial(jax.jit, static_argnames=("spec", "policy", "plans"))
 def fused_round(
     state: MultiQueryState,
     cursor: SampleCursor,
@@ -428,6 +449,7 @@ def fused_round(
     *,
     spec: MultiQuerySpec,
     policy: str,
+    plans: Optional[autotune.PlanPair] = None,
 ) -> tuple:
     """One device-resident sampling round: mark + gather-mask + ingest +
     vmapped stats + read bookkeeping, one dispatch, zero host syncs.
@@ -447,15 +469,24 @@ def fused_round(
     def with_round(st: MultiQueryState) -> MultiQueryState:
         zw = jnp.where(marks[:, None], wd.z, jnp.int32(-1)).reshape(-1)
         xw = jnp.where(marks[:, None], wd.x, jnp.int32(-1)).reshape(-1)
-        return stats_step(ingest(st, zw, xw, spec=spec), spec=spec)
+        return stats_step(
+            ingest(st, zw, xw, spec=spec, plan=plans.ingest if plans else None),
+            spec=spec,
+            plan=plans.tau if plans else None,
+        )
 
     state = jax.lax.cond(n_marked > 0, with_round, lambda st: st, state)
     return state, _advance_cursor(cursor, wd, marks)
 
 
-@partial(jax.jit, static_argnames=("spec",))
+@partial(jax.jit, static_argnames=("spec", "plans"))
 def ingest_round(
-    state: MultiQueryState, cursor: SampleCursor, wd: WindowData, *, spec: MultiQuerySpec
+    state: MultiQueryState,
+    cursor: SampleCursor,
+    wd: WindowData,
+    *,
+    spec: MultiQuerySpec,
+    plans: Optional[autotune.PlanPair] = None,
 ) -> tuple:
     """Exact-completion round: ingest every unread block of the window
     into the shared counts, no marking, no stats (the caller runs one
@@ -464,7 +495,7 @@ def ingest_round(
     marks = wd.valid & ~cursor.read_mask[wd.indices]
     zw = jnp.where(marks[:, None], wd.z, jnp.int32(-1)).reshape(-1)
     xw = jnp.where(marks[:, None], wd.x, jnp.int32(-1)).reshape(-1)
-    state = ingest(state, zw, xw, spec=spec)
+    state = ingest(state, zw, xw, spec=spec, plan=plans.ingest if plans else None)
     return state, _advance_cursor(cursor, wd, marks)
 
 
@@ -626,6 +657,7 @@ class SharedCountsScheduler:
         mesh=None,
         model_axis: str = "model",
         telemetry: Optional[Telemetry] = None,
+        plans: Optional[autotune.PlanPair] = None,
     ):
         source: BlockSource = as_block_source(dataset)
         if spec.v_z != source.v_z or spec.v_x != source.v_x:
@@ -646,6 +678,15 @@ class SharedCountsScheduler:
         self.spec = spec
         self.policy = policy
         self.poll_every = poll_every
+        # Tuned kernel plans, resolved ONCE here (eagerly — with
+        # FASTMATCH_AUTOTUNE=1 this may measure and persist missing
+        # keys) and threaded statically through every jitted round, so
+        # one scheduler's whole lifetime runs one consistent plan.
+        self.plans = (
+            plans
+            if plans is not None
+            else autotune.resolve_plans(spec.v_z, spec.v_x, spec.max_queries)
+        )
         nb = source.num_blocks
         self.window = max(1, min(window, nb))
 
@@ -987,7 +1028,7 @@ class SharedCountsScheduler:
             jnp.asarray(delta, jnp.float32),
             spec=self.spec,
         )
-        self.state = stats_step(self.state, spec=self.spec)
+        self.state = stats_step(self.state, spec=self.spec, plan=self.plans.tau)
         self._sync()  # fresh counters for the ticket + fresh delta_upper
         qid = self._next_qid
         self._next_qid += 1
@@ -1098,7 +1139,8 @@ class SharedCountsScheduler:
         """One fused sampling round over prepared window data (no host
         sync — polling is the loop's cadence decision)."""
         self.state, self.cursor = fused_round(
-            self.state, self.cursor, wd, spec=self.spec, policy=self.policy
+            self.state, self.cursor, wd,
+            spec=self.spec, policy=self.policy, plans=self.plans,
         )
 
     def _fetch_window(self, win: np.ndarray) -> WindowData:
@@ -1110,7 +1152,7 @@ class SharedCountsScheduler:
     def _dispatch_ingest(self, wd: WindowData) -> None:
         """One exact-completion ingest round over prepared window data."""
         self.state, self.cursor = ingest_round(
-            self.state, self.cursor, wd, spec=self.spec
+            self.state, self.cursor, wd, spec=self.spec, plans=self.plans
         )
 
     def run_window(self, win: np.ndarray) -> int:
@@ -1164,7 +1206,7 @@ class SharedCountsScheduler:
                 windows += 1
         finally:
             stream.close()
-        self.state = stats_step(self.state, spec=self.spec)
+        self.state = stats_step(self.state, spec=self.spec, plan=self.plans.tau)
         self._sync()
         if self.telemetry is not None:
             self.telemetry.tracer.emit(

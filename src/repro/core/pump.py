@@ -127,6 +127,7 @@ class DistributedPump(SharedCountsScheduler):
         histogram_impl: str = "auto",
         onehot_dtype=jnp.float32,
         telemetry=None,
+        plans=None,
     ):
         if not isinstance(dataset, BlockedDataset):
             raise TypeError(
@@ -185,16 +186,20 @@ class DistributedPump(SharedCountsScheduler):
             mesh=mesh,
             model_axis=model_axis,
             telemetry=telemetry,
+            plans=plans,
         )
+        # The shard rounds key their plans on the per-worker kernel
+        # shapes (vz_shard rows), not the scheduler-level full V_Z —
+        # resolve separately unless the caller pinned a pair explicitly.
         self._round = make_pump_round(
             mesh, spec, blocks_per_worker=self._blocks_per_worker,
             data_axes=self.data_axes, model_axis=model_axis, policy=self.policy,
-            histogram_impl=histogram_impl, onehot_dtype=onehot_dtype,
+            histogram_impl=histogram_impl, onehot_dtype=onehot_dtype, plans=plans,
         )
         self._ingest_only_round = make_pump_ingest_round(
             mesh, spec, blocks_per_worker=self._blocks_per_worker,
             data_axes=self.data_axes, model_axis=model_axis,
-            histogram_impl=histogram_impl, onehot_dtype=onehot_dtype,
+            histogram_impl=histogram_impl, onehot_dtype=onehot_dtype, plans=plans,
         )
 
     # -- cursor placement / snapshot layout --------------------------------

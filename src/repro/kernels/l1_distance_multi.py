@@ -91,6 +91,7 @@ def l1_distance_multi_pallas(
     *,
     z_tile: int = _Z_TILE,
     x_tile: int = _X_TILE,
+    sweeps: int = 0,
     interpret: bool = False,
 ) -> jax.Array:
     """(Q, V_Z) float32 distances tau[q, i] for a (Q, V_X) target batch.
@@ -98,6 +99,12 @@ def l1_distance_multi_pallas(
     V_X and V_Z are padded internally; q_hat padding is 0 so padded
     lanes contribute |0 - 0| = 0. Any V_X is accepted (lane-tiled past
     ``x_tile``); Q must be the leading q_hat dimension (static).
+
+    ``sweeps`` selects the layout (an autotuner knob — both layouts are
+    bit-identical): 0 picks by padded V_X as described above, 1 forces
+    single-sweep (raises if V_X does not fit one ``x_tile`` block), 2
+    forces the two-sweep lane-tiled form even when V_X would fit —
+    smaller working set per grid step, counts read twice.
     """
     v_z, v_x = counts.shape
     num_q, v_xq = q_hat.shape
@@ -105,13 +112,20 @@ def l1_distance_multi_pallas(
         raise ValueError(f"q_hat V_X={v_xq} does not match counts V_X={v_x}")
     if x_tile % 128 != 0:
         raise ValueError(f"x_tile must be a lane multiple of 128, got {x_tile}")
+    if sweeps not in (0, 1, 2):
+        raise ValueError(f"sweeps must be 0 (auto), 1 or 2, got {sweeps}")
 
     z_tile = min(z_tile, v_z)
     vz_pad = -(-v_z // z_tile) * z_tile
     vx_pad = max(128, -(-v_x // 128) * 128)
-    if vx_pad <= x_tile:
+    if sweeps == 1 and vx_pad > x_tile:
+        raise ValueError(
+            f"sweeps=1 needs padded V_X ({vx_pad}) <= x_tile ({x_tile})"
+        )
+    if vx_pad <= x_tile and sweeps != 2:
         x_tile, tiled = vx_pad, False
     else:
+        x_tile = min(x_tile, vx_pad)  # forced two-sweep on a small V_X
         vx_pad, tiled = -(-v_x // x_tile) * x_tile, True
     if (vz_pad, vx_pad) != (v_z, v_x):
         counts = jnp.pad(counts, ((0, vz_pad - v_z), (0, vx_pad - v_x)))

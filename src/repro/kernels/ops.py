@@ -1,51 +1,77 @@
 """Public jit'd entry points for the kernels package.
 
-Dispatch policy: on TPU backends the Pallas kernels run compiled; on CPU
-(this container) the pure-jnp oracles from ref.py are used — they are the
-same math and XLA:CPU executes them far faster than interpret-mode
-Pallas. Tests force ``impl="pallas"`` with ``interpret=True`` to validate
-the kernels themselves against the oracles.
+Dispatch is two-layered:
 
-Dispatch table (entry point -> TPU kernel / CPU oracle):
+1. **Engine** (the ``impl`` argument): which code family runs.
+   ``"auto"`` picks Pallas on TPU and the pure-jnp ref.py oracles on
+   CPU (interpret-mode Pallas is far slower than XLA:CPU for the same
+   math). Tests force ``impl="pallas"`` with ``interpret=True`` to
+   validate the kernels themselves against the oracles.
 
-  ======================  ==============================  ==========================
-  op                      pallas (TPU)                    ref (CPU)
-  ======================  ==============================  ==========================
-  histogram               histogram_pallas                histogram_ref
-                                                          (impl="matmul":
-                                                          histogram_matmul)
-  histogram_with_rowsums  histogram_with_rowsums_pallas   histogram_with_rowsums_ref
-                          (row sums reduced from the      (impl="matmul":
-                          VMEM-resident counts block)     histogram_matmul + sum)
-  l1_distance             l1_distance_pallas              l1_distance_ref
-                          (single query, V_X <= 4096)
-  l1_distance_multi       l1_distance_multi_pallas        l1_distance_multi_ref
-                          (Q-batched, one HBM pass over   (r_hat computed once,
-                          counts; V_X lane-tiled past     broadcast over Q)
-                          4096)
-  anyactive               anyactive_pallas                anyactive_ref
-  ======================  ==============================  ==========================
+2. **Plan** (the ``plan`` argument on the two hot-path entry points):
+   WHICH measured-fastest variant of that engine runs, resolved from
+   `repro.kernels.autotune`'s committed per-backend plan file. Shapes
+   are concrete at trace time, so a ``plan="auto"`` registry lookup is
+   a plain dict get baked into the compiled program — zero dispatch
+   cost per call. A lookup miss, a stale plan file, or a plan the
+   engine/shape can't run falls back to `autotune.DEFAULT_TAU` /
+   `DEFAULT_INGEST`, which reproduce the pre-autotune dispatch bit for
+   bit. Pass an explicit `autotune.TauPlan` / `IngestPlan` to pin a
+   variant (the round-builders thread a resolved `PlanPair` through
+   statically), or ``plan="default"`` to ignore the registry.
+
+Plan-driven entry points (variants per engine; every variant is
+bit-identical on integer-valued counts — see tests/test_autotune.py):
+
+  ======================  ==============================================
+  op                      plan knobs
+  ======================  ==============================================
+  l1_distance_multi       variant: "batched" (one counts pass scores all
+                          Q targets — `l1_distance_multi_pallas` /
+                          `l1_distance_multi_ref`), "unrolled" (Q
+                          single-query passes — `l1_distance_pallas` /
+                          `l1_distance_ref` stacked), "xla" (fused 3D
+                          broadcast, `l1_distance_multi_xla`);
+                          z_tile / x_tile / sweeps (Pallas tiling and
+                          single- vs two-sweep V_X phase); lowprec
+                          (uint16 counts traffic behind a runtime
+                          overflow gate, exact by construction).
+  histogram_with_rowsums  fused: one pass with rows reduced from the
+                          VMEM-resident counts block
+                          (`histogram_with_rowsums_pallas` /
+                          `histogram_with_rowsums_ref`) vs the two-step
+                          histogram + separate row reduction;
+                          s_tile / z_tile (Pallas tiling).
+                          ``impl="matmul"`` (chunked one-hot
+                          contraction) bypasses the plan — it is an
+                          explicit engine request, not a tuned variant.
+  ======================  ==============================================
+
+Fixed-dispatch entry points (no plan — one variant per engine):
+`histogram` (histogram_pallas / histogram_ref / "matmul"),
+`l1_distance` (l1_distance_pallas, V_X <= 4096 / l1_distance_ref),
+`anyactive` (anyactive_pallas / anyactive_ref).
 
 `l1_distance` is the Q=1 legacy entry point; every round in the engine
-(histsim / multiquery / distributed) now routes through
-`l1_distance_multi`, whose HBM traffic is independent of the number of
-live query slots, and through `histogram_with_rowsums`, which emits the
-ingest-side ``n_i`` delta without a second pass over the delta matrix.
+(histsim / multiquery / distributed / pump) routes through
+`l1_distance_multi` and `histogram_with_rowsums`, so the plan file is
+what the serving loop actually runs. After editing the plan file on
+disk, call `autotune.reload()` — it clears the jit caches that hold the
+previously-baked plans.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Literal
+from typing import Literal, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import autotune, ref
 from repro.kernels.anyactive import anyactive_pallas
-from repro.kernels.histogram import histogram_pallas, histogram_with_rowsums_pallas
+from repro.kernels.histogram import histogram_pallas
 from repro.kernels.l1_distance import l1_distance_pallas
-from repro.kernels.l1_distance_multi import l1_distance_multi_pallas
 
 __all__ = [
     "histogram",
@@ -57,6 +83,10 @@ __all__ = [
 ]
 
 Impl = Literal["auto", "pallas", "ref"]
+# "auto": trace-time registry lookup; "default": pin the pre-autotune
+# dispatch; or an explicit plan instance (hashable -> jit-static).
+TauPlanArg = Union[str, None, autotune.TauPlan]
+IngestPlanArg = Union[str, None, autotune.IngestPlan]
 
 
 def default_impl() -> str:
@@ -92,7 +122,10 @@ def histogram(
     return ref.histogram_ref(z_idx, x_idx, v_z=v_z, v_x=v_x)
 
 
-@functools.partial(jax.jit, static_argnames=("v_z", "v_x", "impl", "interpret", "onehot_dtype"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("v_z", "v_x", "impl", "interpret", "onehot_dtype", "plan"),
+)
 def histogram_with_rowsums(
     z_idx: jax.Array,
     x_idx: jax.Array,
@@ -102,23 +135,30 @@ def histogram_with_rowsums(
     impl: Impl = "auto",
     interpret: bool = False,
     onehot_dtype=jnp.float32,
+    plan: IngestPlanArg = "auto",
 ) -> tuple:
-    """((V_Z, V_X), (V_Z,)) histogram + row-sum delta in one fused pass.
+    """((V_Z, V_X), (V_Z,)) histogram + row-sum delta.
 
     rows == counts.sum(axis=1) exactly (integer-valued f32 counts), so
     `ingest` can advance ``n_i`` without re-reading the delta matrix.
-    Same impl choices as `histogram`.
+    Same impl choices as `histogram`; ``plan`` picks the tuned variant
+    (fused one-pass vs two-step, Pallas tiles — see the module
+    docstring). ``impl="matmul"`` bypasses the plan.
     """
-    if _resolve(impl) == "pallas":
-        return histogram_with_rowsums_pallas(
-            z_idx, x_idx, v_z=v_z, v_x=v_x, interpret=interpret
-        )
     if impl == "matmul":
         counts = ref.histogram_matmul(
             z_idx, x_idx, v_z=v_z, v_x=v_x, onehot_dtype=onehot_dtype
         )
         return counts, jnp.sum(counts, axis=1)
-    return ref.histogram_with_rowsums_ref(z_idx, x_idx, v_z=v_z, v_x=v_x)
+    return autotune.run_ingest(
+        z_idx,
+        x_idx,
+        v_z=v_z,
+        v_x=v_x,
+        plan=autotune.coerce_ingest_plan(plan, v_z, v_x),
+        engine=_resolve(impl),
+        interpret=interpret,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "interpret"))
@@ -135,23 +175,31 @@ def l1_distance(
     return ref.l1_distance_ref(counts, q_hat)
 
 
-@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+@functools.partial(jax.jit, static_argnames=("impl", "interpret", "plan"))
 def l1_distance_multi(
     counts: jax.Array,
     q_hat: jax.Array,
     *,
     impl: Impl = "auto",
     interpret: bool = False,
+    plan: TauPlanArg = "auto",
 ) -> jax.Array:
     """(Q, V_Z) f32 batched distances for a (Q, V_X) target matrix.
 
-    One pass over the shared counts matrix scores every query slot —
-    HBM traffic Q * V_Z * V_X -> V_Z * V_X + Q * V_X, independent of Q.
+    ``plan`` picks the tuned variant (batched one-pass / Q-unrolled /
+    fused-3D "xla", plus Pallas tiles, sweep phase, and the uint16
+    low-precision counts path — see the module docstring). The default
+    plan is the batched form: HBM traffic Q * V_Z * V_X -> V_Z * V_X +
+    Q * V_X, independent of Q. All variants are bit-identical on
+    integer-valued counts, so the plan is a pure wall-clock choice.
     Unlike the Q=1 `l1_distance`, V_X is unbounded (lane-tiled on TPU).
     """
-    if _resolve(impl) == "pallas":
-        return l1_distance_multi_pallas(counts, q_hat, interpret=interpret)
-    return ref.l1_distance_multi_ref(counts, q_hat)
+    tau_plan = autotune.coerce_tau_plan(
+        plan, counts.shape[0], counts.shape[1], q_hat.shape[0]
+    )
+    return autotune.run_tau(
+        counts, q_hat, plan=tau_plan, engine=_resolve(impl), interpret=interpret
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "interpret"))

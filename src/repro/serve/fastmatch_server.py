@@ -144,6 +144,7 @@ class MatchServer:
         autosave_rounds: Optional[int] = None,
         checkpoint_keep_last: int = 3,
         telemetry=None,
+        kernel_plans=None,
     ):
         # k_cap: static bound on any query's k — lets the per-slot
         # deviation assignment use a (k_cap+1)-element top_k instead of
@@ -172,6 +173,12 @@ class MatchServer:
         # the scheduler/pump, every PrefetchSource, and the
         # CheckpointManager; None (default) leaves every layer on its
         # untouched zero-overhead path.
+        #
+        # kernel_plans: an `autotune.PlanPair` pinning the tuned kernel
+        # variants for every round this server dispatches; None (the
+        # default) resolves from the committed per-backend plan file at
+        # scheduler construction. `server.kernel_plans` exposes what
+        # was resolved.
         if telemetry is True:
             telemetry = Telemetry()
         elif telemetry is False:
@@ -207,6 +214,7 @@ class MatchServer:
                 poll_every=poll_every,
                 prefetch=prefetch,
                 telemetry=telemetry,
+                plans=kernel_plans,
             )
         else:
             if tuple(data_axes) != ("data",):
@@ -239,6 +247,7 @@ class MatchServer:
                 mesh=mesh,
                 model_axis=model_axis,
                 telemetry=telemetry,
+                plans=kernel_plans,
             )
         self.max_passes = max_passes
         self._mesh = mesh
@@ -265,6 +274,13 @@ class MatchServer:
         self._pass_pos = 0
         self._pass_read = 0
         self._pass_start_rounds = 0
+
+    @property
+    def kernel_plans(self):
+        """The `autotune.PlanPair` this server's scheduler-level rounds
+        run (the pump's shard rounds key on the per-worker shard shapes
+        — see `core.pump.DistributedPump`)."""
+        return self.scheduler.plans
 
     # -- request queue -----------------------------------------------------
 

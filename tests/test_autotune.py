@@ -1,0 +1,346 @@
+"""Kernel autotuner: candidate equivalence, plan persistence, dispatch determinism.
+
+The tuner's license to pick any candidate purely by measured wall time
+rests on the equivalence contract this file enforces:
+
+  * every tau / ingest candidate on the REF engine (the production
+    XLA:CPU path) is BIT-identical to the pre-autotune reference —
+    including the uint16 low-precision path, whose runtime overflow
+    gate must fall back to full precision rather than wrap;
+  * Pallas tile/sweep candidates (TPU knobs, exercised in interpret
+    mode) reassociate the f32 lane reduce, so they get the same
+    contract `tests/test_stats_batched.py` pins: allclose(3e-6) plus a
+    golden top-k recall gate;
+  * a committed plan file yields byte-stable dispatch across loads and
+    processes, and a stale / corrupt / malformed plan file degrades to
+    the default plans with a warning — never a crash.
+"""
+
+import dataclasses
+import json
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune, ops
+from repro.kernels.l1_distance_multi import l1_distance_multi_pallas
+
+
+def _case(v_z, v_x, q, seed=0, hi=50):
+    """Integer-valued f32 counts + dirichlet targets, the production regime."""
+    rng = np.random.default_rng(seed)
+    counts = jnp.asarray(rng.integers(0, hi, size=(v_z, v_x)).astype(np.float32))
+    q_hat = jnp.asarray(
+        np.stack([rng.dirichlet(np.ones(v_x)).astype(np.float32) for _ in range(q)])
+    )
+    return counts, q_hat
+
+
+def _baseline(counts, q_hat):
+    """The PR-2 reference: per-slot unrolled tau on the ref engine."""
+    return np.asarray(
+        autotune.run_tau(counts, q_hat, plan=autotune.TauPlan(variant="unrolled"),
+                         engine="ref")
+    )
+
+
+@pytest.fixture()
+def clean_warnings():
+    """_warn_once dedupes process-wide; reset so each test sees its warning."""
+    autotune._warned.clear()
+    yield
+    autotune._warned.clear()
+
+
+class TestRefCandidateSpace:
+    """Full candidate sweep on the production CPU engine: bit-identical."""
+
+    @pytest.mark.parametrize("v_z,v_x,q", [(64, 300, 3), (128, 64, 1), (96, 128, 8)])
+    def test_every_ref_candidate_bit_identical(self, v_z, v_x, q):
+        counts, q_hat = _case(v_z, v_x, q)
+        want = _baseline(counts, q_hat)
+        cands = autotune.tau_candidates("ref", v_z, v_x, q)
+        # the sweep must cover every variant, full- and low-precision
+        assert {c.variant for c in cands} == set(autotune.TAU_VARIANTS)
+        assert any(c.lowprec for c in cands)
+        for cand in cands:
+            got = np.asarray(autotune.run_tau(counts, q_hat, plan=cand, engine="ref"))
+            np.testing.assert_array_equal(got, want, err_msg=repr(cand))
+
+    def test_every_ingest_candidate_bit_identical(self):
+        v_z, v_x, n = 64, 48, 4096
+        rng = np.random.default_rng(3)
+        z = jnp.asarray(rng.integers(-1, v_z, size=n).astype(np.int32))
+        x = jnp.asarray(rng.integers(-1, v_x, size=n).astype(np.int32))
+        base_c, base_n = autotune.run_ingest(
+            z, x, v_z=v_z, v_x=v_x, plan=autotune.DEFAULT_INGEST, engine="ref"
+        )
+        for cand in autotune.ingest_candidates("ref", v_z, v_x):
+            c, rows = autotune.run_ingest(z, x, v_z=v_z, v_x=v_x, plan=cand, engine="ref")
+            np.testing.assert_array_equal(np.asarray(c), np.asarray(base_c), err_msg=repr(cand))
+            np.testing.assert_array_equal(np.asarray(rows), np.asarray(base_n), err_msg=repr(cand))
+
+    def test_lowprec_in_range_is_exact_and_jittable(self):
+        counts, q_hat = _case(80, 96, 4, hi=60_000)  # near the uint16 ceiling
+        plan = autotune.TauPlan(lowprec=True)
+        got = jax.jit(
+            lambda c, t: autotune.run_tau(c, t, plan=plan, engine="ref")
+        )(counts, q_hat)
+        np.testing.assert_array_equal(np.asarray(got), _baseline(counts, q_hat))
+
+    def test_lowprec_overflow_gate_falls_back_exactly(self):
+        counts, q_hat = _case(32, 64, 2)
+        counts = counts.at[3, 5].set(70_000.0)  # above uint16 range
+        got = np.asarray(
+            autotune.run_tau(counts, q_hat, plan=autotune.TauPlan(lowprec=True),
+                             engine="ref")
+        )
+        # a uint16 cast would wrap 70000 -> 4464 and shift tau; the
+        # lax.cond gate must instead route the full-precision path
+        np.testing.assert_array_equal(got, _baseline(counts, q_hat))
+
+
+class TestPallasCandidateSpace:
+    """Tile/sweep candidates (interpret mode): allclose + golden recall."""
+
+    def test_tiled_candidates_allclose_with_golden_recall(self):
+        v_z, v_x, q, k = 64, 300, 4, 8
+        counts, q_hat = _case(v_z, v_x, q)
+        want = _baseline(counts, q_hat)
+        for cand in autotune.tau_candidates("pallas", v_z, v_x, q):
+            got = np.asarray(
+                autotune.run_tau(counts, q_hat, plan=cand, engine="pallas",
+                                 interpret=True)
+            )
+            # same tolerance test_stats_batched.py pins for lane-tiled configs
+            np.testing.assert_allclose(got, want, atol=3e-6, err_msg=repr(cand))
+            # golden recall: every candidate top-k entry is a true
+            # member of the reference top-k up to reduce-order jitter
+            for s in range(q):
+                kth = np.sort(want[s])[k - 1]
+                top = np.argsort(got[s], kind="stable")[:k]
+                assert (want[s][top] <= kth + 1e-5).all(), (cand, s)
+
+    def test_sweeps1_rejects_tile_smaller_than_vx(self):
+        counts, q_hat = _case(16, 300, 2)
+        with pytest.raises(ValueError, match="sweep"):
+            l1_distance_multi_pallas(counts, q_hat, x_tile=128, sweeps=1,
+                                     interpret=True)
+
+    def test_unusable_plan_falls_back_with_warning(self, clean_warnings):
+        # pallas-unrolled is rejected above the lane bound; run_tau must
+        # warn once and dispatch the default plan instead of crashing
+        counts, q_hat = _case(8, 4224, 2)
+        bad = autotune.TauPlan(variant="unrolled")
+        with pytest.warns(UserWarning, match="fall"):
+            got = autotune.run_tau(counts, q_hat, plan=bad, engine="pallas",
+                                   interpret=True)
+        want = autotune.run_tau(counts, q_hat, plan=autotune.DEFAULT_TAU,
+                                engine="pallas", interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestRegistryPersistence:
+    def _populated(self, backend="cpu"):
+        reg = autotune.PlanRegistry(backend=backend)
+        reg.tau[autotune.tau_key(64, 300, 4)] = autotune.TauPlan(variant="xla")
+        reg.tau[autotune.tau_key(256, 256, 8)] = autotune.TauPlan(lowprec=True)
+        reg.ingest[autotune.ingest_key(64, 300)] = autotune.IngestPlan(fused=False)
+        return reg
+
+    def test_save_load_roundtrip_byte_stable(self, tmp_path):
+        reg = self._populated()
+        path = reg.save(tmp_path / "cpu.json")
+        loaded = autotune.PlanRegistry.load(path=path, backend="cpu")
+        assert loaded.decisions() == reg.decisions()
+        assert loaded.tau_plan(64, 300, 4) == autotune.TauPlan(variant="xla")
+        assert loaded.ingest_plan(64, 300) == autotune.IngestPlan(fused=False)
+        # a second save of the loaded registry emits identical bytes
+        bytes1 = path.read_text()
+        loaded.save(tmp_path / "again.json")
+        assert (tmp_path / "again.json").read_text() == bytes1
+
+    def test_missing_file_is_silent_defaults(self, tmp_path, clean_warnings):
+        import warnings as w
+        with w.catch_warnings():
+            w.simplefilter("error")  # any warning would raise
+            reg = autotune.PlanRegistry.load(path=tmp_path / "absent.json",
+                                             backend="cpu")
+        assert reg.tau_plan(64, 300, 4) == autotune.DEFAULT_TAU
+        assert reg.ingest_plan(64, 300) == autotune.DEFAULT_INGEST
+
+    def test_stale_schema_warns_and_defaults(self, tmp_path, clean_warnings):
+        reg = self._populated()
+        path = reg.save(tmp_path / "cpu.json")
+        doc = json.loads(path.read_text())
+        doc["schema"] = autotune.PLAN_SCHEMA + 1
+        path.write_text(json.dumps(doc))
+        with pytest.warns(UserWarning, match="schema"):
+            loaded = autotune.PlanRegistry.load(path=path, backend="cpu")
+        assert not loaded.tau and not loaded.ingest
+        assert loaded.tau_plan(64, 300, 4) == autotune.DEFAULT_TAU
+
+    def test_corrupt_json_warns_and_defaults(self, tmp_path, clean_warnings):
+        path = tmp_path / "cpu.json"
+        path.write_text("{not json")
+        with pytest.warns(UserWarning, match="unreadable"):
+            loaded = autotune.PlanRegistry.load(path=path, backend="cpu")
+        assert loaded.tau_plan(1, 1, 1) == autotune.DEFAULT_TAU
+
+    def test_backend_mismatch_warns_and_defaults(self, tmp_path, clean_warnings):
+        path = self._populated(backend="tpu").save(tmp_path / "tpu.json")
+        with pytest.warns(UserWarning, match="backend"):
+            loaded = autotune.PlanRegistry.load(path=path, backend="cpu")
+        assert not loaded.tau
+
+    def test_malformed_entry_dropped_not_fatal(self, tmp_path, clean_warnings):
+        reg = self._populated()
+        path = reg.save(tmp_path / "cpu.json")
+        doc = json.loads(path.read_text())
+        doc["tau"][autotune.tau_key(64, 300, 4)]["variant"] = "warp-drive"
+        path.write_text(json.dumps(doc))
+        with pytest.warns(UserWarning, match="malformed"):
+            loaded = autotune.PlanRegistry.load(path=path, backend="cpu")
+        # the bad entry is gone (lookup -> default), the good ones survive
+        assert loaded.tau_plan(64, 300, 4) == autotune.DEFAULT_TAU
+        assert loaded.tau_plan(256, 256, 8) == autotune.TauPlan(lowprec=True)
+        assert loaded.ingest_plan(64, 300) == autotune.IngestPlan(fused=False)
+
+
+class TestDispatch:
+    def test_plan_arg_coercion_rejects_junk(self):
+        with pytest.raises(TypeError):
+            autotune.coerce_tau_plan(42, 8, 8, 1)
+        with pytest.raises(TypeError):
+            autotune.coerce_ingest_plan("fastest", 8, 8)
+
+    def test_auto_dispatch_traces_the_registered_plan(self, tmp_path, monkeypatch):
+        """plan="auto" is resolved at trace time from the process
+        registry: with a plan file mapping this exact shape to the xla
+        variant, the traced program IS the xla program."""
+        reg = autotune.PlanRegistry(backend=jax.default_backend())
+        reg.tau[autotune.tau_key(48, 96, 3)] = autotune.TauPlan(variant="xla")
+        path = reg.save(tmp_path / f"{reg.backend}.json")
+        monkeypatch.setenv("FASTMATCH_PLANS_DIR", str(tmp_path))
+        autotune.reload()
+        try:
+            counts, q_hat = _case(48, 96, 3)
+            jx_auto = str(jax.make_jaxpr(
+                lambda c, t: ops.l1_distance_multi(c, t, plan="auto"))(counts, q_hat))
+            jx_xla = str(jax.make_jaxpr(
+                lambda c, t: ops.l1_distance_multi(
+                    c, t, plan=autotune.TauPlan(variant="xla")))(counts, q_hat))
+            jx_default = str(jax.make_jaxpr(
+                lambda c, t: ops.l1_distance_multi(c, t, plan="default"))(counts, q_hat))
+            assert jx_auto == jx_xla
+            assert jx_auto != jx_default
+            # an unregistered shape traces the default program
+            counts2, q_hat2 = _case(40, 96, 3)
+            jx_miss = str(jax.make_jaxpr(
+                lambda c, t: ops.l1_distance_multi(c, t, plan="auto"))(counts2, q_hat2))
+            jx_def2 = str(jax.make_jaxpr(
+                lambda c, t: ops.l1_distance_multi(c, t, plan="default"))(counts2, q_hat2))
+            assert jx_miss == jx_def2
+        finally:
+            monkeypatch.delenv("FASTMATCH_PLANS_DIR")
+            autotune.reload()
+        assert path.exists()
+
+    def test_resolve_plans_tunes_on_miss_and_persists(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("FASTMATCH_PLANS_DIR", str(tmp_path))
+        monkeypatch.setenv("FASTMATCH_AUTOTUNE", "1")
+        autotune.reload()
+        try:
+            pair = autotune.resolve_plans(32, 32, 1, n_samples=512)
+            path = autotune.plan_path()
+            assert path.exists()
+            doc = json.loads(path.read_text())
+            assert autotune.tau_key(32, 32, 1) in doc["tau"]
+            assert autotune.ingest_key(32, 32) in doc["ingest"]
+            # a second resolve hits the persisted plans, no re-tuning
+            monkeypatch.delenv("FASTMATCH_AUTOTUNE")
+            again = autotune.reload().tau_plan(32, 32, 1)
+            assert again == pair.tau
+            assert autotune.resolve_plans(32, 32, 1).tau == pair.tau
+        finally:
+            monkeypatch.delenv("FASTMATCH_PLANS_DIR", raising=False)
+            monkeypatch.delenv("FASTMATCH_AUTOTUNE", raising=False)
+            autotune.reload()
+
+    def test_without_plan_file_dispatch_matches_pre_autotune(self, tmp_path, monkeypatch):
+        """Registry miss == the hard-coded pre-autotune kernels: same
+        traced program as plan=None (the PR-2 dispatch), bit-stable."""
+        monkeypatch.setenv("FASTMATCH_PLANS_DIR", str(tmp_path))  # empty dir
+        autotune.reload()
+        try:
+            counts, q_hat = _case(64, 300, 3)
+            jx_auto = str(jax.make_jaxpr(
+                lambda c, t: ops.l1_distance_multi(c, t, plan="auto"))(counts, q_hat))
+            jx_none = str(jax.make_jaxpr(
+                lambda c, t: ops.l1_distance_multi(c, t, plan=None))(counts, q_hat))
+            assert jx_auto == jx_none
+        finally:
+            monkeypatch.delenv("FASTMATCH_PLANS_DIR")
+            autotune.reload()
+
+
+class TestSchedulerPlans:
+    def test_explicit_plans_bit_equivalent_to_default(self):
+        from repro.core import multiquery as mq
+        from repro.data.layout import block_layout
+        from repro.data.synth import SynthSpec, make_dataset
+
+        spec_s = SynthSpec(v_z=48, v_x=12, num_tuples=200_000, k=5, n_close=5,
+                           close_distance=0.02, far_distance=0.3, zipf_a=0.9, seed=11)
+        ds = make_dataset(spec_s)
+        blocked = block_layout(ds.z, ds.x, v_z=spec_s.v_z, v_x=spec_s.v_x,
+                               block_size=256, seed=11)
+        spec = mq.MultiQuerySpec(v_z=spec_s.v_z, v_x=spec_s.v_x, max_queries=2)
+        exotic = autotune.PlanPair(tau=autotune.TauPlan(variant="xla", lowprec=True),
+                                   ingest=autotune.IngestPlan(fused=False))
+        results = []
+        for plans in (None, exotic):
+            sched = mq.SharedCountsScheduler(blocked, spec, window=32, seed=0,
+                                             plans=plans)
+            sched.admit(ds.target, k=5, eps=0.08, delta=0.05)
+            sched.run_window(sched.order[:32])
+            results.append((np.asarray(sched.state.counts),
+                            np.asarray(sched.state.n),
+                            np.asarray(sched.state.delta_upper)))
+        for a, b in zip(results[0], results[1]):
+            np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.slow
+class TestCrossProcess:
+    def test_committed_plan_dispatches_byte_stable_across_processes(self, tmp_path):
+        reg = autotune.PlanRegistry(backend="cpu")
+        reg.tau[autotune.tau_key(64, 300, 4)] = autotune.TauPlan(variant="xla")
+        reg.ingest[autotune.ingest_key(64, 300)] = autotune.IngestPlan(fused=False)
+        reg.save(tmp_path / "cpu.json")
+        prog = (
+            "import os; os.environ['FASTMATCH_PLANS_DIR'] = r'%s'\n"
+            "from repro.kernels import autotune\n"
+            "import sys; sys.stdout.write(autotune.registry().decisions())\n"
+        ) % str(tmp_path)
+        outs = [
+            subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                           text=True, check=True).stdout
+            for _ in range(2)
+        ]
+        assert outs[0] == outs[1] == reg.decisions()
+
+
+def test_tau_bytes_model_orders_variants_sanely():
+    v_z, v_x = 4096, 1024
+    b = {v: autotune.tau_bytes(v_z, v_x, 8, autotune.TauPlan(variant=v))
+         for v in autotune.TAU_VARIANTS}
+    assert b["batched"] < b["unrolled"]  # one counts sweep vs Q sweeps
+    low = autotune.tau_bytes(v_z, v_x, 8, autotune.TauPlan(lowprec=True))
+    assert low < b["batched"]  # uint16 halves the counts term
+    asdict = dataclasses.asdict(autotune.TauPlan())
+    assert set(asdict) == {"variant", "z_tile", "x_tile", "sweeps", "lowprec"}

@@ -90,6 +90,39 @@ class TestCheckSuite:
                {**PUMP_BASE, "config": dict(smoke=False)})
         assert any("smoke" in f for f in _check_pump(base, res))
 
+    def test_backend_mismatch_refused(self, dirs):
+        """An XLA:CPU baseline must never gate a GPU run: when both
+        reports carry a hardware stamp and the backends differ, the
+        comparison is refused outright."""
+        base, res = dirs
+        _write(base / "BENCH_pump.json",
+               {**PUMP_BASE, "config": dict(smoke=True, backend="cpu")})
+        _write(res / "BENCH_pump.json",
+               {**PUMP_BASE, "config": dict(smoke=True, backend="gpu")})
+        failures = _check_pump(base, res)
+        assert len(failures) == 1 and "backend" in failures[0]
+
+    def test_unstamped_baseline_still_gates_with_note(self, dirs, capsys):
+        """Pre-stamp baselines (no config.backend) keep gating — the
+        guard only refuses KNOWN cross-hardware comparisons."""
+        base, res = dirs
+        _write(base / "BENCH_pump.json", PUMP_BASE)  # no stamp
+        _write(res / "BENCH_pump.json",
+               {**PUMP_BASE, "config": dict(smoke=True, backend="cpu")})
+        assert _check_pump(base, res) == []
+        assert "no backend stamp" in capsys.readouterr().out
+
+    def test_device_kind_drift_is_informational(self, dirs, capsys):
+        base, res = dirs
+        _write(base / "BENCH_pump.json",
+               {**PUMP_BASE,
+                "config": dict(smoke=True, backend="cpu", device_kind="cpu0")})
+        _write(res / "BENCH_pump.json",
+               {**PUMP_BASE,
+                "config": dict(smoke=True, backend="cpu", device_kind="cpu1")})
+        assert _check_pump(base, res) == []
+        assert "device_kind" in capsys.readouterr().out
+
     def test_missing_gated_key_is_a_failure(self, dirs):
         base, res = dirs
         _write(base / "BENCH_pump.json", PUMP_BASE)
