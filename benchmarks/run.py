@@ -15,6 +15,7 @@ import time
 
 from benchmarks import (
     autotune_smoke,
+    fault_recovery,
     fig4_bound_ratio,
     fig7_8_epsilon,
     fig9_lookahead,
@@ -43,6 +44,7 @@ SUITES = {
     "pump": pump_throughput.run,
     "telemetry": telemetry_overhead.run,
     "autotune": autotune_smoke.run,
+    "faults": fault_recovery.run,
 }
 
 

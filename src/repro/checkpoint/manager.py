@@ -4,12 +4,21 @@ Layout:
     <dir>/step_<N>/
         META.json            {step, flat keys, shapes, dtypes, config_hash}
         arr_<i>.npy          one file per pytree leaf (host-gathered)
+        CHECKSUMS.json       sha256 per file (integrity sidecar)
     <dir>/LATEST             text file: "step_<N>"  (atomic rename commit)
 
 Fault-tolerance contract:
   * save is crash-atomic: everything is written to step_<N>.tmp.<pid> and
     committed with two renames (dir, then LATEST). A machine dying
     mid-save never corrupts the restore point.
+  * every committed file is covered by a CHECKSUMS.json sha256 sidecar,
+    verified on restore: a truncated or bit-rotted snapshot (disk
+    corruption survives the rename protocol — renames protect against
+    crashes, not media) falls back to the newest older step that
+    verifies, with a warning + counter, instead of feeding corrupt
+    counts into the serving cache. An explicitly requested step that
+    fails verification raises. Sidecar-less snapshots (written before
+    checksums existed) are accepted as-is.
   * restore() picks LATEST, falling back to the newest complete step dir
     if LATEST is missing (half-written LATEST loses one save, not the run).
   * keep_last N garbage-collects old steps AFTER a successful commit;
@@ -27,6 +36,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+import logging
 import os
 import pathlib
 import shutil
@@ -37,6 +47,8 @@ import jax
 import numpy as np
 
 __all__ = ["CheckpointManager"]
+
+logger = logging.getLogger(__name__)
 
 
 def _pid_alive(pid: int) -> bool:
@@ -70,6 +82,7 @@ class CheckpointManager:
         # should be knowable only by grepping the filesystem.
         self.gc_swept = 0
         self.save_failures = 0
+        self.corrupt_steps = 0  # snapshots rejected by checksum verification
         if telemetry is not None:
             reg = telemetry.registry
             self._c_saves = reg.counter(
@@ -81,6 +94,9 @@ class CheckpointManager:
             self._c_gc_swept = reg.counter(
                 "checkpoint_gc_swept_total",
                 "orphaned tmp leftovers removed (dead-pid crashed saves)")
+            self._c_corrupt = reg.counter(
+                "checkpoint_corrupt_steps_total",
+                "snapshots rejected by checksum verification at restore")
             self._h_save = reg.histogram(
                 "checkpoint_save_seconds", help="wall time of a committed save")
 
@@ -117,17 +133,29 @@ class CheckpointManager:
             "leaves": [],
         }
         nbytes = 0
+        sums = {}
         for i, (name, leaf) in enumerate(zip(names, leaves)):
             arr = np.asarray(jax.device_get(leaf))
             logical_dtype = str(arr.dtype)
             if logical_dtype == "bfloat16":  # npy has no bf16: store bits
                 arr = arr.view(np.uint16)
-            np.save(tmp / f"arr_{i}.npy", arr)
+            fname = f"arr_{i}.npy"
+            np.save(tmp / fname, arr)
+            # Hash the FILE bytes (freshly written — read comes out of
+            # page cache), not the array: restore must detect a
+            # truncated or bit-rotted .npy, header included.
+            sums[fname] = hashlib.sha256((tmp / fname).read_bytes()).hexdigest()
             nbytes += int(arr.nbytes)
             meta["leaves"].append(
                 {"name": name, "dtype": logical_dtype, "shape": list(arr.shape)}
             )
-        (tmp / "META.json").write_text(json.dumps(meta))
+        meta_bytes = json.dumps(meta).encode()
+        (tmp / "META.json").write_bytes(meta_bytes)
+        sums["META.json"] = hashlib.sha256(meta_bytes).hexdigest()
+        # The sidecar goes in LAST, before the commit renames: a step
+        # dir containing CHECKSUMS.json is by construction fully
+        # written, and every covered byte is attested.
+        (tmp / "CHECKSUMS.json").write_text(json.dumps(sums))
         final = self.dir / f"step_{step}"
         if final.exists():
             # Re-saving an existing step: move the old dir ASIDE (atomic
@@ -199,17 +227,75 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def verify_step(self, step: int) -> bool:
+        """True iff ``step_<step>``'s bytes match its checksum sidecar
+        (or the snapshot predates sidecars — accepted as-is)."""
+        path = self.dir / f"step_{step}"
+        sidecar = path / "CHECKSUMS.json"
+        if not sidecar.exists():
+            return True  # legacy snapshot: no attestation to check
+        try:
+            sums = json.loads(sidecar.read_text())
+        except (json.JSONDecodeError, OSError):
+            return False
+        for name, want in sums.items():
+            f = path / name
+            try:
+                got = hashlib.sha256(f.read_bytes()).hexdigest()
+            except OSError:
+                return False
+            if got != want:
+                return False
+        return True
+
+    def _note_corrupt(self, step: int) -> None:
+        self.corrupt_steps += 1
+        logger.warning(
+            "checkpoint %s/step_%d failed checksum verification "
+            "(truncated or corrupt); falling back to an older snapshot",
+            self.dir, step,
+        )
+        if self.telemetry is not None:
+            self._c_corrupt.inc(1)
+            self.telemetry.tracer.emit("checkpoint_corrupt", step=int(step))
+
+    def _pick_verified_step(self) -> int:
+        """Newest step whose bytes verify, warning per rejected step —
+        the auto-resume path never hands corrupt counts to the cache."""
+        newest = self.latest_step()
+        if newest is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        candidates = [newest] + [
+            s for s in sorted(self.all_steps(), reverse=True) if s != newest
+        ]
+        for s in candidates:
+            if self.verify_step(s):
+                return s
+            self._note_corrupt(s)
+        raise FileNotFoundError(
+            f"no checkpoint in {self.dir} passed checksum verification"
+        )
+
     def restore(self, like: Any, step: Optional[int] = None, *, shardings=None) -> Any:
         """Restore into the structure of `like` (a pytree of arrays/ShapeDtypeStructs).
 
         With `shardings` (same-structure tree of NamedShardings), leaves
         are placed sharded — this is the elastic-restart path: the saved
         mesh and the restore mesh need not match.
+
+        Snapshot selection verifies checksums: ``step=None`` resumes
+        from the newest step whose bytes verify (corrupt ones are
+        skipped with a warning); an EXPLICIT ``step`` that fails
+        verification raises ValueError — the caller named that
+        snapshot, silently substituting another would be worse than
+        failing.
         """
         if step is None:
-            step = self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+            step = self._pick_verified_step()
+        elif not self.verify_step(step):
+            raise ValueError(
+                f"checkpoint {self.dir}/step_{step} failed checksum verification"
+            )
         path = self.dir / f"step_{step}"
         meta = json.loads((path / "META.json").read_text())
         if self.config_hash and meta["config_hash"] and meta["config_hash"] != self.config_hash:

@@ -124,6 +124,11 @@ class MatchResult:
     wall_time_s: float
     exact: bool  # True iff the answer rests on a COMPLETE read of the data
     passes: int
+    # I/O degradation contract (see QueryOutcome): when blocks were
+    # quarantined, ``exact`` means complete over the SURVIVING block
+    # population and ``eps_effective`` is the widened full-data bound.
+    degraded: bool = False
+    eps_effective: float = float("nan")
 
     @property
     def delta_upper(self) -> float:
@@ -141,6 +146,8 @@ def _to_match_result(out: QueryOutcome, t0: float) -> MatchResult:
         wall_time_s=time.perf_counter() - t0,
         exact=out.exact,
         passes=out.passes,
+        degraded=out.degraded,
+        eps_effective=out.eps_effective,
     )
 
 

@@ -80,6 +80,7 @@ from repro.core.bitmap import pack_active_mask, words_for
 from repro.core.histsim import HistSimState
 from repro.core.policies import mark_window
 from repro.io import BlockSource, WindowData, as_block_source
+from repro.io.faults import WindowQuarantined, find_resilient
 from repro.kernels import autotune, ops
 from repro.obs.telemetry import Telemetry
 
@@ -554,6 +555,18 @@ class QueryOutcome:
     blocks_considered: int
     tuples_read: int  # tuples ingested while this query was live
     wall_time_s: float
+    # Degradation contract (I/O quarantine). ``degraded`` is True when
+    # any block was quarantined while the scheduler served this query:
+    # the (eps, delta) guarantee then holds over the SURVIVING block
+    # population (``exact`` likewise means a complete read of the
+    # survivors), and ``eps_effective`` is the honestly widened L1
+    # radius vs the FULL dataset — eps + 2 * (quarantined tuple
+    # fraction), since dropping a content-independent fraction q of any
+    # candidate's tuples moves its empirical histogram by at most 2q in
+    # L1. Fault-free: degraded=False and eps_effective == query eps.
+    degraded: bool = False
+    eps_effective: float = float("nan")
+    blocks_quarantined: int = 0
 
 
 def _theorem1_eps_np(n: float, delta_i: float, v_x: int) -> float:
@@ -718,6 +731,15 @@ class SharedCountsScheduler:
         self.blocks_considered = 0
         self.tuples_read = 0
         self._delta_upper = np.zeros(spec.max_queries, np.float32)
+        # Quarantine state (host-side — quarantined blocks never reach a
+        # device dispatch, they are simply excluded from every future
+        # pass order). All-False in the fault-free path, in which case
+        # every eligibility mask below reduces to the pre-quarantine
+        # expression bit for bit.
+        self.quarantined = np.zeros(nb, dtype=bool)
+        self.blocks_quarantined = 0
+        self.tuples_quarantined = 0
+        self.total_tuples = int(np.sum(np.asarray(source.tuples_per_block, np.int64)))
         self.budget_exhausted = False
         self.host_syncs = 0  # number of device->host polls performed
         # polls made by the window loop itself (pump/run_window), i.e.
@@ -758,6 +780,9 @@ class SharedCountsScheduler:
                 "fastmatch_queries_admitted_total", "queries admitted into slots")
             self._c_retired = reg.counter(
                 "fastmatch_queries_retired_total", "queries retired with an answer")
+            self._c_quarantined = reg.counter(
+                "fastmatch_blocks_quarantined_total",
+                "blocks dropped from the probe set after I/O quarantine")
             self._h_batch = reg.histogram(
                 "fastmatch_round_batch_seconds",
                 help="host wall per round batch (gather+dispatch+sync)")
@@ -791,6 +816,72 @@ class SharedCountsScheduler:
         the single-stream scheduler."""
         return self.cursor.read_mask
 
+    # -- quarantine (degraded guarantees) ----------------------------------
+
+    def _quarantine_sources(self) -> tuple:
+        """The sources whose `ResilientSource` layers (if any) this
+        scheduler drains for quarantined block ids. The data-parallel
+        pump overrides this to add its per-worker stream sources."""
+        return (self.source,)
+
+    def quarantine_blocks(self, ids, *, reason: str = "io") -> int:
+        """Drop blocks from the probe set (an I/O quarantine verdict —
+        see `repro.io.faults.ResilientSource`). Returns how many blocks
+        newly left the population.
+
+        Already-read blocks are NOT quarantined: their tuples were
+        validated at fetch time and already sit in the shared counts —
+        the quarantine protects coverage accounting, not history.
+        Every (eps, delta) derived after this call is over the
+        surviving population; `eps_inflation` is the widened-L1 margin
+        vs the full dataset that retirement folds into
+        ``QueryOutcome.eps_effective``.
+        """
+        ids = np.asarray(ids, np.int64).ravel()
+        if ids.size:
+            ids = ids[~self.quarantined[ids] & ~self.read_mask[ids]]
+        if ids.size == 0:
+            return 0
+        self.quarantined[ids] = True
+        tuples = int(np.sum(np.asarray(self.source.tuples_per_block, np.int64)[ids]))
+        self.blocks_quarantined += int(ids.size)
+        self.tuples_quarantined += tuples
+        if self.telemetry is not None:
+            self._c_quarantined.inc(int(ids.size))
+            self.telemetry.tracer.emit(
+                "blocks_quarantine", blocks=int(ids.size), tuples=tuples,
+                reason=reason, total_blocks=self.blocks_quarantined,
+                population_frac=self.quarantine_fraction,
+            )
+        return int(ids.size)
+
+    def _drain_quarantine(self) -> None:
+        """Pull quarantined block ids out of every `ResilientSource` in
+        the source chains (rides the poll boundary: fault-free this is
+        a handful of attribute probes, no device work)."""
+        for src in self._quarantine_sources():
+            resilient = find_resilient(src)
+            if resilient is not None:
+                ids = resilient.take_quarantined()
+                if ids.size:
+                    self.quarantine_blocks(ids, reason="source")
+
+    @property
+    def quarantine_fraction(self) -> float:
+        """Fraction of the dataset's TUPLES lost to quarantine (the q
+        in the eps + 2q widened bound)."""
+        return self.tuples_quarantined / max(self.total_tuples, 1)
+
+    @property
+    def eps_inflation(self) -> float:
+        """Additive L1 widening vs the full dataset: dropping a
+        content-independent tuple fraction q (the layout pre-shuffle
+        assigns tuples to blocks independently of content) changes any
+        candidate's normalized histogram by at most 2q in L1, so a
+        query guaranteed eps over the survivors is guaranteed
+        eps + 2q over the full data."""
+        return 2.0 * self.quarantine_fraction
+
     # -- host/device synchronisation --------------------------------------
 
     def _sync(self) -> None:
@@ -821,6 +912,7 @@ class SharedCountsScheduler:
         self.tuples_read = int(cursor.tuples_read)
         self._delta_upper = np.asarray(delta_upper)
         self.host_syncs += 1
+        self._drain_quarantine()
         if self.telemetry is not None:
             self._record_poll()
 
@@ -1066,13 +1158,19 @@ class SharedCountsScheduler:
     def retire(self, slot: int, *, exact: bool, terminated: bool) -> QueryOutcome:
         """Snapshot a slot's answer, free the slot, record the outcome.
 
-        ``exact`` is forced True whenever the whole dataset has been
-        read — the answer then rests on a complete read no matter why
-        the query is retiring (MatchResult.exact's contract). Callers
+        ``exact`` is forced True whenever the whole surviving population
+        has been read — the answer then rests on a complete read no
+        matter why the query is retiring (MatchResult.exact's contract;
+        with quarantined blocks "complete" means complete over the
+        survivors and the outcome says so via ``degraded``). Callers
         must be at a poll boundary (mirrors fresh, i.e. after `_sync`).
         """
         t = self.tickets.pop(slot)
-        exact = exact or bool(self.read_mask.all())
+        degraded = self.blocks_quarantined > 0
+        if degraded:
+            exact = exact or bool(self.read_mask[~self.quarantined].all())
+        else:
+            exact = exact or bool(self.read_mask.all())
         view = slot_state(self.state, slot)
         ids = np.asarray(histsim.top_k_ids(view, t.k))
         # A query admitted and retired inside one running pass still
@@ -1094,6 +1192,9 @@ class SharedCountsScheduler:
             blocks_considered=self.blocks_considered - t.admit_blocks_considered,
             tuples_read=self.tuples_read - t.admit_tuples_read,
             wall_time_s=time.perf_counter() - t.admit_time,
+            degraded=degraded,
+            eps_effective=t.eps + (self.eps_inflation if degraded else 0.0),
+            blocks_quarantined=self.blocks_quarantined,
         )
         self.state = clear_slot(self.state, jnp.asarray(slot, jnp.int32), spec=self.spec)
         self.outcomes[t.qid] = outcome
@@ -1165,23 +1266,36 @@ class SharedCountsScheduler:
             return 0
         before = self.blocks_read
         if self.telemetry is None:
-            self._dispatch_round(self._fetch_window(win))
+            wd = self._fetch_window_or_quarantine(win)
+            if wd is not None:
+                self._dispatch_round(wd)
             self._sync()
         else:
             acc = _BatchAcc()
             t0 = time.perf_counter()
-            wd = self._fetch_window(win)
+            wd = self._fetch_window_or_quarantine(win)
             acc.gather_s = time.perf_counter() - t0
-            t0 = time.perf_counter()
-            self._dispatch_round(wd)
-            acc.dispatch_s = time.perf_counter() - t0
-            acc.windows = 1
+            if wd is not None:
+                t0 = time.perf_counter()
+                self._dispatch_round(wd)
+                acc.dispatch_s = time.perf_counter() - t0
+                acc.windows = 1
             t0 = time.perf_counter()
             self._sync()
             acc.sync_s = time.perf_counter() - t0
             self._emit_round_batch(acc)
         self.loop_syncs += 1
         return self.blocks_read - before
+
+    def _fetch_window_or_quarantine(self, win: np.ndarray) -> Optional[WindowData]:
+        """Fetch an ad-hoc window, converting a `WindowQuarantined`
+        verdict into probe-set removal (None = the window is gone; the
+        caller's next poll sees the degraded population)."""
+        try:
+            return self._fetch_window(win)
+        except WindowQuarantined as exc:
+            self.quarantine_blocks(exc.block_ids, reason="fetch")
+            return None
 
     def complete_remaining(self) -> None:
         """Exact completion: read every unread block into the shared counts.
@@ -1193,7 +1307,7 @@ class SharedCountsScheduler:
         is exactly this path on a fresh scheduler.
         """
         self._sync()
-        remaining = np.where(~self.read_mask)[0]
+        remaining = np.where(~self.read_mask & ~self.quarantined)[0]
         if remaining.size == 0:
             return
         self.passes += 1
@@ -1263,13 +1377,16 @@ class SharedCountsScheduler:
         # shared counts, before any new window is read.
         self._poll_terminated()
         while self.tickets and self.passes - passes0 < max_passes:
-            pass_order = self.order[~self.read_mask[self.order]]
+            pass_order = self.order[
+                ~self.read_mask[self.order] & ~self.quarantined[self.order]
+            ]
             if pass_order.size == 0:
                 break
             self.passes += 1
             pass_start_rounds = self.rounds
             pass_start_blocks = self.blocks_read
             stream, n_rounds = self._open_pass_stream(pass_order)
+            dispatched = 0
             if tel is None:
                 acc = None
                 rounds_iter = stream
@@ -1314,6 +1431,27 @@ class SharedCountsScheduler:
                             break
             finally:
                 stream.close()
+            if dispatched == 0 or (
+                dispatched % self.poll_every != 0 and dispatched != n_rounds
+            ):
+                # The stream ended short of the final scheduled poll —
+                # only possible when a resilient source quarantined (and
+                # skipped) trailing windows of the pass (fault-free, the
+                # ``dispatched == n_rounds`` poll always fires). Without
+                # this catch-up poll the zero-progress check below would
+                # judge stale mirrors and the drained quarantine mask
+                # would lag a pass behind.
+                if acc is None:
+                    self._sync()
+                else:
+                    t0 = time.perf_counter()
+                    self._sync()
+                    acc.sync_s += time.perf_counter() - t0
+                    self._emit_round_batch(acc)
+                self.loop_syncs += 1
+                self._poll_terminated()
+                if on_round is not None:
+                    on_round(self)
             if self.blocks_read - pass_start_blocks == 0 and self.tickets:
                 # "No unread block can help" was judged against the
                 # active sets live DURING the pass — a query admitted in

@@ -222,6 +222,14 @@ class DistributedPump(SharedCountsScheduler):
         super()._sync()
         self.read_mask = self.read_mask[: self.source.num_blocks]
 
+    def _quarantine_sources(self) -> tuple:
+        """Drain quarantine from every per-worker stream source too —
+        a `ResilientSource` under one worker's prefetch wrapper
+        quarantines GLOBAL block ids (`ShardedSource` speaks global),
+        so the base bookkeeping applies unchanged and the degraded
+        bound covers faults on any worker's I/O path."""
+        return (self.source, *self._stream_sources)
+
     # -- data-parallel window plumbing -------------------------------------
 
     def _plan_pass(self, pass_order: np.ndarray) -> tuple:

@@ -13,6 +13,9 @@ loop in `repro.core.multiquery` is agnostic to it:
   PrefetchSource  — double-buffered background-thread wrapper: the next
                     window's blocks are fetched while the current round's
                     ingest+stats run on device
+  ResilientSource — retry/backoff + integrity validation + block
+                    quarantine at the source boundary (repro.io.faults;
+                    FaultySource is the matching seeded chaos wrapper)
 """
 
 from repro.io.block_source import (
@@ -22,13 +25,31 @@ from repro.io.block_source import (
     WindowData,
     as_block_source,
 )
+from repro.io.faults import (
+    FaultInjector,
+    FaultPlan,
+    FaultySource,
+    ResilientSource,
+    RetryPolicy,
+    WindowQuarantined,
+    maybe_chaos,
+    validate_window,
+)
 from repro.io.prefetch import PrefetchSource
 
 __all__ = [
     "BlockSource",
+    "FaultInjector",
+    "FaultPlan",
+    "FaultySource",
     "InMemorySource",
     "PrefetchSource",
+    "ResilientSource",
+    "RetryPolicy",
     "ShardedSource",
     "WindowData",
+    "WindowQuarantined",
     "as_block_source",
+    "maybe_chaos",
+    "validate_window",
 ]

@@ -1,0 +1,631 @@
+"""I/O fault injection and the resilient source boundary.
+
+FastMatch's premise (paper Sec 5) is many asynchronous block samplers
+feeding one statistics engine — which makes the statistics engine's
+correctness hostage to every sampler's I/O path. Two failure classes
+matter:
+
+  availability — a fetch raises or stalls. Untreated, one flaky fetch
+      kills the whole window stream and every live query with it.
+  integrity    — a fetch *returns*, but the window is truncated or
+      corrupted. Untreated, bad tuples reach `ingest` and silently
+      poison the DURABLE shared counts matrix that `CacheSnapshot`
+      persists across restarts — the worst failure mode this repo has,
+      because a poisoned cache invalidates every Theorem-1 bound ever
+      derived from it, including after the fault is long gone.
+
+This module provides both sides of the contract:
+
+`FaultySource` (+ `FaultInjector`) is the seeded, deterministic chaos
+wrapper used by tests, the FASTMATCH_CHAOS CI lane, and
+`benchmarks/fault_recovery.py`: transient fetch exceptions, latency
+stalls, truncated windows, corrupted windows, one mid-stream EOF, and
+one unrecoverable crash, each drawn from a seeded per-attempt RNG so a
+run is reproducible fault for fault.
+
+`ResilientSource` is the production-side boundary every window passes
+through before it may reach ingest:
+
+  * bounded retries with exponential backoff + seeded jitter and an
+    optional per-fetch deadline; transient errors (`TransientIOError`,
+    `TimeoutError`, `ConnectionError`, `EOFError`, `InterruptedError`)
+    are retried, anything else propagates — a programming error must
+    never be eaten by a retry loop;
+  * `validate_window` integrity validation (shapes, dtypes,
+    bitmap/valid-mask consistency) at the source boundary;
+  * quarantine instead of poison: a window that exhausts its retries or
+    fails validation NEVER reaches ingest — its blocks are recorded as
+    quarantined (a structured ``window_quarantine`` event + counters),
+    `stream` skips the window, and `fetch` raises `WindowQuarantined`
+    so random-access callers can do the same. The scheduler drains
+    `take_quarantined()` at poll boundaries and re-derives the paper
+    guarantee over the surviving block population (see
+    `repro.core.multiquery.SharedCountsScheduler.quarantine_blocks`).
+
+With zero faults injected the wrapper is bit-invisible:
+``ResilientSource(FaultySource(inner, p=0))`` streams the exact same
+`WindowData` leaves as ``inner`` (property-tested in
+tests/test_faults.py), and a run whose transient faults all retry to
+success is bit-identical to a fault-free run end to end — retrying a
+fetch re-reads the same immutable blocks, and the engine never sees
+the difference (the golden contract the CHAOS lane enforces).
+
+Validation levels (``validate=``):
+
+  "structural" — shapes/dtypes/window-length only; O(1), safe on
+      device-resident leaves (no host sync).
+  "content"    — structural plus value ranges, z/x padding pairing,
+      and an exact bitmap rebuild; O(window bytes), host-side.
+  "auto"       — "content" when the leaves are already host numpy
+      arrays (a host/disk/remote source — exactly where corruption
+      lives), "structural" when they are device arrays (forcing a
+      device_get per window would stall the async dispatch pipeline
+      the fused round exists for).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import threading
+import time
+from typing import Iterable, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.bitmap import build_block_bitmap, words_for
+from repro.io.block_source import BlockSource, WindowData
+
+__all__ = [
+    "CorruptWindowError",
+    "FaultInjector",
+    "FaultPlan",
+    "FaultySource",
+    "FetchCancelled",
+    "ResilientSource",
+    "RetryPolicy",
+    "TransientIOError",
+    "TruncatedStreamError",
+    "UnrecoverableIOError",
+    "WindowQuarantined",
+    "maybe_chaos",
+    "validate_window",
+]
+
+logger = logging.getLogger(__name__)
+
+
+# --------------------------------------------------------------------------
+# Exception taxonomy
+# --------------------------------------------------------------------------
+
+
+class TransientIOError(IOError):
+    """A fetch failure expected to heal on retry (flaky NFS, throttled
+    object store, dropped connection)."""
+
+
+class TruncatedStreamError(EOFError):
+    """Mid-stream EOF: the source ended before the window was served
+    (a dropped connection; reopening usually heals it — transient)."""
+
+
+class UnrecoverableIOError(RuntimeError):
+    """A failure no retry can heal (device lost, bad file descriptor).
+    Deliberately NOT in the transient set: it propagates out of
+    `ResilientSource` and crashes the round — the `ServeSupervisor`'s
+    job, not the retry loop's."""
+
+
+class CorruptWindowError(ValueError):
+    """`validate_window` verdict: the window's bytes are not a valid
+    `WindowData` for this source (wrong shape/dtype, out-of-range ids,
+    bitmap inconsistent with the tuples)."""
+
+
+class WindowQuarantined(RuntimeError):
+    """Raised by `ResilientSource.fetch` after a window is quarantined:
+    retries exhausted, deadline passed, or validation failed. Carries
+    the global block ids so the caller can drop them from its probe
+    set. `ResilientSource.stream` absorbs this itself (skips the
+    window); random-access callers catch it."""
+
+    def __init__(self, block_ids: np.ndarray, cause: BaseException):
+        self.block_ids = np.asarray(block_ids, np.int64).ravel()
+        self.cause = cause
+        super().__init__(
+            f"window of {self.block_ids.size} blocks quarantined: {cause!r}"
+        )
+
+
+class FetchCancelled(RuntimeError):
+    """The cooperative cancellation flag fired mid-retry — the consumer
+    (e.g. a closing `PrefetchSource` stream) no longer wants the
+    window. Not a fault: nothing is quarantined, nothing is logged as
+    an error."""
+
+
+# --------------------------------------------------------------------------
+# Window integrity validation
+# --------------------------------------------------------------------------
+
+
+def _is_host(wd: WindowData) -> bool:
+    return all(isinstance(leaf, np.ndarray) for leaf in wd)
+
+
+def validate_window(
+    wd: WindowData,
+    *,
+    num_blocks: int,
+    block_size: int,
+    v_z: int,
+    v_x: int,
+    pad_to: Optional[int] = None,
+    level: str = "auto",
+) -> None:
+    """Raise `CorruptWindowError` unless ``wd`` is a well-formed window
+    of this source. See module docstring for the three levels."""
+    if level not in ("auto", "structural", "content"):
+        raise ValueError(f"unknown validation level {level!r}")
+    checks = (
+        ("indices", wd.indices, 1, ("int32", "int64")),
+        ("z", wd.z, 2, ("int32",)),
+        ("x", wd.x, 2, ("int32",)),
+        ("bitmap", wd.bitmap, 2, ("uint32",)),
+        ("valid", wd.valid, 1, ("bool",)),
+    )
+    for name, leaf, ndim, dtypes in checks:
+        shape = getattr(leaf, "shape", None)
+        if shape is None or len(shape) != ndim:
+            raise CorruptWindowError(
+                f"{name}: expected {ndim}-d array, got "
+                f"{type(leaf).__name__} shape {shape}"
+            )
+        if str(getattr(leaf, "dtype", "?")) not in dtypes:
+            raise CorruptWindowError(
+                f"{name}: dtype {getattr(leaf, 'dtype', '?')} not in {dtypes}"
+            )
+    length = wd.indices.shape[0]
+    if pad_to is not None and length != pad_to:
+        raise CorruptWindowError(f"window length {length} != pad_to {pad_to} (truncated?)")
+    for name, leaf in (("z", wd.z), ("x", wd.x), ("bitmap", wd.bitmap), ("valid", wd.valid)):
+        if leaf.shape[0] != length:
+            raise CorruptWindowError(
+                f"{name}: {leaf.shape[0]} rows, indices has {length} (truncated?)"
+            )
+    if wd.z.shape != (length, block_size) or wd.x.shape != wd.z.shape:
+        raise CorruptWindowError(
+            f"z/x shape {wd.z.shape}/{wd.x.shape} != ({length}, {block_size})"
+        )
+    if wd.bitmap.shape[1] != words_for(v_z):
+        raise CorruptWindowError(
+            f"bitmap width {wd.bitmap.shape[1]} != words_for({v_z})={words_for(v_z)}"
+        )
+    if level == "structural" or (level == "auto" and not _is_host(wd)):
+        return
+    # -- content checks (host numpy, one pass over the window bytes) -------
+    idx = np.asarray(wd.indices)
+    if idx.size and (int(idx.min()) < 0 or int(idx.max()) >= num_blocks):
+        raise CorruptWindowError(
+            f"block ids outside [0, {num_blocks}): [{idx.min()}, {idx.max()}]"
+        )
+    z, x = np.asarray(wd.z), np.asarray(wd.x)
+    if z.size and (int(z.min()) < -1 or int(z.max()) >= v_z):
+        raise CorruptWindowError(f"z values outside [-1, {v_z}): [{z.min()}, {z.max()}]")
+    if x.size and (int(x.min()) < -1 or int(x.max()) >= v_x):
+        raise CorruptWindowError(f"x values outside [-1, {v_x}): [{x.min()}, {x.max()}]")
+    if ((z >= 0) != (x >= 0)).any():
+        raise CorruptWindowError("z/x padding mismatch: (z >= 0) != (x >= 0) somewhere")
+    valid = np.asarray(wd.valid)
+    if valid.any():
+        rebuilt = build_block_bitmap(z[valid], v_z)
+        if not np.array_equal(rebuilt, np.asarray(wd.bitmap)[valid]):
+            raise CorruptWindowError("bitmap inconsistent with window tuples")
+
+
+# --------------------------------------------------------------------------
+# Deterministic fault injection
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Per-attempt fault probabilities + one-shot fault positions.
+
+    Probabilities are judged per fetch ATTEMPT (retries draw fresh),
+    from a seeded RNG — a transient fault can therefore heal on retry,
+    which is the whole point. ``eof_at`` / ``crash_at`` name a single
+    0-based global attempt index each; they fire exactly once.
+    """
+
+    p_transient: float = 0.0  # raise TransientIOError (retry heals)
+    p_stall: float = 0.0      # serve the window after sleeping stall_s
+    stall_s: float = 0.005
+    p_corrupt: float = 0.0    # serve a window with out-of-range ids
+    p_truncate: float = 0.0   # serve a window with a missing row
+    eof_at: Optional[int] = None    # one TruncatedStreamError (transient)
+    crash_at: Optional[int] = None  # one UnrecoverableIOError (fatal)
+
+    def __post_init__(self):
+        total = self.p_transient + self.p_stall + self.p_corrupt + self.p_truncate
+        if not (0.0 <= total <= 1.0):
+            raise ValueError(f"fault probabilities sum to {total}, need [0, 1]")
+
+
+class FaultInjector:
+    """Seeded per-attempt fault schedule. One global attempt counter —
+    the draw sequence is a pure function of (plan, seed, call order),
+    so a seeded run injects the same faults every time."""
+
+    def __init__(self, plan: FaultPlan, *, seed: int = 0):
+        self.plan = plan
+        self._rng = np.random.default_rng(seed)
+        self.attempts = 0
+        self.injected: dict = {
+            "transient": 0, "stall": 0, "corrupt": 0, "truncate": 0,
+            "eof": 0, "crash": 0,
+        }
+
+    def next_fault(self) -> Optional[str]:
+        i = self.attempts
+        self.attempts += 1
+        p = self.plan
+        # One-shot faults fire at their attempt index regardless of the
+        # probability draws (which are still consumed, keeping the rest
+        # of the schedule aligned with the no-one-shot run).
+        u = self._rng.random()
+        if p.crash_at is not None and i == p.crash_at:
+            kind = "crash"
+        elif p.eof_at is not None and i == p.eof_at:
+            kind = "eof"
+        else:
+            kind, acc = None, 0.0
+            for name, prob in (
+                ("transient", p.p_transient), ("stall", p.p_stall),
+                ("corrupt", p.p_corrupt), ("truncate", p.p_truncate),
+            ):
+                acc += prob
+                if u < acc:
+                    kind = name
+                    break
+        if kind is not None:
+            self.injected[kind] += 1
+        return kind
+
+
+class FaultySource:
+    """Chaos wrapper: serve ``inner``'s windows through the injector's
+    fault schedule. Corruption/truncation are applied to host copies of
+    the leaves (a corrupted window is by definition no longer the
+    device-resident original)."""
+
+    def __init__(self, inner: BlockSource, plan: FaultPlan = FaultPlan(), *, seed: int = 0):
+        self.inner = inner
+        self.injector = FaultInjector(plan, seed=seed)
+        self.num_blocks = inner.num_blocks
+        self.block_size = inner.block_size
+        self.v_z = inner.v_z
+        self.v_x = inner.v_x
+        self.tuples_per_block = inner.tuples_per_block
+
+    def _host(self, wd: WindowData) -> WindowData:
+        import jax
+
+        return WindowData(*(np.array(jax.device_get(leaf)) for leaf in wd))
+
+    def _corrupt(self, wd: WindowData) -> WindowData:
+        wd = self._host(wd)
+        z = wd.z.copy()
+        if z.size:
+            z[0, : max(1, z.shape[1] // 8)] = self.v_z + 7  # out of range
+        return wd._replace(z=z)
+
+    def _truncate(self, wd: WindowData) -> WindowData:
+        wd = self._host(wd)
+        return WindowData(*(leaf[:-1] for leaf in wd))
+
+    def fetch(self, win: np.ndarray, pad_to: Optional[int] = None) -> WindowData:
+        kind = self.injector.next_fault()
+        if kind == "crash":
+            raise UnrecoverableIOError("injected: device lost")
+        if kind == "eof":
+            raise TruncatedStreamError("injected: mid-stream EOF")
+        if kind == "transient":
+            raise TransientIOError("injected: transient fetch failure")
+        wd = self.inner.fetch(win, pad_to)
+        if kind == "stall":
+            time.sleep(self.injector.plan.stall_s)
+        elif kind == "corrupt":
+            wd = self._corrupt(wd)
+        elif kind == "truncate":
+            wd = self._truncate(wd)
+        return wd
+
+    def stream(
+        self, windows: Iterable[np.ndarray], pad_to: Optional[int] = None
+    ) -> Iterator[WindowData]:
+        # Window-by-window through our own fetch, so every stream window
+        # passes the fault schedule too.
+        for win in windows:
+            yield self.fetch(win, pad_to)
+
+
+# --------------------------------------------------------------------------
+# The resilient boundary
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry with exponential backoff + seeded jitter.
+
+    ``deadline_s`` bounds one fetch's total wall (attempts + backoff);
+    exceeding it escalates to permanent even with retries left.
+    Jitter is drawn from the policy's own seeded RNG stream so two
+    identically-seeded runs back off identically (determinism) while
+    distinct sources de-synchronize (no retry stampede)."""
+
+    max_retries: int = 4
+    backoff_s: float = 0.02
+    backoff_mult: float = 2.0
+    jitter: float = 0.25  # +- fraction of the delay
+    deadline_s: Optional[float] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError(f"need max_retries >= 0, got {self.max_retries}")
+        if not (0.0 <= self.jitter <= 1.0):
+            raise ValueError(f"need 0 <= jitter <= 1, got {self.jitter}")
+
+
+class ResilientSource:
+    """Retry + validate + quarantine wrapper around any `BlockSource`.
+
+    The serving invariant this class owns: NOTHING that fails the
+    integrity validation, and nothing from a fetch that could not be
+    completed, ever reaches ingest. The failure surface is explicit —
+    `stream` skips quarantined windows, `fetch` raises
+    `WindowQuarantined` — and every quarantined block id is queued for
+    `take_quarantined()` so the scheduler can re-derive its guarantees
+    over the surviving population instead of lying.
+
+    ``cancel_event`` (see `set_cancel_event`) is the cooperative
+    cancellation hook: a backoff sleep waits on the event instead of
+    sleeping blind, and each attempt checks it first, so a consumer
+    that no longer wants the window (a closing `PrefetchSource`) stops
+    the retry loop at the next boundary instead of riding out the full
+    backoff schedule. Cancellation raises `FetchCancelled` and
+    quarantines nothing.
+    """
+
+    TRANSIENT = (
+        TransientIOError,
+        TimeoutError,
+        ConnectionError,
+        InterruptedError,
+        EOFError,  # covers TruncatedStreamError
+    )
+
+    def __init__(
+        self,
+        inner: BlockSource,
+        *,
+        policy: RetryPolicy = RetryPolicy(),
+        validate: str = "auto",
+        telemetry=None,
+        clock=time.monotonic,
+        sleep=None,
+    ):
+        if validate not in ("auto", "structural", "content", "off"):
+            raise ValueError(f"unknown validation level {validate!r}")
+        self.inner = inner
+        self.policy = policy
+        self.validate = validate
+        self.telemetry = telemetry
+        self._clock = clock
+        self._sleep = sleep
+        self._rng = np.random.default_rng(policy.seed)
+        self.num_blocks = inner.num_blocks
+        self.block_size = inner.block_size
+        self.v_z = inner.v_z
+        self.v_x = inner.v_x
+        self.tuples_per_block = inner.tuples_per_block
+        self.cancel_event: Optional[threading.Event] = None
+        # Host-observable fault accounting (works without telemetry).
+        self.retries_total = 0
+        self.transient_faults = 0
+        self.permanent_faults = 0
+        self.validation_failures = 0
+        self.windows_quarantined = 0
+        self.blocks_quarantined = 0
+        self._lock = threading.Lock()
+        self._pending: List[Tuple[np.ndarray, str]] = []
+        if telemetry is not None:
+            reg = telemetry.registry
+            self._c_retries = reg.counter(
+                "io_fetch_retries_total", "fetch attempts repeated after a transient fault")
+            self._c_transient = reg.counter(
+                "io_transient_faults_total", "transient fetch failures observed")
+            self._c_permanent = reg.counter(
+                "io_permanent_faults_total",
+                "fetches escalated to permanent (retries/deadline exhausted)")
+            self._c_validation = reg.counter(
+                "io_validation_failures_total", "windows that failed integrity validation")
+            self._c_quarantined = reg.counter(
+                "io_blocks_quarantined_total", "blocks quarantined at the source boundary")
+
+    def set_cancel_event(self, event: Optional[threading.Event]) -> None:
+        """Install (or clear, with None) the cooperative cancellation
+        flag checked between attempts and during backoff sleeps.
+        Propagates to any nested `ResilientSource` (stacked wrappers,
+        e.g. a chaos lane around an already-resilient source) so the
+        innermost retry loop — where the blocking actually happens —
+        also sees the flag."""
+        self.cancel_event = event
+        nested = find_resilient(self.inner)
+        if nested is not None:
+            nested.set_cancel_event(event)
+
+    # -- quarantine bookkeeping --------------------------------------------
+
+    def _quarantine(self, win: np.ndarray, cause: BaseException, kind: str) -> WindowQuarantined:
+        ids = np.asarray(win, np.int64).ravel()
+        with self._lock:
+            self._pending.append((ids, kind))
+            self.windows_quarantined += 1
+            self.blocks_quarantined += int(ids.size)
+        logger.warning(
+            "quarantining window of %d blocks (%s): %r", ids.size, kind, cause
+        )
+        if self.telemetry is not None:
+            self._c_quarantined.inc(int(ids.size))
+            self.telemetry.tracer.emit(
+                "window_quarantine", blocks=int(ids.size), why=kind,
+                cause=repr(cause),
+            )
+        return WindowQuarantined(ids, cause)
+
+    def take_quarantined(self) -> np.ndarray:
+        """Drain and return the block ids quarantined since the last
+        call (thread-safe — the producer may be a prefetch worker).
+        Includes ids quarantined by any nested `ResilientSource`: a
+        scheduler draining the outermost wrapper must see the whole
+        stack's verdicts, wherever in the chain they were issued."""
+        with self._lock:
+            pending, self._pending = self._pending, []
+        chunks = [ids for ids, _ in pending]
+        nested = find_resilient(self.inner)
+        if nested is not None:
+            inner_ids = nested.take_quarantined()
+            if inner_ids.size:
+                chunks.append(inner_ids)
+        if not chunks:
+            return np.zeros(0, np.int64)
+        return np.unique(np.concatenate(chunks))
+
+    # -- the retry loop ----------------------------------------------------
+
+    def _cancelled(self) -> bool:
+        ev = self.cancel_event
+        return ev is not None and ev.is_set()
+
+    def _wait(self, delay: float) -> None:
+        ev = self.cancel_event
+        if ev is not None:
+            ev.wait(delay)  # returns early when cancellation fires
+        elif self._sleep is not None:
+            self._sleep(delay)
+        else:
+            time.sleep(delay)
+
+    def _validate(self, wd: WindowData, pad_to: Optional[int]) -> None:
+        if self.validate == "off":
+            return
+        validate_window(
+            wd, num_blocks=self.num_blocks, block_size=self.block_size,
+            v_z=self.v_z, v_x=self.v_x, pad_to=pad_to, level=self.validate,
+        )
+
+    def fetch(self, win: np.ndarray, pad_to: Optional[int] = None) -> WindowData:
+        win = np.asarray(win, np.int64).ravel()
+        policy = self.policy
+        t0 = self._clock()
+        delay = policy.backoff_s
+        retries = 0
+        while True:
+            if self._cancelled():
+                raise FetchCancelled("fetch cancelled by consumer")
+            try:
+                wd = self.inner.fetch(win, pad_to)
+            except self.TRANSIENT as exc:
+                self.transient_faults += 1
+                if self.telemetry is not None:
+                    self._c_transient.inc(1)
+                deadline_hit = (
+                    policy.deadline_s is not None
+                    and self._clock() - t0 >= policy.deadline_s
+                )
+                if retries >= policy.max_retries or deadline_hit:
+                    self.permanent_faults += 1
+                    if self.telemetry is not None:
+                        self._c_permanent.inc(1)
+                    why = "deadline" if deadline_hit else "retries-exhausted"
+                    raise self._quarantine(win, exc, why) from exc
+                retries += 1
+                self.retries_total += 1
+                if self.telemetry is not None:
+                    self._c_retries.inc(1)
+                jitter = 1.0 + policy.jitter * (2.0 * self._rng.random() - 1.0)
+                self._wait(delay * jitter)
+                delay *= policy.backoff_mult
+                continue
+            try:
+                self._validate(wd, pad_to)
+            except CorruptWindowError as exc:
+                # Integrity failure is judged permanent for this window:
+                # the bytes are wrong, not late — a re-read of corrupt
+                # storage returns the same corruption, and one poisoned
+                # ingest outlives any retry budget via the durable cache.
+                self.validation_failures += 1
+                self.permanent_faults += 1
+                if self.telemetry is not None:
+                    self._c_validation.inc(1)
+                    self._c_permanent.inc(1)
+                raise self._quarantine(win, exc, "validation") from exc
+            return wd
+
+    def stream(
+        self, windows: Iterable[np.ndarray], pad_to: Optional[int] = None
+    ) -> Iterator[WindowData]:
+        """Serve each window through the resilient fetch; a quarantined
+        window is skipped (its blocks are already recorded) so one bad
+        window degrades coverage instead of killing the stream."""
+        for win in windows:
+            try:
+                yield self.fetch(win, pad_to)
+            except WindowQuarantined:
+                continue
+
+
+def find_resilient(source) -> Optional[ResilientSource]:
+    """The `ResilientSource` in a wrapper chain (e.g. under a
+    `PrefetchSource`), or None."""
+    seen = 0
+    while source is not None and seen < 8:
+        if isinstance(source, ResilientSource):
+            return source
+        source = getattr(source, "inner", None)
+        seen += 1
+    return None
+
+
+# --------------------------------------------------------------------------
+# FASTMATCH_CHAOS: the CI chaos lane
+# --------------------------------------------------------------------------
+
+
+def maybe_chaos(source: BlockSource, *, env: Optional[dict] = None):
+    """Wrap ``source`` in transient-only injected faults when
+    ``FASTMATCH_CHAOS=1`` — the CI chaos lane.
+
+    Only retry-heals-it faults are injected (transient errors + short
+    stalls, generous retry budget), so every serve run under chaos must
+    stay bit-identical to the fault-free run: retried fetches re-read
+    the same immutable blocks. Any behavioral difference under this
+    flag is therefore a real fault-handling bug, which is exactly what
+    the lane exists to catch. ``FASTMATCH_CHAOS_SEED`` varies the
+    schedule without touching the test matrix.
+    """
+    import os
+
+    e = os.environ if env is None else env
+    if e.get("FASTMATCH_CHAOS", "0") != "1":
+        return source
+    seed = int(e.get("FASTMATCH_CHAOS_SEED", "0"))
+    plan = FaultPlan(p_transient=0.05, p_stall=0.01, stall_s=0.001)
+    return ResilientSource(
+        FaultySource(source, plan, seed=seed),
+        policy=RetryPolicy(max_retries=16, backoff_s=0.001, seed=seed),
+    )

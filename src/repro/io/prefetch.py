@@ -40,6 +40,7 @@ from typing import Iterable, Iterator, Optional
 import numpy as np
 
 from repro.io.block_source import BlockSource, WindowData
+from repro.io.faults import FetchCancelled, find_resilient
 
 __all__ = ["PrefetchSource"]
 
@@ -83,6 +84,9 @@ class PrefetchSource:
             self._c_timeouts = reg.counter(
                 "prefetch_join_timeouts_total",
                 "stream closes that abandoned a still-running worker")
+            self._c_dropped = reg.counter(
+                "prefetch_dropped_errors_total",
+                "worker errors that surfaced only after stream close")
 
     def fetch(self, win: np.ndarray, pad_to: Optional[int] = None) -> WindowData:
         return self.inner.fetch(win, pad_to)
@@ -94,6 +98,14 @@ class PrefetchSource:
         tel = self.telemetry
         q: queue.Queue = queue.Queue(maxsize=self.depth)
         stop = threading.Event()
+        # Cooperative cancellation: hand the stop flag to a wrapped
+        # ResilientSource so a worker "blocked" in inner.fetch is really
+        # blocked in a cancellable backoff wait — stream close then stops
+        # the retry loop at its next boundary instead of riding out the
+        # remaining backoff schedule past join_timeout.
+        resilient = find_resilient(self.inner)
+        if resilient is not None:
+            resilient.set_cancel_event(stop)
         failure: list = []  # the worker's exception, whether or not it queued
         # Stall-vs-hide accounting. Lock-free by construction in the
         # hot path: each list/counter has exactly one writer thread
@@ -131,6 +143,11 @@ class PrefetchSource:
                         return
                     produced[0] += 1
                 _put(("done", None))
+            except FetchCancelled:
+                # The consumer closed the stream and the resilient layer
+                # abandoned the in-flight fetch — a clean shutdown, not
+                # an error.
+                return
             except BaseException as exc:
                 # Recorded unconditionally: the queued ("error", ...) item
                 # is lost when the consumer is already closing (stop set,
@@ -191,6 +208,15 @@ class PrefetchSource:
                     "prefetch worker failed after the stream was closed; "
                     "dropping: %r", failure[0],
                 )
+                if tel is not None:
+                    self._c_dropped.inc(1)
+                    tel.tracer.emit(
+                        "prefetch_dropped_error",
+                        source=type(self.inner).__name__,
+                        error=repr(failure[0]),
+                    )
+            if resilient is not None and resilient.cancel_event is stop:
+                resilient.set_cancel_event(None)
             if tel is not None:
                 # Registry flush, off the hot path. The worker has
                 # exited (or been abandoned past join_timeout — its

@@ -1,4 +1,12 @@
 from repro.serve.engine import ServeEngine, Request
 from repro.serve.fastmatch_server import MatchQuery, MatchServer
+from repro.serve.supervisor import ServeSupervisor, SupervisorPolicy
 
-__all__ = ["ServeEngine", "Request", "MatchQuery", "MatchServer"]
+__all__ = [
+    "ServeEngine",
+    "Request",
+    "MatchQuery",
+    "MatchServer",
+    "ServeSupervisor",
+    "SupervisorPolicy",
+]

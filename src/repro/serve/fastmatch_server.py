@@ -79,6 +79,59 @@ given), and serve — a restarted server answers a fresh query with
 bit-identical counts/tau/result to an uninterrupted one
 (tests/test_warm_restart.py; benchmarks/warm_restart.py measures the
 tuples-per-query gap vs a cold restart).
+
+Failure modes and the degradation contract
+------------------------------------------
+
+The serving stack classifies faults into four tiers, each with an
+explicit, observable response (`repro.io.faults` is the boundary
+layer; `repro.serve.supervisor.ServeSupervisor` the recovery layer):
+
+  transient I/O   — a fetch raises `TransientIOError` / `TimeoutError`
+                    / `ConnectionError` / `EOFError` (flaky storage,
+                    dropped connection). `ResilientSource` retries with
+                    bounded exponential backoff + seeded jitter; a
+                    retry that succeeds re-reads the same immutable
+                    blocks, so a run whose faults all heal is
+                    BIT-IDENTICAL to a fault-free run (the
+                    FASTMATCH_CHAOS CI lane pins this).
+  permanent I/O   — retries/deadline exhausted, or the window fails
+                    `validate_window` integrity validation (shape,
+                    dtype, bitmap/valid-mask consistency — corrupt
+                    bytes must never reach `ingest`, because the
+                    shared counts matrix is DURABLE via the checkpoint
+                    cache). The window's blocks are quarantined: a
+                    structured ``window_quarantine`` /
+                    ``blocks_quarantine`` event fires, the scheduler
+                    drops them from every future pass order, and all
+                    later guarantees are derived over the surviving
+                    population. Results then carry ``degraded=True``
+                    and ``eps_effective = eps + 2q`` (q = quarantined
+                    tuple fraction): the strict (eps, delta) statement
+                    holds over the survivors, and because the layout
+                    pre-shuffle assigns tuples to blocks independently
+                    of content, eps + 2q is the honest L1 radius
+                    against the FULL dataset. ``exact`` likewise means
+                    a complete read of the survivors. Serving degrades;
+                    it does not block, and it does not lie.
+  crash           — an unrecoverable round failure
+                    (`UnrecoverableIOError`, a device loss, a poisoned
+                    jit). `ServeSupervisor` restores the last
+                    `CheckpointManager` snapshot and re-submits every
+                    incomplete query — lossless, because sampling is
+                    target-independent (the same property that makes
+                    warm restarts exact). Recovery wall time and
+                    restart counters flow through `repro.obs`.
+  overload        — more work than slots + deadlines allow. The
+                    supervisor sheds load explicitly (bounded queue,
+                    per-query deadlines) rather than queueing forever;
+                    shed queries are reported as shed, never silently
+                    dropped (``queries_shed`` in `metrics`).
+
+`metrics` exposes the health surface: ``last_error`` (most recent
+crash/shed cause, "" when healthy), ``queries_shed``,
+``blocks_quarantined``, ``degraded`` and ``eps_inflation`` (the 2q
+widening every in-flight guarantee currently carries).
 """
 
 from __future__ import annotations
@@ -100,7 +153,7 @@ from repro.core.multiquery import (
     SharedCountsScheduler,
     cache_config_hash,
 )
-from repro.io import as_block_source
+from repro.io import as_block_source, maybe_chaos
 from repro.obs import Telemetry
 
 __all__ = ["MatchQuery", "MatchServer"]
@@ -221,7 +274,7 @@ class MatchServer:
                 raise ValueError(
                     "data_axes only shapes the data-parallel pump; pass pump=True"
                 )
-            source = as_block_source(dataset)
+            source = maybe_chaos(as_block_source(dataset))
             if prefetch:
                 # Same semantics as pump mode: overlap the next window's
                 # gather with the current round (worthwhile when the
@@ -266,6 +319,10 @@ class MatchServer:
         self._rounds_at_save = 0
         self.pending: Deque[MatchQuery] = deque()
         self.results: Dict[int, MatchResult] = {}
+        # Health surface (scraped via `metrics`; the supervisor writes
+        # these on crash recovery / load shedding).
+        self.last_error = ""
+        self.queries_shed = 0
         self._rid_of_qid: Dict[int, int] = {}
         self._submit_time: Dict[int, float] = {}
         self._next_rid = 0
@@ -357,6 +414,8 @@ class MatchServer:
             wall_time_s=wall,
             exact=out.exact,
             passes=out.passes,
+            degraded=out.degraded,
+            eps_effective=out.eps_effective,
         )
 
     # -- warm-start persistence --------------------------------------------
@@ -452,7 +511,8 @@ class MatchServer:
         if not sched.tickets:
             return
         if self._pass_order is None or self._pass_pos >= len(self._pass_order):
-            unread = sched.order[~sched.read_mask[sched.order]]
+            eligible = ~sched.read_mask[sched.order] & ~sched.quarantined[sched.order]
+            unread = sched.order[eligible]
             # A zero-read pass only proves sampling is exhausted for the
             # queries that were live during it — a query admitted in its
             # final windows gets a fresh pass before the exact fallback.
@@ -479,9 +539,9 @@ class MatchServer:
             sched.passes += 1
         win = self._pass_order[self._pass_pos : self._pass_pos + sched.window]
         self._pass_pos += len(win)
-        # Guard against blocks read since this pass was snapshotted
-        # (e.g. a run_until_idle interleaved between steps).
-        win = win[~sched.read_mask[win]]
+        # Guard against blocks read (or quarantined) since this pass was
+        # snapshotted (e.g. a run_until_idle interleaved between steps).
+        win = win[~sched.read_mask[win] & ~sched.quarantined[win]]
         if win.size:
             self._pass_read += sched.run_window(win)
             sched._poll_terminated()
@@ -512,7 +572,7 @@ class MatchServer:
     # -- observability -----------------------------------------------------
 
     @property
-    def metrics(self) -> Dict[str, float]:
+    def metrics(self) -> Dict[str, object]:
         sched = self.scheduler
         done = len(self.results)
         return {
@@ -532,6 +592,13 @@ class MatchServer:
             # 0.0, not nan, before the first completion: nan poisons any
             # dashboard aggregation and JSON round-trips it as a string.
             "tuples_per_query": float(sched.tuples_read / done) if done else 0.0,
+            # Health surface (failure-modes contract, module docstring):
+            # "" / 0 / False across the board on a healthy server.
+            "last_error": self.last_error,
+            "queries_shed": self.queries_shed,
+            "blocks_quarantined": sched.blocks_quarantined,
+            "degraded": sched.blocks_quarantined > 0,
+            "eps_inflation": float(sched.eps_inflation),
         }
 
     def export_trace(self, path) -> int:

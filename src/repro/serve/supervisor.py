@@ -1,0 +1,312 @@
+"""Crash-recovery / QoS supervision of a `MatchServer` loop.
+
+`MatchServer` owns correctness of the answers; `ServeSupervisor` owns
+liveness of the service. It wraps the incremental serving loop
+(`MatchServer.step`) with the three policies a long-running deployment
+needs and the server itself deliberately does not hard-code:
+
+  per-query deadlines — a request carries an optional wall deadline.
+      A query still QUEUED at its deadline is shed (it never consumed
+      I/O); a query already LIVE is early-retired with its current
+      best-effort answer — the degradation contract: a looser
+      guarantee beats blocking forever (the retired `MatchResult`
+      carries ``exact=False``/``terminated`` honestly).
+  overload shedding — a bounded admission queue. When ``max_queue``
+      pending requests are already waiting, new submissions are shed
+      at the door with an explicit outcome instead of growing the
+      queue without bound; shed requests are listed in ``shed`` with a
+      reason, never silently dropped.
+  crash recovery — an unrecoverable round failure (a poisoned device
+      loop, `repro.io.faults.UnrecoverableIOError`, anything a retry
+      cannot heal) discards the wounded server, rebuilds it, restores
+      the last `CheckpointManager` snapshot (checksum-verified — a
+      truncated snapshot falls back to the previous step), and
+      re-submits every incomplete query. The re-submission is LOSSLESS
+      for the same reason warm restarts are exact: sampling is
+      target-independent, so a re-admitted query starts from the
+      restored shared counts with its full ``n_i`` — it loses the
+      rounds since the last snapshot, never its statistical position.
+
+Every decision is observable through the shared `repro.obs` registry /
+tracer: ``serve_crashes_total`` / ``serve_recoveries_total`` /
+``serve_queries_shed_total`` counters, a ``serve_recovery_seconds``
+histogram, and ``serve_crash`` / ``serve_recovered`` / ``query_shed``
+events; `MatchServer.metrics` surfaces ``last_error`` and
+``queries_shed`` for scraping.
+
+The supervisor has its own request-id space (stable across server
+rebuilds — a server's rids restart at 0 when it is rebuilt after a
+crash); ``results`` / ``shed`` are keyed by supervisor rids.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.engine import MatchResult
+from repro.serve.fastmatch_server import MatchServer
+
+__all__ = ["ServeSupervisor", "SupervisorPolicy"]
+
+logger = logging.getLogger(__name__)
+
+
+@dataclasses.dataclass(frozen=True)
+class SupervisorPolicy:
+    """Liveness policy knobs.
+
+    ``max_restarts`` bounds crash-recovery attempts per supervisor
+    lifetime — a server that keeps dying is a bug, and the (N+1)-th
+    crash propagates to the caller with the original exception.
+    ``max_queue`` bounds the server's pending queue (None = unbounded);
+    ``default_deadline_s`` applies to submissions that set none.
+    """
+
+    max_restarts: int = 3
+    restart_backoff_s: float = 0.0
+    max_queue: Optional[int] = None
+    default_deadline_s: Optional[float] = None
+
+
+@dataclasses.dataclass
+class _Request:
+    """One supervised request across server rebuilds."""
+
+    rid: int  # supervisor rid
+    target: np.ndarray
+    k: int
+    eps: float
+    delta: float
+    deadline: Optional[float]  # absolute monotonic time, None = none
+    submit_time: float
+    server_rid: Optional[int] = None  # rid on the CURRENT server
+
+
+class ServeSupervisor:
+    """Run a `MatchServer` with deadlines, shedding, and crash recovery.
+
+    Construction arguments mirror `MatchServer.__init__` — they are
+    stored and replayed on every (re)build, so a recovered server is
+    configured identically to the crashed one. Pass ``checkpoint_dir``
+    to make recovery warm (restore the last verified snapshot); without
+    it recovery is cold but still answer-lossless (queries re-sample).
+    """
+
+    def __init__(self, dataset, *, policy: SupervisorPolicy = SupervisorPolicy(),
+                 **server_kwargs):
+        self.policy = policy
+        self._dataset = dataset
+        self._server_kwargs = dict(server_kwargs)
+        # One telemetry instance across rebuilds: a crash must not
+        # reset the counters that count crashes.
+        tel = self._server_kwargs.get("telemetry")
+        if tel is True:
+            from repro.obs import Telemetry
+
+            tel = Telemetry()
+            self._server_kwargs["telemetry"] = tel
+        self.telemetry = tel or None
+        if self.telemetry is not None:
+            reg = self.telemetry.registry
+            self._c_crashes = reg.counter(
+                "serve_crashes_total", "unrecoverable serving-loop failures")
+            self._c_recoveries = reg.counter(
+                "serve_recoveries_total", "successful crash recoveries")
+            self._c_shed = reg.counter(
+                "serve_queries_shed_total", "requests shed (overload or deadline)")
+            self._h_recovery = reg.histogram(
+                "serve_recovery_seconds", help="crash-to-serving recovery wall time")
+        self.restarts = 0
+        self.last_error = ""
+        self.recovery_s_total = 0.0
+        self.results: Dict[int, MatchResult] = {}
+        self.shed: Dict[int, str] = {}  # rid -> reason
+        self._requests: Dict[int, _Request] = {}
+        self._next_rid = 0
+        self.server = self._build_server(restore=True)
+
+    # -- server lifecycle --------------------------------------------------
+
+    def _build_server(self, *, restore: bool) -> MatchServer:
+        server = MatchServer(self._dataset, **self._server_kwargs)
+        if restore and server._manager is not None:
+            try:
+                server.restore_cache()
+            except FileNotFoundError:
+                pass  # nothing on disk yet: cold start
+        server.last_error = self.last_error
+        server.queries_shed = len(self.shed)
+        return server
+
+    def _recover(self, exc: BaseException) -> None:
+        self.restarts += 1
+        self.last_error = repr(exc)
+        logger.warning(
+            "serving loop crashed (%r); recovery %d/%d",
+            exc, self.restarts, self.policy.max_restarts,
+        )
+        if self.telemetry is not None:
+            self._c_crashes.inc(1)
+            self.telemetry.tracer.emit(
+                "serve_crash", error=repr(exc), restarts=self.restarts,
+            )
+        if self.restarts > self.policy.max_restarts:
+            raise exc
+        if self.policy.restart_backoff_s:
+            time.sleep(self.policy.restart_backoff_s)
+        t0 = time.perf_counter()
+        # Discard the wounded server wholesale — after an arbitrary
+        # mid-round failure its host mirrors / pass cursor are not
+        # trustworthy. The snapshot restore + re-submission below is
+        # the documented lossless path.
+        self.server = self._build_server(restore=True)
+        resubmitted = 0
+        for req in self._requests.values():
+            if req.rid in self.results or req.rid in self.shed:
+                continue
+            req.server_rid = self.server.submit(
+                req.target, k=req.k, eps=req.eps, delta=req.delta
+            )
+            resubmitted += 1
+        recovery_s = time.perf_counter() - t0
+        self.recovery_s_total += recovery_s
+        if self.telemetry is not None:
+            self._c_recoveries.inc(1)
+            self._h_recovery.observe(recovery_s)
+            self.telemetry.tracer.emit(
+                "serve_recovered", recovery_s=recovery_s,
+                resumed_step=self.server.scheduler.rounds,
+                resubmitted=resubmitted,
+            )
+
+    # -- requests ----------------------------------------------------------
+
+    def submit(self, target, *, k: int, eps: float = 0.06, delta: float = 0.01,
+               deadline_s: Optional[float] = None) -> int:
+        """Queue a supervised query; returns a supervisor rid resolved
+        in ``results`` (answered) or ``shed`` (refused/expired)."""
+        rid = self._next_rid
+        self._next_rid += 1
+        if deadline_s is None:
+            deadline_s = self.policy.default_deadline_s
+        now = time.monotonic()
+        req = _Request(
+            rid=rid, target=np.asarray(target, np.float64).ravel(),
+            k=k, eps=eps, delta=delta,
+            deadline=None if deadline_s is None else now + deadline_s,
+            submit_time=now,
+        )
+        self._requests[rid] = req
+        if (
+            self.policy.max_queue is not None
+            and len(self.server.pending) >= self.policy.max_queue
+        ):
+            self._shed(req, "overload")
+            return rid
+        req.server_rid = self.server.submit(target, k=k, eps=eps, delta=delta)
+        return rid
+
+    def _shed(self, req: _Request, reason: str) -> None:
+        self.shed[req.rid] = reason
+        self.server.queries_shed = len(self.shed)
+        if self.telemetry is not None:
+            self._c_shed.inc(1)
+            self.telemetry.tracer.emit("query_shed", rid=req.rid, reason=reason)
+
+    def _enforce_deadlines(self) -> None:
+        now = time.monotonic()
+        expired = [
+            r for r in self._requests.values()
+            if r.deadline is not None and now >= r.deadline
+            and r.rid not in self.results and r.rid not in self.shed
+        ]
+        if not expired:
+            return
+        server = self.server
+        sched = server.scheduler
+        queued = {q.rid: q for q in server.pending}
+        qid_by_srv_rid = {
+            srv_rid: qid for qid, srv_rid in server._rid_of_qid.items()
+        }
+        retired_any = False
+        for req in expired:
+            if req.server_rid in queued:
+                # Never admitted: zero I/O spent, nothing to answer.
+                server.pending = type(server.pending)(
+                    q for q in server.pending if q.rid != req.server_rid
+                )
+                server._submit_time.pop(req.server_rid, None)
+                self._shed(req, "deadline")
+            elif req.server_rid in qid_by_srv_rid:
+                # Live: early-retire with the current best-effort
+                # answer — degraded service, not a dropped query.
+                qid = qid_by_srv_rid[req.server_rid]
+                slot = next(
+                    s for s, t in sched.tickets.items() if t.qid == qid
+                )
+                if not retired_any:
+                    sched._sync()  # fresh mirrors: retire() runs on them
+                    retired_any = True
+                fired = bool(sched._delta_upper[slot] < sched.tickets[slot].delta)
+                sched.retire(slot, exact=False, terminated=fired)
+                if self.telemetry is not None:
+                    self.telemetry.tracer.emit(
+                        "query_deadline_retire", rid=req.rid, qid=qid,
+                    )
+            # else: already resolved between the scan and here — done.
+        if retired_any:
+            server._collect()
+
+    def _collect(self) -> None:
+        """Map newly finished server results into supervisor rids."""
+        srv_results = self.server.results
+        for req in self._requests.values():
+            if req.rid in self.results or req.rid in self.shed:
+                continue
+            if req.server_rid is not None and req.server_rid in srv_results:
+                self.results[req.rid] = srv_results[req.server_rid]
+
+    # -- the supervised loop -----------------------------------------------
+
+    @property
+    def unresolved(self) -> int:
+        return len(self._requests) - len(self.results) - len(self.shed)
+
+    def run_until_idle(self, *, max_steps: int = 1_000_000) -> Dict[int, MatchResult]:
+        """Drive `MatchServer.step` until every supervised request is
+        answered or shed, recovering from crashes along the way."""
+        steps = 0
+        while self.unresolved:
+            self._enforce_deadlines()
+            self._collect()
+            if not self.unresolved:
+                break
+            try:
+                self.server.step()
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except BaseException as exc:
+                self._recover(exc)
+            self._collect()
+            steps += 1
+            if steps >= max_steps:
+                break
+        return dict(self.results)
+
+    # -- observability -----------------------------------------------------
+
+    @property
+    def metrics(self) -> Dict[str, object]:
+        m = dict(self.server.metrics)
+        m.update(
+            restarts=self.restarts,
+            recovery_s_total=self.recovery_s_total,
+            queries_shed=len(self.shed),
+            last_error=self.last_error or m.get("last_error", ""),
+        )
+        return m

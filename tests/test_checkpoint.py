@@ -133,3 +133,79 @@ class TestElasticReshard:
         pspecs = jax.tree.map(lambda _: P(), s)
         back = m.restore_resharded(s, mesh, pspecs)
         np.testing.assert_array_equal(np.asarray(back["params"]["w"]), np.asarray(s["params"]["w"]))
+
+
+class TestChecksums:
+    """PR 8 satellite: sha256 sidecar written on save, verified on restore."""
+
+    def test_sidecar_written_and_covers_every_file(self, tmp_path):
+        import hashlib
+        import json
+
+        m = CheckpointManager(str(tmp_path))
+        m.save(_state(), 3)
+        step = tmp_path / "step_3"
+        sums = json.loads((step / "CHECKSUMS.json").read_text())
+        files = {p.name for p in step.iterdir()} - {"CHECKSUMS.json"}
+        assert set(sums) == files
+        for fname, want in sums.items():
+            got = hashlib.sha256((step / fname).read_bytes()).hexdigest()
+            assert got == want, fname
+        assert m.verify_step(3)
+
+    def test_truncated_snapshot_falls_back_to_previous(self, tmp_path):
+        """A truncated newest snapshot must not feed garbage into the
+        cache: restore(step=None) skips it (warning + counter) and
+        resumes from the older verified step."""
+        m = CheckpointManager(str(tmp_path), keep_last=10)
+        m.save(_state(0), 1)
+        m.save(_state(1), 2)
+        victim = next((tmp_path / "step_2").glob("arr_*.npy"))
+        victim.write_bytes(victim.read_bytes()[:-16])  # truncate: disk died mid-write
+        assert not m.verify_step(2) and m.verify_step(1)
+        back = m.restore(_state(0))
+        ref = m.restore(_state(0), step=1)
+        np.testing.assert_array_equal(
+            np.asarray(back["params"]["w"]), np.asarray(ref["params"]["w"])
+        )
+        assert m.corrupt_steps == 1
+
+    def test_explicit_corrupt_step_raises(self, tmp_path):
+        m = CheckpointManager(str(tmp_path))
+        m.save(_state(), 5)
+        victim = next((tmp_path / "step_5").glob("arr_*.npy"))
+        victim.write_bytes(b"\x00" * 32)  # bit rot, same length class
+        with pytest.raises(ValueError, match="checksum"):
+            m.restore(_state(), step=5)
+
+    def test_all_steps_corrupt_is_explicit(self, tmp_path):
+        m = CheckpointManager(str(tmp_path))
+        m.save(_state(), 1)
+        next((tmp_path / "step_1").glob("arr_*.npy")).write_bytes(b"junk")
+        with pytest.raises(FileNotFoundError, match="checksum"):
+            m.restore(_state())
+
+    def test_legacy_snapshot_without_sidecar_accepted(self, tmp_path):
+        """Snapshots written before sidecars existed restore as-is."""
+        m = CheckpointManager(str(tmp_path))
+        s = _state()
+        m.save(s, 2)
+        (tmp_path / "step_2" / "CHECKSUMS.json").unlink()
+        assert m.verify_step(2)
+        back = m.restore(s)
+        np.testing.assert_array_equal(
+            np.asarray(back["params"]["w"]), np.asarray(s["params"]["w"])
+        )
+
+    def test_corrupt_counter_and_event_with_telemetry(self, tmp_path):
+        from repro.obs import Telemetry
+
+        tel = Telemetry()
+        m = CheckpointManager(str(tmp_path), telemetry=tel, keep_last=10)
+        m.save(_state(0), 1)
+        m.save(_state(1), 2)
+        next((tmp_path / "step_2").glob("arr_*.npy")).write_bytes(b"junk")
+        m.restore(_state(0))
+        assert tel.registry.get("checkpoint_corrupt_steps_total").value == 1
+        (ev,) = tel.tracer.events("checkpoint_corrupt")
+        assert ev["step"] == 2

@@ -1,0 +1,549 @@
+"""Fault injection + the resilient source boundary (PR 8 tentpole).
+
+The two contracts this suite pins:
+
+  * fault-free invisibility — `ResilientSource(FaultySource(p=0))`
+    streams bit-identical `WindowData` leaves to the bare source
+    (property-tested when hypothesis is available, deterministically
+    always), and a serve run whose injected faults are all transient
+    (every retry heals) is bit-identical END TO END to the fault-free
+    run: same top-k ids, same rounds, same tuples read.
+  * honest degradation — windows that exhaust retries or fail
+    integrity validation never reach ingest: their blocks quarantine,
+    the scheduler re-derives (eps, delta) over the surviving
+    population, and results/metrics say so (``degraded``,
+    ``eps_effective``, ``blocks_quarantined``) instead of silently
+    reporting the fault-free guarantee.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.layout import block_layout
+from repro.data.synth import SynthSpec, make_dataset, perturb_distribution
+from repro.io import InMemorySource, PrefetchSource
+from repro.io.block_source import WindowData
+from repro.io.faults import (
+    CorruptWindowError,
+    FaultInjector,
+    FaultPlan,
+    FaultySource,
+    FetchCancelled,
+    ResilientSource,
+    RetryPolicy,
+    TransientIOError,
+    UnrecoverableIOError,
+    WindowQuarantined,
+    find_resilient,
+    maybe_chaos,
+    validate_window,
+)
+from repro.serve.fastmatch_server import MatchServer
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # minimal installs: the deterministic tests still run
+    HAVE_HYPOTHESIS = False
+
+K, EPS, DELTA = 5, 0.08, 0.05
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    spec = SynthSpec(
+        v_z=32, v_x=16, num_tuples=120_000, k=K, n_close=5,
+        close_distance=0.02, far_distance=0.3, zipf_a=0.9, seed=3,
+    )
+    ds = make_dataset(spec)
+    blocked = block_layout(
+        ds.z, ds.x, v_z=spec.v_z, v_x=spec.v_x, block_size=512, seed=5
+    )
+    return spec, ds, blocked
+
+
+@pytest.fixture(scope="module")
+def host_source(dataset):
+    _, _, blocked = dataset
+    return InMemorySource(blocked, device_resident=False)
+
+
+@pytest.fixture(scope="module")
+def targets(dataset):
+    _, ds, _ = dataset
+    rng = np.random.default_rng(9)
+    return [perturb_distribution(ds.target, d, rng) for d in (0.01, 0.04)]
+
+
+def _windows(nb, width=8, count=6):
+    return [np.arange(i * width, min((i + 1) * width, nb)) for i in range(count)]
+
+
+def _assert_windows_equal(a: WindowData, b: WindowData):
+    for leaf_a, leaf_b in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(leaf_a), np.asarray(leaf_b))
+
+
+class _FlakySource:
+    """Deterministic failure scripting: ``script[i]`` is what fetch
+    attempt i does — None (serve), or an exception instance to raise.
+    Off-script attempts serve."""
+
+    def __init__(self, inner, script):
+        self.inner = inner
+        self.script = list(script)
+        self.calls = 0
+        self.num_blocks = inner.num_blocks
+        self.block_size = inner.block_size
+        self.v_z = inner.v_z
+        self.v_x = inner.v_x
+        self.tuples_per_block = inner.tuples_per_block
+
+    def fetch(self, win, pad_to=None):
+        i = self.calls
+        self.calls += 1
+        if i < len(self.script) and self.script[i] is not None:
+            raise self.script[i]
+        return self.inner.fetch(win, pad_to)
+
+    def stream(self, windows, pad_to=None):
+        for w in windows:
+            yield self.fetch(w, pad_to)
+
+
+# ------------------------------------------------------------- validation
+
+
+class TestValidateWindow:
+    def _kwargs(self, src):
+        return dict(
+            num_blocks=src.num_blocks, block_size=src.block_size,
+            v_z=src.v_z, v_x=src.v_x,
+        )
+
+    def test_good_window_passes_content(self, host_source):
+        wd = host_source.fetch(np.arange(4), pad_to=8)
+        validate_window(wd, **self._kwargs(host_source), pad_to=8, level="content")
+
+    def test_truncated_window_rejected(self, host_source):
+        wd = host_source.fetch(np.arange(4))
+        cut = WindowData(*(leaf[:-1] for leaf in wd))
+        with pytest.raises(CorruptWindowError, match="truncated"):
+            validate_window(cut, **self._kwargs(host_source), pad_to=4)
+
+    def test_out_of_range_z_rejected_by_content_only(self, host_source):
+        wd = host_source.fetch(np.arange(4))
+        z = np.asarray(wd.z).copy()
+        z[0, 0] = host_source.v_z + 7
+        bad = wd._replace(z=z)
+        kw = self._kwargs(host_source)
+        validate_window(bad, **kw, level="structural")  # shape-only: blind
+        with pytest.raises(CorruptWindowError, match="z values"):
+            validate_window(bad, **kw, level="content")
+
+    def test_bitmap_inconsistency_rejected(self, host_source):
+        wd = host_source.fetch(np.arange(4))
+        bm = np.asarray(wd.bitmap).copy()
+        bm[0, 0] ^= np.uint32(1 << 5)
+        with pytest.raises(CorruptWindowError, match="bitmap inconsistent"):
+            validate_window(wd._replace(bitmap=bm), **self._kwargs(host_source),
+                            level="content")
+
+    def test_padding_pairing_rejected(self, host_source):
+        wd = host_source.fetch(np.arange(4))
+        x = np.asarray(wd.x).copy()
+        x[0, 0] = -1  # z still >= 0 there
+        with pytest.raises(CorruptWindowError, match="padding mismatch"):
+            validate_window(wd._replace(x=x), **self._kwargs(host_source),
+                            level="content")
+
+    def test_wrong_dtype_rejected_structurally(self, host_source):
+        wd = host_source.fetch(np.arange(4))
+        bad = wd._replace(z=np.asarray(wd.z).astype(np.float32))
+        with pytest.raises(CorruptWindowError, match="dtype"):
+            validate_window(bad, **self._kwargs(host_source), level="structural")
+
+    def test_auto_is_content_for_host_arrays(self, host_source):
+        wd = host_source.fetch(np.arange(4))
+        z = np.asarray(wd.z).copy()
+        z[0, 0] = host_source.v_z + 1
+        with pytest.raises(CorruptWindowError):
+            validate_window(wd._replace(z=z), **self._kwargs(host_source),
+                            level="auto")
+
+
+# ---------------------------------------------------------- fault injection
+
+
+class TestFaultInjector:
+    def test_seeded_schedule_is_reproducible(self):
+        plan = FaultPlan(p_transient=0.3, p_corrupt=0.2)
+        a = FaultInjector(plan, seed=7)
+        b = FaultInjector(plan, seed=7)
+        seq_a = [a.next_fault() for _ in range(200)]
+        seq_b = [b.next_fault() for _ in range(200)]
+        assert seq_a == seq_b
+        assert a.injected["transient"] > 0 and a.injected["corrupt"] > 0
+
+    def test_one_shots_fire_exactly_once_and_keep_schedule(self):
+        base = FaultInjector(FaultPlan(p_transient=0.3), seed=1)
+        shot = FaultInjector(FaultPlan(p_transient=0.3, crash_at=5), seed=1)
+        seq_base = [base.next_fault() for _ in range(20)]
+        seq_shot = [shot.next_fault() for _ in range(20)]
+        assert seq_shot[5] == "crash" and shot.injected["crash"] == 1
+        # the probability draw at index 5 was still consumed: every other
+        # index matches the no-one-shot schedule
+        assert seq_shot[:5] == seq_base[:5] and seq_shot[6:] == seq_base[6:]
+
+    def test_probability_sum_validated(self):
+        with pytest.raises(ValueError, match="probabilities"):
+            FaultPlan(p_transient=0.8, p_corrupt=0.4)
+
+    def test_faulty_source_raises_and_mutates(self, host_source):
+        win = np.arange(4)
+        src = FaultySource(host_source, FaultPlan(p_transient=1.0))
+        with pytest.raises(TransientIOError):
+            src.fetch(win)
+        src = FaultySource(host_source, FaultPlan(p_corrupt=1.0))
+        wd = src.fetch(win)
+        assert int(np.asarray(wd.z).max()) >= host_source.v_z  # out of range
+        src = FaultySource(host_source, FaultPlan(p_truncate=1.0))
+        wd = src.fetch(win)
+        assert wd.indices.shape[0] == win.size - 1
+        src = FaultySource(host_source, FaultPlan(crash_at=0))
+        with pytest.raises(UnrecoverableIOError):
+            src.fetch(win)
+
+
+# ------------------------------------------------------- resilient boundary
+
+
+class TestResilientSource:
+    def test_p0_stream_bit_identical_deterministic(self, host_source):
+        """Satellite golden: the p=0 wrapper is bit-invisible."""
+        wins = _windows(host_source.num_blocks)
+        wrapped = ResilientSource(FaultySource(host_source, FaultPlan()))
+        for a, b in zip(wrapped.stream(wins, pad_to=8),
+                        host_source.stream(wins, pad_to=8)):
+            _assert_windows_equal(a, b)
+        assert wrapped.retries_total == 0 and wrapped.blocks_quarantined == 0
+
+    if HAVE_HYPOTHESIS:
+
+        @settings(max_examples=25, deadline=None)
+        @given(
+            seed=st.integers(0, 2**16),
+            width=st.integers(1, 16),
+            pad=st.booleans(),
+        )
+        def test_p0_stream_bit_identical_property(self, host_source, seed, width, pad):
+            rng = np.random.default_rng(seed)
+            nb = host_source.num_blocks
+            blocks = rng.permutation(nb)[: 4 * width]
+            wins = [blocks[i : i + width] for i in range(0, blocks.size, width)]
+            pad_to = width if pad else None
+            wrapped = ResilientSource(
+                FaultySource(host_source, FaultPlan(), seed=seed),
+                policy=RetryPolicy(seed=seed),
+            )
+            for a, b in zip(wrapped.stream(wins, pad_to=pad_to),
+                            host_source.stream(wins, pad_to=pad_to)):
+                _assert_windows_equal(a, b)
+            assert wrapped.retries_total == 0
+
+    def test_transient_heals_on_retry(self, host_source):
+        flaky = _FlakySource(host_source, [TransientIOError("x"),
+                                           TransientIOError("x"), None])
+        src = ResilientSource(flaky, policy=RetryPolicy(max_retries=4, backoff_s=0.0))
+        wd = src.fetch(np.arange(4))
+        _assert_windows_equal(wd, host_source.fetch(np.arange(4)))
+        assert src.retries_total == 2 and src.transient_faults == 2
+        assert src.permanent_faults == 0 and src.take_quarantined().size == 0
+
+    def test_retries_exhausted_quarantines(self, host_source):
+        flaky = _FlakySource(host_source, [TransientIOError("x")] * 10)
+        src = ResilientSource(flaky, policy=RetryPolicy(max_retries=2, backoff_s=0.0))
+        win = np.array([3, 5, 7])
+        with pytest.raises(WindowQuarantined) as ei:
+            src.fetch(win)
+        np.testing.assert_array_equal(ei.value.block_ids, win)
+        assert src.permanent_faults == 1 and src.blocks_quarantined == 3
+        np.testing.assert_array_equal(src.take_quarantined(), win)
+        assert src.take_quarantined().size == 0  # drained
+
+    def test_corrupt_window_is_immediately_permanent(self, host_source):
+        src = ResilientSource(
+            FaultySource(host_source, FaultPlan(p_corrupt=1.0)),
+            policy=RetryPolicy(max_retries=5, backoff_s=0.0),
+        )
+        with pytest.raises(WindowQuarantined):
+            src.fetch(np.arange(4))
+        # no retry burned: corrupt bytes re-read identically corrupt
+        assert src.retries_total == 0 and src.validation_failures == 1
+
+    def test_truncated_window_fails_validation(self, host_source):
+        src = ResilientSource(FaultySource(host_source, FaultPlan(p_truncate=1.0)))
+        with pytest.raises(WindowQuarantined):
+            src.fetch(np.arange(4), pad_to=4)
+        assert src.validation_failures == 1
+
+    def test_unrecoverable_propagates_untouched(self, host_source):
+        src = ResilientSource(
+            FaultySource(host_source, FaultPlan(crash_at=0)),
+            policy=RetryPolicy(max_retries=8, backoff_s=0.0),
+        )
+        with pytest.raises(UnrecoverableIOError):
+            src.fetch(np.arange(4))
+        # not a quarantine verdict: the supervisor owns this failure
+        assert src.take_quarantined().size == 0 and src.permanent_faults == 0
+
+    def test_deadline_escalates_with_retries_left(self, host_source):
+        clock = iter([0.0, 10.0, 20.0]).__next__
+        flaky = _FlakySource(host_source, [TransientIOError("x")] * 10)
+        src = ResilientSource(
+            flaky,
+            policy=RetryPolicy(max_retries=100, backoff_s=0.0, deadline_s=5.0),
+            clock=clock,
+        )
+        with pytest.raises(WindowQuarantined) as ei:
+            src.fetch(np.arange(2))
+        assert "deadline" in str(ei.value.cause) or src.permanent_faults == 1
+        assert flaky.calls == 1  # first attempt already blew the budget
+
+    def test_backoff_schedule_seeded_and_exponential(self, host_source):
+        def run(seed):
+            sleeps = []
+            flaky = _FlakySource(host_source, [TransientIOError("x")] * 3 + [None])
+            src = ResilientSource(
+                flaky,
+                policy=RetryPolicy(max_retries=5, backoff_s=0.01, seed=seed),
+                sleep=sleeps.append,
+            )
+            src.fetch(np.arange(2))
+            return sleeps
+
+        a, b = run(3), run(3)
+        assert a == b and len(a) == 3  # deterministic per seed
+        assert a != run(4)  # distinct seeds de-synchronize
+        # exponential shape survives +-25% jitter at mult=2
+        assert a[1] > a[0] and a[2] > a[1]
+
+    def test_stream_skips_quarantined_window(self, host_source):
+        wins = _windows(host_source.num_blocks, width=4, count=4)
+        # fail only attempt 1 (second window) beyond the retry budget
+        script = [None] + [TransientIOError("x")] * 3 + [None, None]
+        src = ResilientSource(
+            _FlakySource(host_source, script),
+            policy=RetryPolicy(max_retries=2, backoff_s=0.0),
+        )
+        out = list(src.stream(wins, pad_to=4))
+        assert len(out) == len(wins) - 1
+        np.testing.assert_array_equal(src.take_quarantined(), wins[1])
+
+    def test_cancel_event_stops_retry_loop(self, host_source):
+        ev = threading.Event()
+        ev.set()
+        src = ResilientSource(_FlakySource(host_source, []))
+        src.set_cancel_event(ev)
+        with pytest.raises(FetchCancelled):
+            src.fetch(np.arange(2))
+        assert src.take_quarantined().size == 0  # cancellation != fault
+
+    def test_telemetry_counters(self, host_source):
+        from repro.obs import Telemetry
+
+        tel = Telemetry()
+        flaky = _FlakySource(host_source, [TransientIOError("x")] * 10)
+        src = ResilientSource(
+            flaky, policy=RetryPolicy(max_retries=1, backoff_s=0.0), telemetry=tel
+        )
+        with pytest.raises(WindowQuarantined):
+            src.fetch(np.array([1, 2]))
+        reg = tel.registry
+        assert reg.get("io_fetch_retries_total").value == 1
+        assert reg.get("io_transient_faults_total").value == 2
+        assert reg.get("io_permanent_faults_total").value == 1
+        assert reg.get("io_blocks_quarantined_total").value == 2
+        (ev,) = tel.tracer.events("window_quarantine")
+        assert ev["blocks"] == 2 and ev["why"] == "retries-exhausted"
+
+    def test_find_resilient_walks_wrapper_chain(self, host_source):
+        res = ResilientSource(FaultySource(host_source, FaultPlan()))
+        assert find_resilient(PrefetchSource(res)) is res
+        assert find_resilient(host_source) is None
+
+    def test_maybe_chaos_env_gate(self, host_source):
+        assert maybe_chaos(host_source, env={}) is host_source
+        wrapped = maybe_chaos(host_source, env={"FASTMATCH_CHAOS": "1"})
+        assert isinstance(wrapped, ResilientSource)
+        assert isinstance(wrapped.inner, FaultySource)
+
+
+# ------------------------------------------------ prefetch cancellation
+
+
+class _HangingSource:
+    """First window serves; every later fetch is transient forever —
+    without cancellation a retry loop would ride out huge backoffs."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.calls = 0
+        self.num_blocks = inner.num_blocks
+        self.block_size = inner.block_size
+        self.v_z = inner.v_z
+        self.v_x = inner.v_x
+        self.tuples_per_block = inner.tuples_per_block
+
+    def fetch(self, win, pad_to=None):
+        self.calls += 1
+        if self.calls > 1:
+            raise TransientIOError("flaky forever")
+        return self.inner.fetch(win, pad_to)
+
+    def stream(self, windows, pad_to=None):
+        for w in windows:
+            yield self.fetch(w, pad_to)
+
+
+class TestPrefetchCancellation:
+    def test_close_cancels_inflight_retry(self, host_source):
+        """Satellite: stream close must stop a worker stuck in backoff
+        at the next cancellation check, not after the backoff schedule
+        (60s+ here) or the join timeout."""
+        from repro.obs import Telemetry
+
+        tel = Telemetry()
+        res = ResilientSource(
+            _HangingSource(host_source),
+            policy=RetryPolicy(max_retries=100, backoff_s=30.0),
+        )
+        pf = PrefetchSource(res, telemetry=tel, join_timeout=5.0)
+        wins = _windows(host_source.num_blocks, width=4, count=4)
+        it = pf.stream(wins, pad_to=4)
+        next(it)  # worker is now retrying window 2's hopeless fetch
+        t0 = time.perf_counter()
+        it.close()
+        assert time.perf_counter() - t0 < 5.0  # cancelled, not joined-out
+        # clean shutdown: no error, no quarantine, no abandoned worker
+        assert tel.registry.get("prefetch_worker_errors_total").value == 0
+        assert tel.registry.get("prefetch_join_timeouts_total").value == 0
+        assert res.take_quarantined().size == 0
+        assert res.cancel_event is None  # flag uninstalled at close
+
+    def test_post_close_failure_is_structured_event(self, host_source):
+        """Satellite: the 'worker failed after the stream was closed'
+        warn now also lands as a counter + structured event."""
+        from repro.obs import Telemetry
+
+        class _LateFailSource(_HangingSource):
+            def fetch(self, win, pad_to=None):
+                self.calls += 1
+                if self.calls > 1:
+                    time.sleep(0.1)  # lets the consumer close first
+                    raise RuntimeError("disk on fire")
+                return self.inner.fetch(win, pad_to)
+
+        tel = Telemetry()
+        pf = PrefetchSource(_LateFailSource(host_source), telemetry=tel)
+        it = pf.stream(_windows(host_source.num_blocks, width=4, count=4), pad_to=4)
+        next(it)
+        it.close()  # the worker's RuntimeError lands after this
+        assert tel.registry.get("prefetch_dropped_errors_total").value == 1
+        (ev,) = tel.tracer.events("prefetch_dropped_error")
+        assert ev["source"] == "_LateFailSource" and "disk on fire" in ev["error"]
+
+
+# ----------------------------------------- end-to-end: degraded guarantees
+
+
+def _serve(source_or_blocked, targets, **kw):
+    srv = MatchServer(
+        source_or_blocked, max_queries=2, lookahead=64, poll_every=2, seed=11, **kw
+    )
+    rids = [srv.submit(t, k=K, eps=EPS, delta=DELTA) for t in targets]
+    res = srv.run_until_idle()
+    return srv, [res[r] for r in rids]
+
+
+class TestServeUnderFaults:
+    def test_transient_faults_bit_identical_golden(self, dataset, targets, host_source):
+        """Satellite golden: a run whose every fault is transient (retry
+        re-reads the same immutable blocks) ends bit-identical to the
+        fault-free run — ids, rounds, tuples, exactness."""
+        _, _, blocked = dataset
+        _, ref = _serve(blocked, targets)
+        chaotic = ResilientSource(
+            FaultySource(host_source, FaultPlan(p_transient=0.4), seed=2),
+            policy=RetryPolicy(max_retries=32, backoff_s=0.0),
+        )
+        srv, got = _serve(chaotic, targets)
+        assert chaotic.retries_total > 0  # chaos actually happened
+        for a, b in zip(got, ref):
+            np.testing.assert_array_equal(a.ids, b.ids)
+            assert (a.rounds, a.blocks_read, a.tuples_read, a.exact) == (
+                b.rounds, b.blocks_read, b.tuples_read, b.exact
+            )
+            assert not a.degraded and not b.degraded
+        m = srv.metrics
+        assert m["blocks_quarantined"] == 0 and m["degraded"] is False
+
+    def test_corruption_quarantines_and_degrades_honestly(self, targets, host_source):
+        """Permanent faults shrink the population; results and metrics
+        must say so. The run still completes every query."""
+        chaotic = ResilientSource(
+            FaultySource(
+                host_source, FaultPlan(p_transient=0.2, p_corrupt=0.3), seed=2
+            ),
+            policy=RetryPolicy(max_retries=1, backoff_s=0.0),
+        )
+        srv, res = _serve(chaotic, targets)
+        sched = srv.scheduler
+        assert sched.blocks_quarantined > 0
+        m = srv.metrics
+        assert m["degraded"] is True
+        assert m["blocks_quarantined"] == sched.blocks_quarantined
+        assert m["eps_inflation"] == pytest.approx(2.0 * sched.quarantine_fraction)
+        # every answer still has k ids; results retired after the first
+        # quarantine carry the widened bound
+        degraded = [r for r in res if r.degraded]
+        assert degraded, "no result observed the quarantine"
+        for r in degraded:
+            # widened by the inflation AT ITS retirement — bounded by the
+            # run's final inflation, never the bare eps
+            assert EPS < r.eps_effective <= EPS + sched.eps_inflation + 1e-9
+        for r in res:
+            assert len(r.ids) == K
+
+    def test_quarantine_blocks_scheduler_semantics(self, host_source, targets):
+        """Unit: already-read blocks are never quarantined (history is
+        validated), eps widening is 2x the quarantined TUPLE fraction,
+        and exact means complete over the survivors."""
+        from repro.core.multiquery import MultiQuerySpec, SharedCountsScheduler
+
+        spec = MultiQuerySpec(
+            v_z=host_source.v_z, v_x=host_source.v_x, max_queries=2, k_cap=K
+        )
+        sched = SharedCountsScheduler(
+            host_source, spec, policy="scan", window=8, seed=0, start_block=0
+        )
+        sched.admit(targets[0], k=K, eps=EPS, delta=DELTA)
+        sched.run_window(np.arange(8))
+        read = np.where(sched.read_mask)[0]
+        assert read.size
+        assert sched.quarantine_blocks(read[:2]) == 0  # history immune
+        fresh = np.where(~sched.read_mask)[0][:10]
+        assert sched.quarantine_blocks(fresh) == 10
+        assert sched.quarantine_blocks(fresh) == 0  # idempotent
+        tpb = np.asarray(host_source.tuples_per_block, np.int64)
+        q = tpb[fresh].sum() / tpb.sum()
+        assert sched.eps_inflation == pytest.approx(2.0 * q)
+        sched.complete_remaining()
+        out = sched.retire(0, exact=False, terminated=False)
+        assert out.degraded and out.exact  # complete over survivors
+        assert out.eps_effective == pytest.approx(EPS + 2.0 * q)
+        assert not sched.read_mask[fresh].any()  # never fetched

@@ -233,6 +233,12 @@ class TestServerTelemetry:
         "total_rounds": int,
         "fraction_read": float,
         "tuples_per_query": float,
+        # PR 8 health surface: fault/degradation observability.
+        "last_error": str,
+        "queries_shed": int,
+        "blocks_quarantined": int,
+        "degraded": bool,
+        "eps_inflation": float,
     }
 
     def test_metrics_schema_pinned(self, dataset, targets):

@@ -1,0 +1,216 @@
+"""ServeSupervisor: crash recovery, deadlines, load shedding (PR 8).
+
+The recovery acceptance test is the tentpole contract: kill the serving
+loop mid-round with an injected unrecoverable fault, restart through the
+supervisor, and every queued query completes from the last snapshot with
+answers BIT-IDENTICAL to a run that never crashed (re-submission is
+lossless because sampling is target-independent — a re-admitted query
+inherits the restored shared counts at its full budget).
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.layout import block_layout
+from repro.data.synth import SynthSpec, make_dataset, perturb_distribution
+from repro.io import InMemorySource
+from repro.io.faults import (
+    FaultPlan,
+    FaultySource,
+    ResilientSource,
+    RetryPolicy,
+    UnrecoverableIOError,
+)
+from repro.serve import ServeSupervisor, SupervisorPolicy
+
+K, EPS, DELTA = 5, 0.08, 0.05
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    spec = SynthSpec(
+        v_z=32, v_x=16, num_tuples=120_000, k=K, n_close=5,
+        close_distance=0.02, far_distance=0.3, zipf_a=0.9, seed=3,
+    )
+    ds = make_dataset(spec)
+    blocked = block_layout(
+        ds.z, ds.x, v_z=spec.v_z, v_x=spec.v_x, block_size=512, seed=5
+    )
+    return spec, ds, blocked
+
+
+@pytest.fixture(scope="module")
+def targets(dataset):
+    _, ds, _ = dataset
+    rng = np.random.default_rng(9)
+    return [perturb_distribution(ds.target, d, rng) for d in (0.01, 0.04, 0.1)]
+
+
+def _chaos_source(blocked, *, crash_at=None, seed=0):
+    return ResilientSource(
+        FaultySource(
+            InMemorySource(blocked, device_resident=False),
+            FaultPlan(crash_at=crash_at),
+            seed=seed,
+        ),
+        policy=RetryPolicy(max_retries=2, backoff_s=0.0005),
+    )
+
+
+_SERVER_KW = dict(max_queries=2, lookahead=64, poll_every=2, seed=11)
+
+
+class TestCrashRecovery:
+    def test_kill_mid_round_recovers_bit_identical(self, dataset, targets, tmp_path):
+        """Acceptance: crash at fetch attempt 2, supervisor restores the
+        autosaved snapshot, re-queues, completes — answers match the
+        never-crashed supervisor run exactly."""
+        _, _, blocked = dataset
+        ref_sup = ServeSupervisor(
+            _chaos_source(blocked),
+            checkpoint_dir=tmp_path / "ref", autosave_rounds=2, telemetry=True,
+            **_SERVER_KW,
+        )
+        ref_rids = [ref_sup.submit(t, k=K, eps=EPS, delta=DELTA) for t in targets]
+        ref = ref_sup.run_until_idle()
+        assert ref_sup.restarts == 0
+
+        sup = ServeSupervisor(
+            _chaos_source(blocked, crash_at=2),
+            policy=SupervisorPolicy(max_restarts=2),
+            checkpoint_dir=tmp_path / "crash", autosave_rounds=2, telemetry=True,
+            **_SERVER_KW,
+        )
+        rids = [sup.submit(t, k=K, eps=EPS, delta=DELTA) for t in targets]
+        res = sup.run_until_idle()
+        assert sup.restarts == 1  # the crash fired and was recovered once
+        assert "UnrecoverableIOError" in sup.last_error
+        assert len(res) == len(targets) and sup.unresolved == 0
+        for rid, ref_rid in zip(rids, ref_rids):
+            np.testing.assert_array_equal(res[rid].ids, ref[ref_rid].ids)
+        # observability: crash + recovery landed in counters and events
+        reg = sup.telemetry.registry
+        assert reg.get("serve_crashes_total").value == 1
+        assert reg.get("serve_recoveries_total").value == 1
+        assert reg.get("serve_recovery_seconds").count == 1
+        (crash_ev,) = sup.telemetry.tracer.events("serve_crash")
+        assert "UnrecoverableIOError" in crash_ev["error"]
+        (rec_ev,) = sup.telemetry.tracer.events("serve_recovered")
+        assert rec_ev["resubmitted"] >= 1 and rec_ev["recovery_s"] > 0.0
+        m = sup.metrics
+        assert m["restarts"] == 1 and m["recovery_s_total"] > 0.0
+        assert "UnrecoverableIOError" in m["last_error"]
+
+    def test_cold_recovery_without_checkpoint_dir(self, dataset, targets):
+        """No snapshot on disk: recovery restarts cold and re-samples —
+        still answer-complete, still bit-identical (warm restarts are
+        exact, and a cold rebuild IS the from-scratch run)."""
+        _, _, blocked = dataset
+        sup = ServeSupervisor(
+            _chaos_source(blocked, crash_at=2),
+            policy=SupervisorPolicy(max_restarts=1),
+            **_SERVER_KW,
+        )
+        rids = [sup.submit(t, k=K, eps=EPS, delta=DELTA) for t in targets[:2]]
+        res = sup.run_until_idle()
+        assert sup.restarts == 1 and len(res) == 2
+        plain = ServeSupervisor(_chaos_source(blocked), **_SERVER_KW)
+        prids = [plain.submit(t, k=K, eps=EPS, delta=DELTA) for t in targets[:2]]
+        pres = plain.run_until_idle()
+        for rid, prid in zip(rids, prids):
+            np.testing.assert_array_equal(res[rid].ids, pres[prid].ids)
+
+    def test_max_restarts_exhausted_reraises(self, dataset, targets):
+        """The (N+1)-th crash is a bug, not an operational event: it
+        propagates with the original exception."""
+        _, _, blocked = dataset
+        sup = ServeSupervisor(
+            _chaos_source(blocked, crash_at=2),
+            policy=SupervisorPolicy(max_restarts=0),
+            **_SERVER_KW,
+        )
+        sup.submit(targets[0], k=K, eps=EPS, delta=DELTA)
+        with pytest.raises(UnrecoverableIOError):
+            sup.run_until_idle()
+        assert sup.restarts == 1  # counted before the bound check
+
+
+class TestSheddingAndDeadlines:
+    def test_overload_sheds_at_the_door(self, dataset, targets):
+        _, _, blocked = dataset
+        sup = ServeSupervisor(
+            InMemorySource(blocked, device_resident=False),
+            policy=SupervisorPolicy(max_queue=1),
+            max_queries=1, lookahead=64, poll_every=2, seed=11, telemetry=True,
+        )
+        rids = [sup.submit(t, k=K, eps=EPS, delta=DELTA) for t in targets]
+        res = sup.run_until_idle()
+        shed = [r for r in rids if r in sup.shed]
+        answered = [r for r in rids if r in res]
+        assert shed and sup.shed[shed[0]] == "overload"
+        assert len(answered) + len(shed) == len(rids)
+        assert sup.metrics["queries_shed"] == len(shed)
+        assert sup.telemetry.registry.get("serve_queries_shed_total").value == len(shed)
+        assert {e["reason"] for e in sup.telemetry.tracer.events("query_shed")} == {
+            "overload"
+        }
+
+    def test_queued_query_shed_at_deadline(self, dataset, targets):
+        """A query whose deadline passes while still QUEUED consumed no
+        I/O — it is shed, never half-answered."""
+        _, _, blocked = dataset
+        sup = ServeSupervisor(
+            InMemorySource(blocked, device_resident=False),
+            max_queries=2, lookahead=64, poll_every=2, seed=11,
+        )
+        ok = sup.submit(targets[0], k=K, eps=EPS, delta=DELTA)
+        late = sup.submit(targets[1], k=K, eps=EPS, delta=DELTA, deadline_s=0.0)
+        res = sup.run_until_idle()
+        assert sup.shed[late] == "deadline" and late not in res
+        assert ok in res and len(res[ok].ids) == K
+
+    def test_live_query_early_retired_at_deadline(self, dataset, targets):
+        """A LIVE query at its deadline returns its best-effort answer
+        (exact=False) instead of being dropped."""
+        _, _, blocked = dataset
+        sup = ServeSupervisor(
+            InMemorySource(blocked, device_resident=False),
+            max_queries=2, lookahead=16, poll_every=2, seed=11, telemetry=True,
+        )
+        rid = sup.submit(targets[2], k=K, eps=EPS, delta=DELTA)
+        sup.server.step()  # admit + first window: the query is now live
+        assert sup.server.scheduler.tickets  # still running
+        sup._requests[rid].deadline = time.monotonic() - 1.0
+        res = sup.run_until_idle()
+        assert rid in res and rid not in sup.shed
+        assert res[rid].exact is False and len(res[rid].ids) == K
+        (ev,) = sup.telemetry.tracer.events("query_deadline_retire")
+        assert ev["rid"] == rid
+
+    def test_default_deadline_from_policy(self, dataset, targets):
+        _, _, blocked = dataset
+        sup = ServeSupervisor(
+            InMemorySource(blocked, device_resident=False),
+            policy=SupervisorPolicy(default_deadline_s=0.0),
+            max_queries=2, lookahead=64, seed=11,
+        )
+        rid = sup.submit(targets[0], k=K, eps=EPS, delta=DELTA)
+        sup.run_until_idle()
+        assert sup.shed[rid] == "deadline"
+
+    def test_metrics_surface_merges_server_and_supervisor(self, dataset, targets):
+        _, _, blocked = dataset
+        sup = ServeSupervisor(
+            InMemorySource(blocked, device_resident=False), **_SERVER_KW
+        )
+        sup.submit(targets[0], k=K, eps=EPS, delta=DELTA)
+        sup.run_until_idle()
+        m = sup.metrics
+        for key in (
+            "queries_done", "blocks_quarantined", "degraded",  # server side
+            "restarts", "recovery_s_total", "queries_shed", "last_error",
+        ):
+            assert key in m
+        assert m["queries_done"] == 1 and m["restarts"] == 0
