@@ -140,6 +140,21 @@ GATES = {
         Gate("recall_degraded", "min", 0.15),
         Gate("ok", "exact"),
     ]),
+    # Pluggable-metric matrix: the closeness promise booleans and the
+    # l1 exact-recall bit are deterministic per config; per-metric
+    # top-k recall is a seeded float floor. Rounds-to-retire is
+    # reported, never gated (the conservatism ordering is documented,
+    # not promised numerically).
+    "metrics": ("BENCH_metrics.json", [
+        Gate("l1_matches_brute", "exact"),
+        Gate("closeness_ok_l1", "exact"),
+        Gate("closeness_ok_chi2", "exact"),
+        Gate("closeness_ok_hellinger", "exact"),
+        Gate("recall_l1", "min", 0.05),
+        Gate("recall_chi2", "min", 0.15),
+        Gate("recall_hellinger", "min", 0.15),
+        Gate("ok", "exact"),
+    ]),
 }
 
 

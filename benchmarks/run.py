@@ -21,6 +21,7 @@ from benchmarks import (
     fig9_lookahead,
     fig10_11_delta,
     guarantees,
+    metrics_matrix,
     pump_throughput,
     roofline_report,
     serve_throughput,
@@ -45,6 +46,7 @@ SUITES = {
     "telemetry": telemetry_overhead.run,
     "autotune": autotune_smoke.run,
     "faults": fault_recovery.run,
+    "metrics": metrics_matrix.run,
 }
 
 

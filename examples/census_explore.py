@@ -1,6 +1,8 @@
 """Interactive-style exploration: several matching queries on one dataset,
 including target shapes from the paper (uniform target, explicit vector
-target) and a comparison of all engine variants on one query.
+target), a comparison of all engine variants on one query, and the
+PR-9 pluggable-metric layer — a chi-square top-k server and a tolerant
+closeness test sharing a top-k query's sample stream.
 
   PYTHONPATH=src python examples/census_explore.py
 """
@@ -11,6 +13,7 @@ from repro.core.engine import VARIANTS, EngineConfig, run_engine
 from repro.core.histsim import HistSimParams
 from repro.data.layout import block_layout
 from repro.data.synth import SynthSpec, make_dataset
+from repro.serve.fastmatch_server import MatchServer
 
 
 def main():
@@ -47,6 +50,41 @@ def main():
         r = run_engine(blocked, ds.target, params, cfg)
         print(f"  {variant:10s} blocks={r.blocks_read:6d} rounds={r.rounds:5d} "
               f"wall={r.wall_time_s:6.2f}s exact={r.exact}")
+
+    # --- query 4: chi-square metric (pluggable-metric layer) ---
+    # Same dataset, same counts machinery — only the registry distance
+    # the shared tau pass computes changes. chi2 taus live in [0, 2] and
+    # route through a conservative bound (core/bounds.py), so give the
+    # query a wider radius than the l1 eps.
+    print("\n[q4: chi-square top-k] serving with metric='chi2' ...")
+    srv_chi = MatchServer(blocked, max_queries=2, lookahead=512, metric="chi2")
+    rid = srv_chi.submit(ds.target, k=10, eps=0.15, delta=0.01)
+    res_chi = srv_chi.run_until_idle()[rid]
+    q = ds.target / ds.target.sum()
+    s_ = ds.true_hists + q[None, :]
+    d_ = ds.true_hists - q[None, :]
+    chi_true = np.where(s_ > 0, d_ * d_ / np.where(s_ > 0, s_, 1), 0).sum(1)
+    print(f"  ids={sorted(res_chi.ids.tolist())} "
+          f"truth={sorted(np.argsort(chi_true)[:10].tolist())} "
+          f"blocks={res_chi.blocks_read} exact={res_chi.exact}")
+
+    # --- query 5: closeness test riding a top-k query's samples -------
+    # A distribution-testing query through the same queue: label every
+    # candidate within eps of the target as close, everything beyond
+    # eps + gap as far (labels inside the gap are unconstrained). It
+    # shares the counts matrix with the concurrent top-k query, so the
+    # pair costs barely more I/O than either alone.
+    print("\n[q5: mixed top-k + closeness on one stream]")
+    srv = MatchServer(blocked, max_queries=2, lookahead=512)
+    rid_top = srv.submit(ds.target, k=10, eps=0.06, delta=0.01)
+    rid_close = srv.submit_closeness(ds.target, eps=0.08, gap=0.15, delta=0.01)
+    res = srv.run_until_idle()
+    rt, rc = res[rid_top], res[rid_close]
+    n_true_close = int((ds.true_dists <= 0.08).sum())
+    print(f"  top-k:     ids={sorted(rt.ids.tolist())} tuples={rt.tuples_read}")
+    print(f"  closeness: {len(rc.ids)} candidates labeled close "
+          f"(truth: {n_true_close} within eps) tuples={rc.tuples_read}")
+    print(f"  shared-stream total reads: {srv.scheduler.tuples_read}")
 
 
 if __name__ == "__main__":

@@ -23,6 +23,49 @@ Also provided, for the paper's Fig. 4 and the SlowMatch baseline:
   larger constants,  eps = sqrt(V_X/n) + sqrt((2/n) * log(1/delta)).
 * ``slowmatch_epsilon`` — the fixed-confidence (1 - delta/|V_Z|) interval
   width used by the SlowMatch termination criterion.
+
+Per-metric bound family (the deviation half of the pluggable-metric
+layer; scores live in `repro.kernels.metrics`):
+
+Theorem 1 concentrates the EMPIRICAL DISTRIBUTION in ℓ1. Any distance
+t(p, q) that is uniformly continuous in its first argument under ℓ1
+inherits a concentration bound through its inverse modulus of
+continuity B_t: if ||p' - p||_1 <= B_t(eps) implies
+|t(p', q) - t(p, q)| <= eps for every q, then
+
+    Pr[ |t(r_hat, q) - t(r, q)| > eps ] <= delta_theorem1(B_t(eps), n).
+
+`metric_log_delta` is exactly that composition, with B_t from the
+metric registry:
+
+  l1         B(eps) = eps — the identity, zero extra ops, so the l1
+             arm of the refactor is Theorem 1 verbatim (bit-identical
+             to the pre-metric-layer code).
+  chi2       B(eps) = eps/3. chi2(p,q) = sum (p-q)^2/(p+q) is
+             3-Lipschitz in p under ℓ1: per coordinate
+             |d/dp (p-q)^2/(p+q)| = |(p-q)(p+3q)|/(p+q)^2 <= 3 because
+             |p-q| <= p+q and p+3q <= 3(p+q); summing per-coordinate
+             mean-value bounds along the segment p -> p' gives
+             |chi2(p',q) - chi2(p,q)| <= 3 ||p' - p||_1.
+             DELIBERATELY CONSERVATIVE: metric-native chi-square tail
+             bounds (Canonne et al. 2022) are tighter, but this one is
+             valid for every (p, q) pair and reuses the exact Theorem-1
+             machinery the engine already trusts.
+  hellinger  B(eps) = eps^2/4 (squared Hellinger, the registry's tau).
+             By Cauchy-Schwarz, |H^2(p,t) - H^2(q,t)| <=
+             sqrt(||p-q||_1) + ||p-q||_1/2, so an ℓ1 deviation of
+             eps^2/4 moves H^2 by at most eps/2 + eps^2/8 <= eps for
+             eps <= 1 (and H^2 itself is <= 1, so eps > 1 is vacuous).
+             Also conservative — the square-root modulus is what makes
+             Hellinger queries the most sample-hungry of the three.
+
+The closeness (two-sided tolerance) test built on these bounds lives in
+`repro.core.deviations.assign_closeness`; the early-reject behavior for
+clearly-far candidates is emergent there — a candidate far outside
+[eps, eps+gap] gets a large decision margin, hence a tiny delta_i,
+hence drops out of the active sampling set after few samples, which is
+the engine-shaped analogue of the Diakonikolas-Kane closeness testers'
+"cheap rejection of far distributions".
 """
 
 from __future__ import annotations
@@ -30,14 +73,24 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import metrics as _metrics
+
 __all__ = [
     "theorem1_epsilon",
     "theorem1_delta",
     "theorem1_log_delta",
     "theorem1_samples",
+    "metric_l1_budget",
+    "metric_log_delta",
+    "metric_epsilon",
+    "BOUNDED_METRICS",
     "waggoner_epsilon",
     "slowmatch_epsilon",
 ]
+
+# Metrics this bound family covers — pinned by tests/test_metrics.py to
+# the kernel registry, so a metric cannot ship a score without a bound.
+BOUNDED_METRICS = _metrics.METRIC_NAMES
 
 _LOG2 = 0.6931471805599453
 
@@ -80,6 +133,39 @@ def theorem1_samples(eps: float, delta: float, v_x: int) -> int:
 
     n = (2.0 / (eps * eps)) * (v_x * _LOG2 - math.log(delta))
     return int(math.ceil(n))
+
+
+def metric_l1_budget(eps, metric: str = "l1"):
+    """The ℓ1 deviation that guarantees a ``metric``-space deviation of
+    at most ``eps`` (the inverse modulus of continuity B_t — derivations
+    in the module docstring). Pure scalar math from the kernel registry;
+    works on host floats and traced jnp scalars alike. The l1 branch is
+    the IDENTITY at the Python level — zero extra ops, so l1 callers
+    compile the exact pre-metric-layer program.
+    """
+    return _metrics.coerce_metric(metric).l1_budget(eps)
+
+
+def metric_log_delta(eps, n, v_x: int, metric: str = "l1") -> jax.Array:
+    """log failure probability for deviation ``eps`` IN METRIC SPACE:
+    Theorem 1 evaluated at the metric's ℓ1 budget. For metric="l1" this
+    IS `theorem1_log_delta` (same ops, bit-identical)."""
+    return theorem1_log_delta(metric_l1_budget(eps, metric), n, v_x)
+
+
+def metric_epsilon(n, delta, v_x: int, metric: str = "l1"):
+    """Metric-space deviation guaranteed w.p. > 1 - delta after n
+    samples — `theorem1_epsilon` pushed through the inverse of the
+    metric's budget (host-side telemetry/benchmark helper; accepts
+    numpy arrays). l1: eps; chi2: 3 eps; hellinger: 2 sqrt(eps)."""
+    eps1 = theorem1_epsilon(n, delta, v_x)
+    if metric == "l1":
+        return eps1
+    if metric == "chi2":
+        return 3.0 * eps1
+    if metric == "hellinger":
+        return 2.0 * jnp.sqrt(eps1)
+    raise ValueError(f"unknown metric {metric!r}; have {BOUNDED_METRICS}")
 
 
 def waggoner_epsilon(n: jax.Array, delta: jax.Array, v_x: int) -> jax.Array:

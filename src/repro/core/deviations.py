@@ -13,6 +13,15 @@ delta_i = 2^V_X exp(-eps_i^2 n_i / 2) is as small as possible):
 Then delta_upper = sum_i delta_i and the active set is
 {i : delta_i > delta / V_Z} (the AnyActive threshold, Sec 4.2).
 
+The metric layer generalizes both rules: tau may be ANY registry metric
+(`repro.kernels.metrics`), and the failure bounds go through
+`bounds.metric_log_delta` — Theorem 1 evaluated at the metric's ℓ1
+budget (identity for l1, so the default path is unchanged bit for bit).
+`assign_closeness` is the second retirement rule: a two-sided tolerance
+(closeness) test over the same DeviationState shape, so the batched
+multi-query engine, the AnyActive pruning flow, and the shared
+``delta_upper < delta`` termination all serve both query types.
+
 Everything here is branch-free, fixed-shape JAX, usable inside jit and
 under shard_map (candidate-sharded with a tiny all-gather of tau).
 """
@@ -30,6 +39,7 @@ __all__ = [
     "DeviationState",
     "assign_deviations",
     "assign_deviations_dynamic",
+    "assign_closeness",
     "split_point",
     "top_k_mask",
 ]
@@ -112,6 +122,7 @@ def assign_deviations_dynamic(
     v_x: int,
     criterion: str = "histsim",
     k_cap: Optional[int] = None,
+    metric: str = "l1",
 ) -> DeviationState:
     """`assign_deviations` with traced (k, eps, delta) — vmappable.
 
@@ -136,6 +147,11 @@ def assign_deviations_dynamic(
 
     criterion: "histsim" (delta_upper = sum delta_i) | "slowmatch"
     (delta_upper = V_Z * max delta_i), matching `slowmatch_deviations`.
+
+    metric: which registry distance tau was computed under; eps and the
+    assigned eps_i are in THAT metric's space, and the failure bounds
+    go through `bounds.metric_log_delta` (identity budget for "l1" —
+    zero extra ops, bit-identical to the pre-metric-layer path).
     """
     if criterion not in ("histsim", "slowmatch"):
         raise ValueError(criterion)
@@ -171,7 +187,7 @@ def assign_deviations_dynamic(
     eps_out = tau - jnp.maximum(s - 0.5 * eps, 0.0)
     eps_i = jnp.maximum(jnp.where(in_m, eps_in, eps_out), 0.0)
 
-    log_delta_i = bounds.theorem1_log_delta(eps_i, n, v_x)
+    log_delta_i = bounds.metric_log_delta(eps_i, n, v_x, metric=metric)
     if criterion == "slowmatch":
         # Every candidate individually at confidence delta/V_Z (Sec 5.2).
         delta_upper = float(v_z) * jnp.exp(jnp.max(log_delta_i))
@@ -214,4 +230,69 @@ def slowmatch_deviations(
     """
     return assign_deviations_dynamic(
         tau, n, k=k, eps=eps, delta=delta, v_x=v_x, criterion="slowmatch", k_cap=k
+    )
+
+
+def assign_closeness(
+    tau: jax.Array,
+    n: jax.Array,
+    *,
+    eps: jax.Array,
+    gap: jax.Array,
+    delta: jax.Array,
+    v_x: int,
+    metric: str = "l1",
+) -> DeviationState:
+    """Tolerant closeness test over the shared counts matrix — the
+    second retirement rule, in the same DeviationState shape as top-k.
+
+    Problem (Diakonikolas-Kane-style tolerant testing, promise form):
+    for every candidate i, decide "close" (true distance d_i <= eps) vs
+    "far" (d_i >= eps + gap), with the whole label vector correct w.p.
+    > 1 - delta; candidates inside the promise gap (eps, eps + gap) may
+    be labeled either way. Labels are thresholded at the midpoint
+    t = eps + gap/2, and the per-candidate DECISION MARGIN
+
+        m_i = max(tau_i - eps, (eps + gap) - tau_i)   (>= gap/2 always)
+
+    is the metric-space deviation that would have to occur for the
+    label to break its promise: a "far" label (tau_i > t, margin
+    tau_i - eps) is wrong only if d_i < eps <= tau_i - m_i + m_i, i.e.
+    only if |tau_i - d_i| > m_i; symmetrically for "close". So
+    delta_i = metric_delta(m_i, n_i) bounds candidate i's failure
+    probability, delta_upper = sum_i delta_i bounds the union, and the
+    shared termination test ``delta_upper < delta`` applies unchanged.
+
+    Early-reject is emergent, not special-cased: a clearly-far
+    candidate (tau_i >> eps + gap) has a huge margin, so its delta_i
+    collapses after very few samples and it leaves the active set —
+    AnyActive then stops reading its blocks — while borderline
+    candidates (margin ~ gap/2) keep sampling. This is what makes
+    mixed closeness + top-k workloads cheap: the closeness slots prune
+    most of V_Z almost immediately.
+
+    Returns a DeviationState where ``in_top_k`` holds the CLOSE label
+    (tau_i <= t), ``split`` is the decision threshold t, and eps_i is
+    the margin m_i. k plays no role.
+    """
+    tau = jnp.asarray(tau, jnp.float32)
+    v_z = tau.shape[0]
+    eps = jnp.asarray(eps, jnp.float32)
+    gap = jnp.asarray(gap, jnp.float32)
+    delta = jnp.asarray(delta, jnp.float32)
+
+    threshold = eps + 0.5 * gap
+    close = tau <= threshold
+    margin = jnp.maximum(jnp.maximum(tau - eps, (eps + gap) - tau), 0.0)
+    log_delta_i = bounds.metric_log_delta(margin, n, v_x, metric=metric)
+    delta_upper = jnp.sum(jnp.exp(log_delta_i))
+    log_threshold = jnp.log(delta / float(v_z))
+    return DeviationState(
+        tau=tau,
+        in_top_k=close,
+        split=threshold,
+        eps_i=margin,
+        log_delta_i=log_delta_i,
+        delta_upper=delta_upper,
+        active=log_delta_i > log_threshold,
     )

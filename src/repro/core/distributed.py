@@ -22,8 +22,8 @@ module used to carry is gone — one loop, one state, every width):
                       spinlock handoff becomes one fused all-reduce of
                       a (V_Z/m, V_X) f32 tile.
   * statistics      — per-query tau rows computed locally per model
-                      shard with ONE Q-batched `l1_distance_multi`
-                      call (the shard's counts rows are streamed once
+                      shard with ONE Q-batched `ops.distance_multi`
+                      call (the spec's static metric) (the shard's counts rows are streamed once
                       for all query slots; unoccupied slots masked),
                       then one tiled all-gather of (Q, V_Z) + (V_Z,)
                       floats and the same vmapped per-query deviation
@@ -114,6 +114,8 @@ def multi_state_pspecs(model_axis: str = "model") -> MultiQueryState:
         k=P(),
         eps=P(),
         delta=P(),
+        gap=P(),
+        qtype=P(),
         tau=P(),
         eps_i=P(),
         log_delta_i=P(),
@@ -232,7 +234,9 @@ def make_distributed_round(
     vz_shard = spec.v_z // model_size
     sample_axes = tuple(data_axes)
     if plans is None:
-        plans = autotune.resolve_plans(vz_shard, spec.v_x, spec.max_queries)
+        plans = autotune.resolve_plans(
+            vz_shard, spec.v_x, spec.max_queries, metric=spec.metric
+        )
 
     def round_fn(state: MultiQueryState, z_idx: jax.Array, x_idx: jax.Array):
         state = _shard_ingest(
@@ -290,8 +294,9 @@ def _shard_stats(
     the tuned variant ``plan`` selected; unoccupied slots masked to the
     init value), tiny all-gather, then the shared vmapped per-query
     assignment."""
-    tau_shard = ops.l1_distance_multi(
-        state.counts, state.q_hat, plan=plan if plan is not None else "auto"
+    tau_shard = ops.distance_multi(
+        state.counts, state.q_hat, metric=spec.metric,
+        plan=plan if plan is not None else "auto",
     )  # (Q, vz_shard)
     tau_shard = jnp.where(state.occupied[:, None], tau_shard, 1.0)
     tau = jax.lax.all_gather(tau_shard, model_axis, axis=1, tiled=True)
@@ -392,7 +397,9 @@ def make_pump_round(
     vz_shard = _check_vz(spec, mesh, model_axis)
     sample_axes = tuple(data_axes)
     if plans is None:
-        plans = autotune.resolve_plans(vz_shard, spec.v_x, spec.max_queries)
+        plans = autotune.resolve_plans(
+            vz_shard, spec.v_x, spec.max_queries, metric=spec.metric
+        )
 
     def round_fn(state: MultiQueryState, cursor: SampleCursor, wd: WindowData):
         local_idx = wd.indices - _worker_lo(mesh, sample_axes, blocks_per_worker)
@@ -444,7 +451,9 @@ def make_pump_ingest_round(
     vz_shard = _check_vz(spec, mesh, model_axis)
     sample_axes = tuple(data_axes)
     if plans is None:
-        plans = autotune.resolve_plans(vz_shard, spec.v_x, spec.max_queries)
+        plans = autotune.resolve_plans(
+            vz_shard, spec.v_x, spec.max_queries, metric=spec.metric
+        )
 
     def round_fn(state: MultiQueryState, cursor: SampleCursor, wd: WindowData):
         local_idx = wd.indices - _worker_lo(mesh, sample_axes, blocks_per_worker)

@@ -129,6 +129,9 @@ class MatchResult:
     # population and ``eps_effective`` is the widened full-data bound.
     degraded: bool = False
     eps_effective: float = float("nan")
+    # Query type this result answers: "topk" (ids = the k matches) or
+    # "closeness" (ids = every candidate labeled close, tau order).
+    qtype: str = "topk"
 
     @property
     def delta_upper(self) -> float:
@@ -148,6 +151,7 @@ def _to_match_result(out: QueryOutcome, t0: float) -> MatchResult:
         passes=out.passes,
         degraded=out.degraded,
         eps_effective=out.eps_effective,
+        qtype=out.qtype,
     )
 
 

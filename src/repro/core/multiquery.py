@@ -7,8 +7,9 @@ N concurrent queries over the same dataset can therefore share ONE
 counts matrix and ONE I/O stream:
 
   shared   — counts (V_Z, V_X), n (V_Z,), the block read_mask / cursor
-  per-query — q_hat, (k, eps, delta), tau, eps_i, log_delta_i,
-              delta_upper, active set, matching set M
+  per-query — q_hat, (k, eps, delta), query type (top-k | closeness)
+              and its gap, tau, eps_i, log_delta_i, delta_upper,
+              active set, matching set M (close set for closeness)
 
 `ingest` runs once per window for everybody (reusing the one-hot-
 contraction histogram kernel); `stats_step` is vmapped over the query
@@ -58,6 +59,18 @@ used to live inline in `engine.run_engine`; the single-query engine is
 now the ``max_queries=1`` specialization of this loop, and
 `repro.serve.fastmatch_server.MatchServer` is the many-query frontend
 with admission/retirement.
+
+Pluggable metrics and query types: the spec's static ``metric`` ("l1" |
+"chi2" | "hellinger") selects WHICH registry distance the shared tau
+pass computes — threaded through `stats_step` exactly like the tuned
+kernel plan, so one scheduler serves one metric with per-metric
+autotune keys. Query TYPE is per-slot and dynamic: every slot carries a
+``qtype`` (0 = top-k, 1 = closeness) and a ``gap``, and `apply_stats`
+evaluates both retirement rules and selects per slot — admitting a
+closeness query next to live top-k queries therefore triggers NO
+recompilation and both share the same counts matrix mid-stream. The
+l1 top-k default compiles to the exact pre-metric-layer program (the
+closeness branch is selected away; selects are value-exact).
 """
 
 from __future__ import annotations
@@ -88,6 +101,8 @@ __all__ = [
     "CacheSnapshot",
     "MultiQuerySpec",
     "MultiQueryState",
+    "QTYPE_TOPK",
+    "QTYPE_CLOSENESS",
     "QueryOutcome",
     "SampleCursor",
     "SharedCountsScheduler",
@@ -106,9 +121,17 @@ __all__ = [
 ]
 
 
+# Per-slot query types (MultiQueryState.qtype values). Dynamic — a
+# traced i32 per slot, NOT a static spec field — so mixed top-k +
+# closeness workloads share one compiled program.
+QTYPE_TOPK = 0
+QTYPE_CLOSENESS = 1
+
+
 @dataclasses.dataclass(frozen=True)
 class MultiQuerySpec:
-    """Static shape/criterion configuration shared by all query slots."""
+    """Static shape/criterion/metric configuration shared by all query
+    slots."""
 
     v_z: int
     v_x: int
@@ -119,6 +142,11 @@ class MultiQuerySpec:
     # instead of a V_Z-sized sort; admission validates k <= k_cap.
     # None = no bound known (selection falls back to V_Z order stats).
     k_cap: Optional[int] = None
+    # Registry distance the shared tau pass computes (and the bound
+    # family deviations go through) — static per scheduler, threaded
+    # like the kernel plan. "l1" reproduces the pre-metric-layer
+    # program bit for bit.
+    metric: str = "l1"
 
     def __post_init__(self):
         if self.max_queries < 1:
@@ -127,6 +155,9 @@ class MultiQuerySpec:
             raise ValueError(self.criterion)
         if self.k_cap is not None and not (0 < self.k_cap <= self.v_z):
             raise ValueError(f"need 0 < k_cap <= V_Z, got k_cap={self.k_cap}")
+        from repro.kernels import metrics as _metrics
+
+        _metrics.coerce_metric(self.metric)  # fail construction, not trace
 
 
 class MultiQueryState(NamedTuple):
@@ -138,6 +169,8 @@ class MultiQueryState(NamedTuple):
     k: jax.Array  # (Q,) i32 per-query k
     eps: jax.Array  # (Q,) f32 per-query eps
     delta: jax.Array  # (Q,) f32 per-query delta
+    gap: jax.Array  # (Q,) f32 — closeness promise gap (0 for top-k slots)
+    qtype: jax.Array  # (Q,) i32 — QTYPE_TOPK | QTYPE_CLOSENESS per slot
     tau: jax.Array  # (Q, V_Z) f32 per-query distance estimates
     eps_i: jax.Array  # (Q, V_Z) f32 assigned deviations
     log_delta_i: jax.Array  # (Q, V_Z) f32
@@ -253,6 +286,8 @@ def init_multi_state(spec: MultiQuerySpec) -> MultiQueryState:
         k=jnp.ones((q,), jnp.int32),
         eps=jnp.ones((q,), jnp.float32),
         delta=jnp.ones((q,), jnp.float32),
+        gap=jnp.zeros((q,), jnp.float32),
+        qtype=jnp.zeros((q,), jnp.int32),
         tau=jnp.ones((q, v_z), jnp.float32),
         eps_i=jnp.zeros((q, v_z), jnp.float32),
         log_delta_i=jnp.zeros((q, v_z), jnp.float32),
@@ -276,9 +311,17 @@ def admit_slot(
     delta: jax.Array,
     *,
     spec: MultiQuerySpec,
+    qtype: jax.Array = QTYPE_TOPK,
+    gap: jax.Array = 0.0,
 ) -> MultiQueryState:
     """Install a query into `slot`. Run `stats_step` before the next marking
-    so the new query's active set reflects the accumulated shared counts."""
+    so the new query's active set reflects the accumulated shared counts.
+
+    ``qtype``/``gap`` default to a top-k query (the pre-closeness
+    signature — existing positional callers are unchanged); pass
+    ``qtype=QTYPE_CLOSENESS`` with a positive ``gap`` for a tolerant
+    closeness test (eps = the "close" radius, eps + gap = the "far"
+    radius; k is ignored for such slots)."""
     del spec  # shapes carried by state
     slot = jnp.asarray(slot, jnp.int32)
     return state._replace(
@@ -286,6 +329,8 @@ def admit_slot(
         k=state.k.at[slot].set(jnp.asarray(k, jnp.int32)),
         eps=state.eps.at[slot].set(jnp.asarray(eps, jnp.float32)),
         delta=state.delta.at[slot].set(jnp.asarray(delta, jnp.float32)),
+        gap=state.gap.at[slot].set(jnp.asarray(gap, jnp.float32)),
+        qtype=state.qtype.at[slot].set(jnp.asarray(qtype, jnp.int32)),
         occupied=state.occupied.at[slot].set(True),
     )
 
@@ -306,6 +351,8 @@ def clear_slot(state: MultiQueryState, slot: jax.Array, *, spec: MultiQuerySpec)
         active_words=active_words,
         tau=state.tau.at[slot].set(1.0),
         delta_upper=state.delta_upper.at[slot].set(0.0),
+        gap=state.gap.at[slot].set(0.0),
+        qtype=state.qtype.at[slot].set(QTYPE_TOPK),
         union_words=_or_reduce(active_words),
     )
 
@@ -350,12 +397,27 @@ def apply_stats(
     `repro.core.distributed.make_distributed_round` (tau/n arriving via
     all-gather from candidate shards) end in this function, so the two
     paths cannot drift.
+
+    Each slot's RETIREMENT RULE follows its dynamic ``qtype``: both the
+    top-k deviation assignment and the closeness margins are evaluated
+    (each is O(V_Z) per slot — negligible next to the (V_Z, V_X) tau
+    pass) and per-slot selected, so mixing query types never
+    recompiles. The select is value-exact: an all-top-k workload
+    produces bit-identical results to the pre-closeness engine.
     """
 
-    def one(tau_q, k, eps, delta, occupied):
-        d = dev.assign_deviations_dynamic(
+    def one(tau_q, k, eps, delta, gap, qtype, occupied):
+        d_top = dev.assign_deviations_dynamic(
             tau_q, n, k=k, eps=eps, delta=delta, v_x=spec.v_x,
-            criterion=spec.criterion, k_cap=spec.k_cap,
+            criterion=spec.criterion, k_cap=spec.k_cap, metric=spec.metric,
+        )
+        d_close = dev.assign_closeness(
+            tau_q, n, eps=eps, gap=gap, delta=delta, v_x=spec.v_x,
+            metric=spec.metric,
+        )
+        is_close = qtype == QTYPE_CLOSENESS
+        d = jax.tree.map(
+            lambda a, b: jnp.where(is_close, a, b), d_close, d_top
         )
         active = d.active & occupied
         return (
@@ -368,7 +430,8 @@ def apply_stats(
         )
 
     eps_i, log_delta_i, delta_upper, active, words, in_top_k = jax.vmap(one)(
-        tau, state.k, state.eps, state.delta, state.occupied
+        tau, state.k, state.eps, state.delta, state.gap, state.qtype,
+        state.occupied,
     )
     return state._replace(
         tau=tau,
@@ -389,7 +452,8 @@ def stats_step(
 ) -> MultiQueryState:
     """One statistics-engine iteration for every slot — no Python loop.
 
-    tau for ALL slots comes from ONE `ops.l1_distance_multi` call: the
+    tau for ALL slots comes from ONE `ops.distance_multi` call (the
+    spec's static metric — "l1" by default): the
     shared counts matrix is streamed once and scored against the whole
     (Q, V_X) target batch, so the statistics cost per round is
     independent of the number of query slots (the PR-2 path unrolled Q
@@ -401,8 +465,9 @@ def stats_step(
     tuned tau variant (`autotune.TauPlan`); None consults the plan
     registry at trace time.
     """
-    tau = ops.l1_distance_multi(
-        state.counts, state.q_hat, plan=plan if plan is not None else "auto"
+    tau = ops.distance_multi(
+        state.counts, state.q_hat, metric=spec.metric,
+        plan=plan if plan is not None else "auto",
     )
     tau = jnp.where(state.occupied[:, None], tau, 1.0)
     return apply_stats(state, tau, state.n, spec=spec)
@@ -531,6 +596,8 @@ class _Ticket:
     k: int
     eps: float
     delta: float
+    qtype: str  # "topk" | "closeness"
+    gap: float  # closeness promise gap; 0.0 for top-k
     admit_time: float
     admit_rounds: int
     admit_passes: int
@@ -544,7 +611,8 @@ class QueryOutcome:
     """Per-query result produced at retirement."""
 
     qid: int
-    ids: np.ndarray  # (k,) matching candidate ids, closest first
+    ids: np.ndarray  # (k,) matching ids, closest first; for a closeness
+    # query, ALL candidates labeled close (variable length, tau order)
     state: HistSimState  # single-query view snapshot at retirement
     delta_upper: float
     exact: bool  # the answer rests on a complete read of the data
@@ -567,6 +635,7 @@ class QueryOutcome:
     degraded: bool = False
     eps_effective: float = float("nan")
     blocks_quarantined: int = 0
+    qtype: str = "topk"  # "topk" | "closeness"
 
 
 def _theorem1_eps_np(n: float, delta_i: float, v_x: int) -> float:
@@ -578,6 +647,21 @@ def _theorem1_eps_np(n: float, delta_i: float, v_x: int) -> float:
     """
     n = max(float(n), 1.0)
     return math.sqrt((2.0 / n) * (v_x * math.log(2.0) - math.log(delta_i)))
+
+
+def _metric_eps_np(n: float, delta_i: float, v_x: int, metric: str) -> float:
+    """`_theorem1_eps_np` pushed through the metric's budget inverse —
+    the host-side scalar mirror of `bounds.metric_epsilon` (same
+    derivations). The l1 branch is the identity, keeping the default
+    telemetry path byte-identical."""
+    eps1 = _theorem1_eps_np(n, delta_i, v_x)
+    if metric == "l1":
+        return eps1
+    if metric == "chi2":
+        return 3.0 * eps1
+    if metric == "hellinger":
+        return 2.0 * math.sqrt(eps1)
+    raise ValueError(f"unknown metric {metric!r}")
 
 
 class _BatchAcc:
@@ -698,7 +782,9 @@ class SharedCountsScheduler:
         self.plans = (
             plans
             if plans is not None
-            else autotune.resolve_plans(spec.v_z, spec.v_x, spec.max_queries)
+            else autotune.resolve_plans(
+                spec.v_z, spec.v_x, spec.max_queries, metric=spec.metric
+            )
         )
         nb = source.num_blocks
         self.window = max(1, min(window, nb))
@@ -988,7 +1074,8 @@ class SharedCountsScheduler:
                     # eps(n) at the per-candidate failure budget
                     # delta/|V_Z| — the AnyActive threshold the stats
                     # tail compares against.
-                    eps_n=_theorem1_eps_np(n_min, t.delta / v_z, v_x),
+                    eps_n=_metric_eps_np(
+                        n_min, t.delta / v_z, v_x, self.spec.metric),
                     delta_upper=d_up,
                     confidence=max(0.0, 1.0 - d_up),
                 ))
@@ -1091,21 +1178,48 @@ class SharedCountsScheduler:
     def num_live(self) -> int:
         return len(self.tickets)
 
-    def admit(self, target: np.ndarray, *, k: int, eps: float, delta: float) -> int:
+    def admit(
+        self,
+        target: np.ndarray,
+        *,
+        k: int,
+        eps: float,
+        delta: float,
+        qtype: str = "topk",
+        gap: float = 0.0,
+    ) -> int:
         """Place a query into a free slot; returns its qid.
 
         The immediate `stats_step` makes the query see the accumulated
         shared counts — with its full shared ``n_i`` — before the next
         window is marked, so a late query never starts from zero.
         Admission is a poll boundary (the ticket snapshots counters).
+
+        ``qtype="closeness"`` admits a tolerant closeness test sharing
+        the same counts matrix: every candidate within ``eps`` of the
+        target (in the spec's metric) is labeled close, every one beyond
+        ``eps + gap`` far, w.p. >= 1 - delta; inside the gap either
+        label is allowed. ``k`` is ignored for closeness slots (pass 1).
+        Mixing types triggers no recompilation — the type is a traced
+        per-slot field.
         """
         free = self.free_slots
         if not free:
             raise RuntimeError("no free query slot; retire a query first")
-        if not (0 < k <= self.spec.v_z):
-            raise ValueError(f"need 0 < k <= V_Z, got k={k}")
-        if self.spec.k_cap is not None and k > self.spec.k_cap:
-            raise ValueError(f"k={k} exceeds spec.k_cap={self.spec.k_cap}")
+        if qtype not in ("topk", "closeness"):
+            raise ValueError(f"qtype must be 'topk' or 'closeness', got {qtype!r}")
+        if qtype == "closeness":
+            if not gap > 0.0:
+                raise ValueError(f"closeness needs gap > 0, got gap={gap}")
+            if not eps >= 0.0:
+                raise ValueError(f"closeness needs eps >= 0, got eps={eps}")
+        else:
+            if gap != 0.0:
+                raise ValueError("gap is only meaningful for qtype='closeness'")
+            if not (0 < k <= self.spec.v_z):
+                raise ValueError(f"need 0 < k <= V_Z, got k={k}")
+            if self.spec.k_cap is not None and k > self.spec.k_cap:
+                raise ValueError(f"k={k} exceeds spec.k_cap={self.spec.k_cap}")
         slot = free[0]
         target = np.asarray(target, np.float64).ravel()
         if target.shape != (self.spec.v_x,):
@@ -1119,6 +1233,11 @@ class SharedCountsScheduler:
             jnp.asarray(eps, jnp.float32),
             jnp.asarray(delta, jnp.float32),
             spec=self.spec,
+            qtype=jnp.asarray(
+                QTYPE_CLOSENESS if qtype == "closeness" else QTYPE_TOPK,
+                jnp.int32,
+            ),
+            gap=jnp.asarray(gap, jnp.float32),
         )
         self.state = stats_step(self.state, spec=self.spec, plan=self.plans.tau)
         self._sync()  # fresh counters for the ticket + fresh delta_upper
@@ -1130,6 +1249,8 @@ class SharedCountsScheduler:
             k=int(k),
             eps=float(eps),
             delta=float(delta),
+            qtype=qtype,
+            gap=float(gap),
             admit_time=time.perf_counter(),
             admit_rounds=self.rounds,
             admit_passes=self.passes,
@@ -1141,7 +1262,8 @@ class SharedCountsScheduler:
             self._c_admitted.inc(1)
             self.telemetry.tracer.emit(
                 "query_admit", qid=qid, slot=slot, k=int(k), eps=float(eps),
-                delta=float(delta), round=self.rounds, tuples=self.tuples_read,
+                delta=float(delta), qtype=qtype, gap=float(gap),
+                round=self.rounds, tuples=self.tuples_read,
             )
             # The ticket didn't exist yet when admission's _sync polled
             # (its buffer entry's snapshot predates the insert) — stage
@@ -1172,7 +1294,17 @@ class SharedCountsScheduler:
         else:
             exact = exact or bool(self.read_mask.all())
         view = slot_state(self.state, slot)
-        ids = np.asarray(histsim.top_k_ids(view, t.k))
+        if t.qtype == "closeness":
+            # The close set, nearest first — in_top_k holds the close
+            # labels for closeness slots (`dev.assign_closeness`); its
+            # size is data-dependent, not k.
+            close = np.flatnonzero(np.asarray(view.in_top_k))
+            order = np.argsort(
+                np.asarray(view.tau)[close], kind="stable"
+            )
+            ids = close[order]
+        else:
+            ids = np.asarray(histsim.top_k_ids(view, t.k))
         # A query admitted and retired inside one running pass still
         # saw sampling activity — count that partial pass; a query that
         # retired before any window ran while it was live saw none.
@@ -1195,6 +1327,7 @@ class SharedCountsScheduler:
             degraded=degraded,
             eps_effective=t.eps + (self.eps_inflation if degraded else 0.0),
             blocks_quarantined=self.blocks_quarantined,
+            qtype=t.qtype,
         )
         self.state = clear_slot(self.state, jnp.asarray(slot, jnp.int32), spec=self.spec)
         self.outcomes[t.qid] = outcome

@@ -80,11 +80,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ref
+from repro.kernels import metrics, ref
 from repro.kernels.histogram import histogram_pallas, histogram_with_rowsums_pallas
-from repro.kernels.l1_distance import _MAX_VX as _UNROLLED_MAX_VX
-from repro.kernels.l1_distance import l1_distance_pallas
-from repro.kernels.l1_distance_multi import l1_distance_multi_pallas
+
+# Single-block V_X bound of the Q=1 kernel the "unrolled" variant stacks.
+_UNROLLED_MAX_VX = metrics.MAX_SINGLE_BLOCK_VX
 
 __all__ = [
     "DEFAULT_INGEST",
@@ -110,7 +110,10 @@ __all__ = [
     "ingest_candidates",
 ]
 
-PLAN_SCHEMA = 1
+# Schema 2: tau keys carry a ``metric`` field (the pluggable-metric
+# layer tunes each distance separately — variant tradeoffs shift with
+# the score's VPU cost). Schema-1 files warn-and-default on load.
+PLAN_SCHEMA = 2
 TAU_VARIANTS = ("batched", "unrolled", "xla")
 # uint16 overflow gate for the low-precision counts path. 2**16 - 1;
 # every integer-valued f32 at or below this round-trips exactly.
@@ -176,17 +179,19 @@ DEFAULT_TAU = TauPlan()
 DEFAULT_INGEST = IngestPlan()
 
 
-def tau_key(v_z: int, v_x: int, q: int, dtype: str = "float32") -> str:
-    return f"vz={v_z},vx={v_x},q={q},dtype={dtype}"
+def tau_key(v_z: int, v_x: int, q: int, dtype: str = "float32", metric: str = "l1") -> str:
+    return f"vz={v_z},vx={v_x},q={q},dtype={dtype},metric={metric}"
 
 
 def ingest_key(v_z: int, v_x: int, dtype: str = "float32") -> str:
     return f"vz={v_z},vx={v_x},dtype={dtype}"
 
 
-def tau_bytes(v_z: int, v_x: int, q: int, plan: TauPlan) -> int:
+def tau_bytes(v_z: int, v_x: int, q: int, plan: TauPlan, metric: str = "l1") -> int:
     """Analytic HBM bytes per tau round under ``plan`` (the roofline
-    model `benchmarks/stats_throughput.py` reports).
+    model `benchmarks/stats_throughput.py` reports), via the metric's
+    registry ``bytes_model`` — every shipped metric streams identically
+    (they differ in VPU flops only), so the model is shared.
 
     counts traffic: 1 pass (batched single-sweep / xla), 2 passes
     (batched forced- or auto- two-sweep), Q passes (unrolled); targets +
@@ -200,8 +205,9 @@ def tau_bytes(v_z: int, v_x: int, q: int, plan: TauPlan) -> int:
         passes = 1
     else:
         passes = 2 if plan.sweeps == 2 or (plan.sweeps == 0 and vx_pad > plan.x_tile) else 1
-    counts_bytes = passes * v_z * v_x * (2 if plan.lowprec else 4)
-    return counts_bytes + q * (v_x + v_z) * 4
+    return metrics.coerce_metric(metric).bytes_model(
+        v_z, v_x, q, passes=passes, counts_itemsize=(2 if plan.lowprec else 4)
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -210,28 +216,32 @@ def tau_bytes(v_z: int, v_x: int, q: int, plan: TauPlan) -> int:
 # ---------------------------------------------------------------------------
 
 
-def _tau_inner(plan: TauPlan, *, engine: str, interpret: bool) -> Callable:
+def _tau_inner(plan: TauPlan, *, engine: str, interpret: bool,
+               metric: str = "l1") -> Callable:
     """(counts, q_hat) -> (Q, V_Z) tau for one variant, full precision.
 
     Every branch normalizes in f32 with the exact elementwise sequence
-    of `ref.l1_distance_ref` (row sum -> max(row, 1) divide -> |diff| ->
-    lane reduce), so on integer-valued counts all variants are
-    bit-identical (tests/test_autotune.py sweeps the space).
+    of `metrics.distance_ref` (row sum -> max(row, 1) divide -> score ->
+    lane reduce), so on integer-valued counts all variants of one metric
+    are bit-identical (tests/test_autotune.py and tests/test_metrics.py
+    sweep the space).
     """
     if plan.variant == "xla":
-        return ref.l1_distance_multi_xla
+        return partial(metrics.distance_multi_xla, metric=metric)
     if engine == "pallas":
         if plan.variant == "unrolled":
             def unrolled_pallas(counts, q_hat):
                 return jnp.stack([
-                    l1_distance_pallas(
-                        counts, q_hat[i], z_tile=plan.z_tile, interpret=interpret
+                    metrics.distance_pallas(
+                        counts, q_hat[i], metric=metric,
+                        z_tile=plan.z_tile, interpret=interpret,
                     )
                     for i in range(q_hat.shape[0])
                 ])
             return unrolled_pallas
         return partial(
-            l1_distance_multi_pallas,
+            metrics.distance_multi_pallas,
+            metric=metric,
             z_tile=plan.z_tile,
             x_tile=plan.x_tile,
             sweeps=plan.sweeps,
@@ -239,11 +249,12 @@ def _tau_inner(plan: TauPlan, *, engine: str, interpret: bool) -> Callable:
         )
     if plan.variant == "unrolled":
         def unrolled_ref(counts, q_hat):
-            return jnp.stack(
-                [ref.l1_distance_ref(counts, q_hat[i]) for i in range(q_hat.shape[0])]
-            )
+            return jnp.stack([
+                metrics.distance_ref(counts, q_hat[i], metric=metric)
+                for i in range(q_hat.shape[0])
+            ])
         return unrolled_ref
-    return ref.l1_distance_multi_ref
+    return partial(metrics.distance_multi_ref, metric=metric)
 
 
 def _tau_usable(plan: TauPlan, *, engine: str, v_x: int) -> bool:
@@ -263,12 +274,16 @@ def run_tau(
     plan: TauPlan,
     engine: str,
     interpret: bool = False,
+    metric: str = "l1",
 ) -> jax.Array:
-    """Dispatch one (Q, V_Z) tau computation per ``plan``.
+    """Dispatch one (Q, V_Z) tau computation per ``plan`` and ``metric``.
 
     An unusable plan (e.g. a TPU-tuned unrolled plan hitting a
     lane-tiled V_X) falls back to `DEFAULT_TAU` with a warning — plans
-    steer performance, never correctness or availability.
+    steer performance, never correctness or availability. The metric is
+    orthogonal to the plan: every variant runs every registry metric
+    (the lowprec uint16 counts gate below is metric-agnostic too — all
+    kernels upcast to f32 before normalizing).
     """
     plan.validate()
     if not _tau_usable(plan, engine=engine, v_x=counts.shape[1]):
@@ -277,7 +292,7 @@ def run_tau(
             f"V_X={counts.shape[1]}; falling back to defaults"
         )
         plan = DEFAULT_TAU
-    inner = _tau_inner(plan, engine=engine, interpret=interpret)
+    inner = _tau_inner(plan, engine=engine, interpret=interpret, metric=metric)
     if not plan.lowprec:
         return inner(counts, q_hat)
     # uint16 overflow gate: in-range integer-valued f32 counts stream as
@@ -433,8 +448,9 @@ class PlanRegistry:
 
     # -- lookup ------------------------------------------------------------
 
-    def tau_plan(self, v_z: int, v_x: int, q: int, dtype: str = "float32") -> TauPlan:
-        return self.tau.get(tau_key(v_z, v_x, q, dtype), DEFAULT_TAU)
+    def tau_plan(self, v_z: int, v_x: int, q: int, dtype: str = "float32",
+                 metric: str = "l1") -> TauPlan:
+        return self.tau.get(tau_key(v_z, v_x, q, dtype, metric), DEFAULT_TAU)
 
     def ingest_plan(self, v_z: int, v_x: int, dtype: str = "float32") -> IngestPlan:
         return self.ingest.get(ingest_key(v_z, v_x, dtype), DEFAULT_INGEST)
@@ -475,20 +491,21 @@ def reload(path: Optional[pathlib.Path] = None, backend: Optional[str] = None) -
     return _registry
 
 
-def get_tau_plan(v_z: int, v_x: int, q: int, dtype: str = "float32") -> TauPlan:
-    return registry().tau_plan(v_z, v_x, q, dtype)
+def get_tau_plan(v_z: int, v_x: int, q: int, dtype: str = "float32",
+                 metric: str = "l1") -> TauPlan:
+    return registry().tau_plan(v_z, v_x, q, dtype, metric)
 
 
 def get_ingest_plan(v_z: int, v_x: int, dtype: str = "float32") -> IngestPlan:
     return registry().ingest_plan(v_z, v_x, dtype)
 
 
-def coerce_tau_plan(plan, v_z: int, v_x: int, q: int) -> TauPlan:
+def coerce_tau_plan(plan, v_z: int, v_x: int, q: int, metric: str = "l1") -> TauPlan:
     """Resolve an ops-level ``plan`` argument: "auto" consults the
     registry (at trace time — shapes are concrete there), None/"default"
     pins the pre-autotune dispatch, a `TauPlan` passes through."""
     if plan == "auto":
-        return get_tau_plan(v_z, v_x, q)
+        return get_tau_plan(v_z, v_x, q, metric=metric)
     if plan is None or plan == "default":
         return DEFAULT_TAU
     if isinstance(plan, TauPlan):
@@ -513,18 +530,21 @@ def resolve_plans(
     *,
     n_samples: Optional[int] = None,
     dtype: str = "float32",
+    metric: str = "l1",
 ) -> PlanPair:
     """The eager (host-side) plan resolution the round-builders use at
     construction: registry lookup, with ``FASTMATCH_AUTOTUNE=1``
     additionally tuning any missing key on the spot and persisting the
     result. Never called at trace time, so tune-on-miss may freely run
-    device code."""
+    device code. Tau keys are per-metric (the score shifts the
+    variant tradeoff); the ingest plan is metric-independent (counts
+    are shared by every metric and query type)."""
     reg = registry()
-    tkey, ikey = tau_key(v_z, v_x, q, dtype), ingest_key(v_z, v_x, dtype)
+    tkey, ikey = tau_key(v_z, v_x, q, dtype, metric), ingest_key(v_z, v_x, dtype)
     if os.environ.get("FASTMATCH_AUTOTUNE") == "1":
         dirty = False
         if tkey not in reg.tau:
-            reg.tau[tkey], _ = tune_tau(v_z, v_x, q)
+            reg.tau[tkey], _ = tune_tau(v_z, v_x, q, metric=metric)
             dirty = True
         if ikey not in reg.ingest:
             reg.ingest[ikey], _ = tune_ingest(
@@ -613,12 +633,17 @@ def tune_tau(
     reps: int = 15,
     seed: int = 0,
     margin: float = DEFAULT_MARGIN,
+    metric: str = "l1",
 ) -> Tuple[TauPlan, Dict[TauPlan, float]]:
-    """Measure every tau candidate for one key; return (winner, timings).
+    """Measure every tau candidate for one (key, metric); return
+    (winner, timings).
 
     The comparator biased toward under ``margin`` is the "unrolled"
     full-precision plan — the PR-2 reference path every speedup in
-    `BENCH_stats.json` is quoted against.
+    `BENCH_stats.json` is quoted against. The candidate space is
+    metric-independent; the measurement runs the requested metric's
+    score, so e.g. hellinger (two sqrts per lane) may tune differently
+    from l1 on the same shape.
     """
     engine = engine or ("pallas" if jax.default_backend() == "tpu" else "ref")
     rng = np.random.default_rng(seed)
@@ -628,7 +653,7 @@ def tune_tau(
     )
     timed: Dict[TauPlan, float] = {}
     for cand in tau_candidates(engine, v_z, v_x, q):
-        fn = jax.jit(partial(run_tau, plan=cand, engine=engine))
+        fn = jax.jit(partial(run_tau, plan=cand, engine=engine, metric=metric))
         timed[cand] = _measure(fn, (counts, q_hat), reps=reps)
     comparator = TauPlan(variant="unrolled")
     return _pick(timed, comparator, margin=margin), timed

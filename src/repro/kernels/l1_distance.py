@@ -1,40 +1,28 @@
-"""Pallas TPU kernel: row-normalized l1 distance to a target distribution.
+"""Single-query l1 distance: thin alias over the metric registry at Q=1.
 
-Computes, for every candidate row i of a (V_Z, V_X) counts matrix,
-
-    tau_i = || counts_i / max(sum_x counts_i, 1)  -  q_hat ||_1
-
-in a single VMEM pass: the row block (Z_TILE x V_X) is loaded once, the
-row sum, normalization, absolute difference and lane reduction are all
-fused. This is the statistics engine's hot loop (paper Sec 3: "each
-iteration ... O(|V_Z| * |V_X|)"); fusing it keeps the statistics step far
-cheaper than an ingest round, which is what lets FastMatch run the
-termination test "frequently enough to ensure timely termination".
+Historically this module held its own Pallas kernel (the statistics
+engine's original hot loop, paper Sec 3). The metric layer
+(`repro.kernels.metrics`) now owns ONE score-generic kernel family and
+the l1 instance of its Q=1 form emits the exact op sequence of the old
+kernel (load tile -> row sum -> max(row, 1) divide -> |diff| -> lane
+reduce), so this alias is bit-identical to the kernel it replaced.
+Kept for its import surface (`l1_distance_pallas`, `_MAX_VX`) — the
+autotuner's "unrolled" variant and older tests import it directly.
 
 Rows with zero mass return ||q_hat||_1 (= 1), matching ref.py.
 """
 
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from repro.kernels import metrics
 
 __all__ = ["l1_distance_pallas"]
 
 _Z_TILE = 256
 # Single-block V_X bound: (Z_TILE x V_X) f32 must fit VMEM with headroom.
-_MAX_VX = 4096
-
-
-def _l1_kernel(counts_ref, q_ref, out_ref):
-    counts = counts_ref[...].astype(jnp.float32)  # (Z_TILE, V_X)
-    q = q_ref[...].astype(jnp.float32)  # (1, V_X)
-    row = jnp.sum(counts, axis=1, keepdims=True)
-    r_hat = counts / jnp.maximum(row, 1.0)
-    out_ref[...] = jnp.sum(jnp.abs(r_hat - q), axis=1)
+_MAX_VX = metrics.MAX_SINGLE_BLOCK_VX
 
 
 def l1_distance_pallas(
@@ -49,27 +37,6 @@ def l1_distance_pallas(
     V_X and V_Z are padded internally; q_hat padding is 0 so padded lanes
     contribute |0 - 0| = 0.
     """
-    v_z, v_x = counts.shape
-    if v_x > _MAX_VX:
-        raise ValueError(f"V_X={v_x} exceeds single-block bound {_MAX_VX}")
-
-    z_tile = min(z_tile, v_z)
-    vz_pad = -(-v_z // z_tile) * z_tile
-    vx_pad = max(128, -(-v_x // 128) * 128)
-    if (vz_pad, vx_pad) != (v_z, v_x):
-        counts = jnp.pad(counts, ((0, vz_pad - v_z), (0, vx_pad - v_x)))
-        q_hat = jnp.pad(q_hat, (0, vx_pad - v_x))
-    q2d = q_hat.reshape(1, vx_pad)
-
-    out = pl.pallas_call(
-        functools.partial(_l1_kernel),
-        grid=(vz_pad // z_tile,),
-        in_specs=[
-            pl.BlockSpec((z_tile, vx_pad), lambda zb: (zb, 0)),
-            pl.BlockSpec((1, vx_pad), lambda zb: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((z_tile,), lambda zb: (zb,)),
-        out_shape=jax.ShapeDtypeStruct((vz_pad,), jnp.float32),
-        interpret=interpret,
-    )(counts, q2d)
-    return out[:v_z]
+    return metrics.distance_pallas(
+        counts, q_hat, metric="l1", z_tile=z_tile, interpret=interpret
+    )

@@ -1,160 +1,45 @@
-"""Pallas TPU kernel: Q-batched row-normalized l1 distances (one HBM pass).
+"""Q-batched l1 distances: thin alias over the metric registry.
 
-Computes, for every query slot q and every candidate row i of a shared
-(V_Z, V_X) counts matrix,
-
-    tau[q, i] = || counts_i / max(sum_x counts_i, 1)  -  q_hat_q ||_1
-
-The multi-query serving loop used to unroll `l1_distance_pallas` once
-per query slot, re-streaming the same counts matrix from HBM Q times
-per statistics iteration. Here each (Z_TILE, V_X) counts tile is loaded
-into VMEM ONCE, row-normalized once, and scored against the whole
-(Q, V_X) target matrix (VMEM-resident) before the next tile is fetched:
-HBM traffic drops from Q * V_Z * V_X to V_Z * V_X + Q * V_X, i.e. the
-statistics engine's cost per round is independent of the number of live
-queries (the paper's O(|V_Z| * |V_X|) per iteration, not Q times it).
-
-Two layouts, chosen by the padded V_X:
-
-  * single-sweep  — V_X fits one VMEM block (<= `_X_TILE` lanes, the
-    old `_MAX_VX` bound): grid (z_tiles,), row sums computed in-block,
-    exactly one HBM read of counts.
-  * lane-tiled    — V_X > `_X_TILE`: grid (z_tiles, 2, x_tiles). The
-    row sum needs the full row before ANY lane tile can be normalized,
-    so each z tile makes two sweeps over its x tiles: phase 0
-    accumulates row sums into a VMEM scratch, phase 1 accumulates the
-    per-query |r_hat - q| partials into the (Q, Z_TILE) output block.
-    Counts are read twice — still independent of Q. This is what lifts
-    the single-query kernel's `_MAX_VX = 4096` rejection.
-
-Rows with zero mass return ||q_hat_q||_1 (= 1), matching ref.py.
-Q is a static shape: the per-query scoring loop is unrolled inside the
-kernel, so the counts tile in VMEM is reused Q times per load.
+The Q-batched one-HBM-pass tile structure this module introduced (each
+(Z_TILE, V_X) counts tile loaded into VMEM once, row-normalized once,
+scored against the whole (Q, V_X) target matrix; single-sweep vs
+two-sweep lane-tiled layouts) now lives score-generic in
+`repro.kernels.metrics.distance_multi_pallas` — the l1 instance emits
+the exact same ops as the kernel that used to live here, so this alias
+is bit-identical to it. Kept for its import surface
+(`l1_distance_multi_pallas`), used by the autotuner and kernel tests.
 """
 
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import metrics
 
 __all__ = ["l1_distance_multi_pallas"]
 
-_Z_TILE = 256
-# Lane-tile width: one (Z_TILE x X_TILE) f32 block must fit VMEM with
-# headroom (256 x 4096 x 4B = 4 MiB). V_X beyond this is lane-tiled.
-_X_TILE = 4096
-
-
-def _l1_multi_kernel(counts_ref, q_ref, out_ref, *, num_q: int):
-    """Single-sweep: whole (padded) V_X in one block."""
-    counts = counts_ref[...].astype(jnp.float32)  # (Z_TILE, V_X)
-    row = jnp.sum(counts, axis=1, keepdims=True)
-    r_hat = counts / jnp.maximum(row, 1.0)
-    q = q_ref[...].astype(jnp.float32)  # (Q, V_X)
-    for i in range(num_q):  # unrolled: counts tile stays VMEM-resident
-        out_ref[i, :] = jnp.sum(jnp.abs(r_hat - q[i][None, :]), axis=1)
-
-
-def _l1_multi_tiled_kernel(counts_ref, q_ref, out_ref, row_ref, *, num_q: int):
-    """Lane-tiled: phase 0 row sums, phase 1 per-query tau partials."""
-    phase = pl.program_id(1)
-    xb = pl.program_id(2)
-    counts = counts_ref[...].astype(jnp.float32)  # (Z_TILE, X_TILE)
-
-    @pl.when((phase == 0) & (xb == 0))
-    def _init_row():
-        row_ref[...] = jnp.zeros_like(row_ref)
-
-    @pl.when(phase == 0)
-    def _accum_row():
-        row_ref[...] += jnp.sum(counts, axis=1, keepdims=True)
-
-    @pl.when((phase == 1) & (xb == 0))
-    def _init_out():
-        out_ref[...] = jnp.zeros_like(out_ref)
-
-    @pl.when(phase == 1)
-    def _accum_tau():
-        r_hat = counts / jnp.maximum(row_ref[:, 0:1], 1.0)
-        q = q_ref[...].astype(jnp.float32)  # (Q, X_TILE)
-        for i in range(num_q):
-            out_ref[i, :] += jnp.sum(jnp.abs(r_hat - q[i][None, :]), axis=1)
+# Re-exported tile constants (benchmarks import the lane bound).
+_Z_TILE = metrics._Z_TILE
+_X_TILE = metrics._X_TILE
 
 
 def l1_distance_multi_pallas(
     counts: jax.Array,
     q_hat: jax.Array,
     *,
-    z_tile: int = _Z_TILE,
-    x_tile: int = _X_TILE,
+    z_tile: int = 256,
+    x_tile: int = 4096,
     sweeps: int = 0,
     interpret: bool = False,
 ) -> jax.Array:
-    """(Q, V_Z) float32 distances tau[q, i] for a (Q, V_X) target batch.
-
-    V_X and V_Z are padded internally; q_hat padding is 0 so padded
-    lanes contribute |0 - 0| = 0. Any V_X is accepted (lane-tiled past
-    ``x_tile``); Q must be the leading q_hat dimension (static).
-
-    ``sweeps`` selects the layout (an autotuner knob — both layouts are
-    bit-identical): 0 picks by padded V_X as described above, 1 forces
-    single-sweep (raises if V_X does not fit one ``x_tile`` block), 2
-    forces the two-sweep lane-tiled form even when V_X would fit —
-    smaller working set per grid step, counts read twice.
-    """
-    v_z, v_x = counts.shape
-    num_q, v_xq = q_hat.shape
-    if v_xq != v_x:
-        raise ValueError(f"q_hat V_X={v_xq} does not match counts V_X={v_x}")
-    if x_tile % 128 != 0:
-        raise ValueError(f"x_tile must be a lane multiple of 128, got {x_tile}")
-    if sweeps not in (0, 1, 2):
-        raise ValueError(f"sweeps must be 0 (auto), 1 or 2, got {sweeps}")
-
-    z_tile = min(z_tile, v_z)
-    vz_pad = -(-v_z // z_tile) * z_tile
-    vx_pad = max(128, -(-v_x // 128) * 128)
-    if sweeps == 1 and vx_pad > x_tile:
-        raise ValueError(
-            f"sweeps=1 needs padded V_X ({vx_pad}) <= x_tile ({x_tile})"
-        )
-    if vx_pad <= x_tile and sweeps != 2:
-        x_tile, tiled = vx_pad, False
-    else:
-        x_tile = min(x_tile, vx_pad)  # forced two-sweep on a small V_X
-        vx_pad, tiled = -(-v_x // x_tile) * x_tile, True
-    if (vz_pad, vx_pad) != (v_z, v_x):
-        counts = jnp.pad(counts, ((0, vz_pad - v_z), (0, vx_pad - v_x)))
-        q_hat = jnp.pad(q_hat, ((0, 0), (0, vx_pad - v_x)))
-
-    out_shape = jax.ShapeDtypeStruct((num_q, vz_pad), jnp.float32)
-    if not tiled:
-        out = pl.pallas_call(
-            functools.partial(_l1_multi_kernel, num_q=num_q),
-            grid=(vz_pad // z_tile,),
-            in_specs=[
-                pl.BlockSpec((z_tile, vx_pad), lambda zb: (zb, 0)),
-                pl.BlockSpec((num_q, vx_pad), lambda zb: (0, 0)),
-            ],
-            out_specs=pl.BlockSpec((num_q, z_tile), lambda zb: (0, zb)),
-            out_shape=out_shape,
-            interpret=interpret,
-        )(counts, q_hat)
-    else:
-        out = pl.pallas_call(
-            functools.partial(_l1_multi_tiled_kernel, num_q=num_q),
-            grid=(vz_pad // z_tile, 2, vx_pad // x_tile),
-            in_specs=[
-                pl.BlockSpec((z_tile, x_tile), lambda zb, ph, xb: (zb, xb)),
-                pl.BlockSpec((num_q, x_tile), lambda zb, ph, xb: (0, xb)),
-            ],
-            out_specs=pl.BlockSpec((num_q, z_tile), lambda zb, ph, xb: (0, zb)),
-            out_shape=out_shape,
-            scratch_shapes=[pltpu.VMEM((z_tile, 128), jnp.float32)],
-            interpret=interpret,
-        )(counts, q_hat)
-    return out[:, :v_z]
+    """(Q, V_Z) float32 l1 distances tau[q, i] for a (Q, V_X) target
+    batch; see `metrics.distance_multi_pallas` for layout and knobs."""
+    return metrics.distance_multi_pallas(
+        counts,
+        q_hat,
+        metric="l1",
+        z_tile=z_tile,
+        x_tile=x_tile,
+        sweeps=sweeps,
+        interpret=interpret,
+    )

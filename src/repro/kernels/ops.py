@@ -1,12 +1,14 @@
 """Public jit'd entry points for the kernels package.
 
-Dispatch is two-layered:
+Dispatch is three-axis — every hot-path call is the product of three
+independent, jit-static choices:
 
 1. **Engine** (the ``impl`` argument): which code family runs.
-   ``"auto"`` picks Pallas on TPU and the pure-jnp ref.py oracles on
-   CPU (interpret-mode Pallas is far slower than XLA:CPU for the same
-   math). Tests force ``impl="pallas"`` with ``interpret=True`` to
-   validate the kernels themselves against the oracles.
+   ``"auto"`` picks Pallas on TPU and the pure-jnp `metrics`/`ref`
+   oracles on CPU (interpret-mode Pallas is far slower than XLA:CPU for
+   the same math). Tests force ``impl="pallas"`` with
+   ``interpret=True`` to validate the kernels themselves against the
+   oracles.
 
 2. **Plan** (the ``plan`` argument on the two hot-path entry points):
    WHICH measured-fastest variant of that engine runs, resolved from
@@ -20,22 +22,35 @@ Dispatch is two-layered:
    variant (the round-builders thread a resolved `PlanPair` through
    statically), or ``plan="default"`` to ignore the registry.
 
-Plan-driven entry points (variants per engine; every variant is
-bit-identical on integer-valued counts — see tests/test_autotune.py):
+3. **Metric** (the ``metric`` argument on `distance_multi`): WHAT the
+   per-round computation scores against the shared counts matrix — an
+   elementwise-lane distance from the `repro.kernels.metrics` registry
+   ("l1" | "chi2" | "hellinger"). The metric is a plain string, so it
+   is hashable and jit-static exactly like ``plan``; it is threaded the
+   same way (MultiQuerySpec -> fused_round / make_distributed_round /
+   make_pump_round -> this module). Metric and plan compose freely —
+   every tuned variant runs every metric — and autotune plan keys are
+   per-metric, because the score changes the VPU cost that decides
+   which variant wins. The ``metric="l1"`` default reproduces the
+   pre-metric-layer l1 ops bit for bit.
+
+Plan-driven entry points (variants per engine; every variant of one
+metric is bit-identical on integer-valued counts — see
+tests/test_autotune.py and tests/test_metrics.py):
 
   ======================  ==============================================
   op                      plan knobs
   ======================  ==============================================
-  l1_distance_multi       variant: "batched" (one counts pass scores all
-                          Q targets — `l1_distance_multi_pallas` /
-                          `l1_distance_multi_ref`), "unrolled" (Q
-                          single-query passes — `l1_distance_pallas` /
-                          `l1_distance_ref` stacked), "xla" (fused 3D
-                          broadcast, `l1_distance_multi_xla`);
+  distance_multi          variant: "batched" (one counts pass scores all
+                          Q targets — `metrics.distance_multi_pallas` /
+                          `metrics.distance_multi_ref`), "unrolled" (Q
+                          single-query passes stacked), "xla" (fused 3D
+                          broadcast, `metrics.distance_multi_xla`);
                           z_tile / x_tile / sweeps (Pallas tiling and
                           single- vs two-sweep V_X phase); lowprec
                           (uint16 counts traffic behind a runtime
-                          overflow gate, exact by construction).
+                          overflow gate, exact by construction and
+                          metric-agnostic — kernels upcast per tile).
   histogram_with_rowsums  fused: one pass with rows reduced from the
                           VMEM-resident counts block
                           (`histogram_with_rowsums_pallas` /
@@ -45,16 +60,20 @@ bit-identical on integer-valued counts — see tests/test_autotune.py):
                           ``impl="matmul"`` (chunked one-hot
                           contraction) bypasses the plan — it is an
                           explicit engine request, not a tuned variant.
+                          No metric axis: the counts matrix is shared
+                          by every metric and query type.
   ======================  ==============================================
 
 Fixed-dispatch entry points (no plan — one variant per engine):
 `histogram` (histogram_pallas / histogram_ref / "matmul"),
-`l1_distance` (l1_distance_pallas, V_X <= 4096 / l1_distance_ref),
-`anyactive` (anyactive_pallas / anyactive_ref).
+`l1_distance` (Q=1 l1 — `l1_distance_pallas`, V_X <= 4096 /
+`ref.l1_distance_ref`), `anyactive` (anyactive_pallas / anyactive_ref).
+`l1_distance_multi` is the l1 pin of `distance_multi`, kept for its
+import surface.
 
 `l1_distance` is the Q=1 legacy entry point; every round in the engine
 (histsim / multiquery / distributed / pump) routes through
-`l1_distance_multi` and `histogram_with_rowsums`, so the plan file is
+`distance_multi` and `histogram_with_rowsums`, so the plan file is
 what the serving loop actually runs. After editing the plan file on
 disk, call `autotune.reload()` — it clears the jit caches that hold the
 previously-baked plans.
@@ -76,6 +95,7 @@ from repro.kernels.l1_distance import l1_distance_pallas
 __all__ = [
     "histogram",
     "histogram_with_rowsums",
+    "distance_multi",
     "l1_distance",
     "l1_distance_multi",
     "anyactive",
@@ -175,7 +195,37 @@ def l1_distance(
     return ref.l1_distance_ref(counts, q_hat)
 
 
-@functools.partial(jax.jit, static_argnames=("impl", "interpret", "plan"))
+@functools.partial(jax.jit, static_argnames=("metric", "impl", "interpret", "plan"))
+def distance_multi(
+    counts: jax.Array,
+    q_hat: jax.Array,
+    *,
+    metric: str = "l1",
+    impl: Impl = "auto",
+    interpret: bool = False,
+    plan: TauPlanArg = "auto",
+) -> jax.Array:
+    """(Q, V_Z) f32 batched distances for a (Q, V_X) target matrix.
+
+    ``metric`` picks WHAT is computed (registry score: "l1" | "chi2" |
+    "hellinger" — squared Hellinger); ``plan`` picks the tuned variant
+    of HOW (batched one-pass / Q-unrolled / fused-3D "xla", plus Pallas
+    tiles, sweep phase, and the uint16 low-precision counts path — see
+    the module docstring). The default plan is the batched form: HBM
+    traffic Q * V_Z * V_X -> V_Z * V_X + Q * V_X, independent of Q and
+    of the metric. Within one metric all variants are bit-identical on
+    integer-valued counts, so the plan is a pure wall-clock choice.
+    Unlike the Q=1 `l1_distance`, V_X is unbounded (lane-tiled on TPU).
+    """
+    tau_plan = autotune.coerce_tau_plan(
+        plan, counts.shape[0], counts.shape[1], q_hat.shape[0], metric
+    )
+    return autotune.run_tau(
+        counts, q_hat, plan=tau_plan, engine=_resolve(impl),
+        interpret=interpret, metric=metric,
+    )
+
+
 def l1_distance_multi(
     counts: jax.Array,
     q_hat: jax.Array,
@@ -184,21 +234,10 @@ def l1_distance_multi(
     interpret: bool = False,
     plan: TauPlanArg = "auto",
 ) -> jax.Array:
-    """(Q, V_Z) f32 batched distances for a (Q, V_X) target matrix.
-
-    ``plan`` picks the tuned variant (batched one-pass / Q-unrolled /
-    fused-3D "xla", plus Pallas tiles, sweep phase, and the uint16
-    low-precision counts path — see the module docstring). The default
-    plan is the batched form: HBM traffic Q * V_Z * V_X -> V_Z * V_X +
-    Q * V_X, independent of Q. All variants are bit-identical on
-    integer-valued counts, so the plan is a pure wall-clock choice.
-    Unlike the Q=1 `l1_distance`, V_X is unbounded (lane-tiled on TPU).
-    """
-    tau_plan = autotune.coerce_tau_plan(
-        plan, counts.shape[0], counts.shape[1], q_hat.shape[0]
-    )
-    return autotune.run_tau(
-        counts, q_hat, plan=tau_plan, engine=_resolve(impl), interpret=interpret
+    """`distance_multi` pinned to metric="l1" (the pre-metric-layer
+    entry point, bit-identical to it; kept for its import surface)."""
+    return distance_multi(
+        counts, q_hat, metric="l1", impl=impl, interpret=interpret, plan=plan
     )
 
 

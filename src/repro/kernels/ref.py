@@ -4,12 +4,19 @@ These are the semantics of record: each kernel's test sweeps shapes and
 dtypes and asserts allclose against these functions. They are also the
 production path on CPU (interpret-mode Pallas is far slower than XLA:CPU
 for the same math), selected automatically by ``ops.py``.
+
+The distance oracles are the l1 instances of the score-generic forms in
+`repro.kernels.metrics` (same module-of-record relationship the Pallas
+kernels have): the delegation adds no ops, so they remain bit-identical
+to the standalone l1 bodies they replaced.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import metrics
 
 __all__ = [
     "histogram_ref",
@@ -121,10 +128,7 @@ def l1_distance_ref(counts: jax.Array, q_hat: jax.Array) -> jax.Array:
     Returns:
       (V_Z,) float32 distances.
     """
-    counts = counts.astype(jnp.float32)
-    row = jnp.sum(counts, axis=1, keepdims=True)
-    r_hat = counts / jnp.maximum(row, 1.0)
-    return jnp.sum(jnp.abs(r_hat - q_hat[None, :].astype(jnp.float32)), axis=1)
+    return metrics.distance_ref(counts, q_hat, metric="l1")
 
 
 def l1_distance_multi_ref(counts: jax.Array, q_hat: jax.Array) -> jax.Array:
@@ -147,13 +151,7 @@ def l1_distance_multi_ref(counts: jax.Array, q_hat: jax.Array) -> jax.Array:
     Returns:
       (Q, V_Z) float32 distances.
     """
-    counts = counts.astype(jnp.float32)
-    row = jnp.sum(counts, axis=1, keepdims=True)
-    r_hat = counts / jnp.maximum(row, 1.0)
-    q = q_hat.astype(jnp.float32)
-    return jnp.stack(
-        [jnp.sum(jnp.abs(r_hat - q[i][None, :]), axis=1) for i in range(q.shape[0])]
-    )
+    return metrics.distance_multi_ref(counts, q_hat, metric="l1")
 
 
 def l1_distance_multi_xla(counts: jax.Array, q_hat: jax.Array) -> jax.Array:
@@ -176,11 +174,7 @@ def l1_distance_multi_xla(counts: jax.Array, q_hat: jax.Array) -> jax.Array:
     Returns:
       (Q, V_Z) float32 distances.
     """
-    counts = counts.astype(jnp.float32)
-    row = jnp.sum(counts, axis=1, keepdims=True)
-    r_hat = counts / jnp.maximum(row, 1.0)
-    q = q_hat.astype(jnp.float32)
-    return jnp.sum(jnp.abs(r_hat[None, :, :] - q[:, None, :]), axis=2)
+    return metrics.distance_multi_xla(counts, q_hat, metric="l1")
 
 
 def anyactive_ref(bitmap: jax.Array, active_words: jax.Array) -> jax.Array:

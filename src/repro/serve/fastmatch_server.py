@@ -4,7 +4,13 @@
 as ("identify the top-k closest histograms" for a user-specified
 target), generalized to a query population: a request queue feeding a
 fixed pool of ``max_queries`` slots (padded for stable jit shapes) over
-one `SharedCountsScheduler`. Mechanics:
+one `SharedCountsScheduler`. The server is metric-pluggable
+(``metric="l1" | "chi2" | "hellinger"`` selects the registry distance
+the shared tau pass computes) and serves TWO query types through the
+same queue and counts matrix: top-k matching (`submit`) and tolerant
+closeness testing (`submit_closeness`) — a closeness query admitted
+mid-stream next to live top-k queries shares their samples and triggers
+no recompilation. Mechanics:
 
   admission  — pending requests enter free slots at every round
                boundary, mid-stream; a newly admitted query starts from
@@ -132,6 +138,33 @@ layer; `repro.serve.supervisor.ServeSupervisor` the recovery layer):
 crash/shed cause, "" when healthy), ``queries_shed``,
 ``blocks_quarantined``, ``degraded`` and ``eps_inflation`` (the 2q
 widening every in-flight guarantee currently carries).
+
+Non-l1 metrics: what changes and what degrades
+----------------------------------------------
+
+With ``metric="chi2"`` or ``"hellinger"`` the (eps, delta) guarantee is
+stated in THAT metric, via `repro.core.bounds.metric_log_delta` — a
+composition of Theorem 1 with the metric's worst-case ℓ1 budget
+(chi²: eps/3; squared Hellinger: eps²/4; derivations in
+`core/bounds.py`). Three consequences callers should expect:
+
+  * conservatism — the budgets are uniform worst-case moduli, not
+    metric-native tail bounds, so non-l1 queries retire LATER (more
+    samples) than a specialized tester would need; Hellinger, with its
+    square-root modulus, is the most sample-hungry. The guarantee
+    itself stays valid — only efficiency degrades.
+  * eps scale — chi² taus live in [0, 2] and squared-Hellinger in
+    [0, 1], and a fixed eps costs ~(3/eps)² resp. ~(4/eps²)² times the
+    samples of the same l1 eps. Budget accordingly (the
+    `benchmarks/metrics_matrix.py` rounds-to-retire matrix quantifies
+    this); an eps chosen for l1 will usually be too tight for
+    hellinger on small datasets — such queries simply run to the exact
+    fallback (complete read) rather than returning a wrong answer.
+  * degraded-mode widening — the quarantine inflation ``2q`` is an ℓ1
+    radius; `QueryOutcome.eps_effective` adds it to a non-l1 eps
+    unconverted, so under quarantine treat non-l1 ``eps_effective`` as
+    a diagnostic, not a tight bound (the strict statement over the
+    surviving population is unaffected).
 """
 
 from __future__ import annotations
@@ -161,7 +194,8 @@ __all__ = ["MatchQuery", "MatchServer"]
 
 @dataclasses.dataclass
 class MatchQuery:
-    """One queued matching request (Problem 1 instance)."""
+    """One queued request: a top-k match (Problem 1 instance) or a
+    tolerant closeness test (qtype="closeness", k unused, gap > 0)."""
 
     rid: int
     target: np.ndarray  # (V_X,) unnormalized or normalized target histogram
@@ -169,6 +203,8 @@ class MatchQuery:
     eps: float
     delta: float
     submit_time: float
+    qtype: str = "topk"  # "topk" | "closeness"
+    gap: float = 0.0  # closeness promise gap
 
 
 class MatchServer:
@@ -198,6 +234,7 @@ class MatchServer:
         checkpoint_keep_last: int = 3,
         telemetry=None,
         kernel_plans=None,
+        metric: str = "l1",
     ):
         # k_cap: static bound on any query's k — lets the per-slot
         # deviation assignment use a (k_cap+1)-element top_k instead of
@@ -232,6 +269,11 @@ class MatchServer:
         # default) resolves from the committed per-backend plan file at
         # scheduler construction. `server.kernel_plans` exposes what
         # was resolved.
+        #
+        # metric: the registry distance every query on this server is
+        # stated in ("l1" | "chi2" | "hellinger") — static per server,
+        # like the kernel plan; see the failure-modes note above for
+        # what to expect from non-l1 bounds.
         if telemetry is True:
             telemetry = Telemetry()
         elif telemetry is False:
@@ -253,6 +295,7 @@ class MatchServer:
                 max_queries=max_queries,
                 criterion=criterion,
                 k_cap=k_cap,
+                metric=metric,
             )
             self.scheduler = DistributedPump(
                 dataset,
@@ -288,6 +331,7 @@ class MatchServer:
                 max_queries=max_queries,
                 criterion=criterion,
                 k_cap=k_cap,
+                metric=metric,
             )
             self.scheduler = SharedCountsScheduler(
                 source,
@@ -342,7 +386,7 @@ class MatchServer:
     # -- request queue -----------------------------------------------------
 
     def submit(self, target: np.ndarray, *, k: int, eps: float = 0.06, delta: float = 0.01) -> int:
-        """Queue a query; returns a request id resolved in `results`.
+        """Queue a top-k query; returns a request id resolved in `results`.
 
         Validates here, at the caller's call site — a malformed request
         must not sit in the queue and blow up mid-drain.
@@ -354,6 +398,34 @@ class MatchServer:
             raise ValueError(f"need 0 < k <= V_Z={self.spec.v_z}, got k={k}")
         if self.spec.k_cap is not None and k > self.spec.k_cap:
             raise ValueError(f"k={k} exceeds the server's k_cap={self.spec.k_cap}")
+        return self._enqueue(target, k=k, eps=eps, delta=delta)
+
+    def submit_closeness(
+        self, target: np.ndarray, *, eps: float, gap: float, delta: float = 0.01
+    ) -> int:
+        """Queue a tolerant closeness test; returns a request id.
+
+        The result's ``ids`` are ALL candidates labeled close (within
+        ``eps`` of the target in the server's metric), nearest first —
+        w.p. >= 1 - delta no candidate beyond ``eps + gap`` is among
+        them and none within ``eps`` is missing; labels inside the gap
+        are unconstrained (the promise region). Shares slots, samples,
+        and the counts matrix with top-k queries.
+        """
+        target = np.asarray(target, np.float64).ravel()
+        if target.shape != (self.spec.v_x,):
+            raise ValueError(f"target must have shape ({self.spec.v_x},), got {target.shape}")
+        if not gap > 0.0:
+            raise ValueError(f"closeness needs gap > 0, got gap={gap}")
+        if not eps >= 0.0:
+            raise ValueError(f"closeness needs eps >= 0, got eps={eps}")
+        return self._enqueue(
+            target, k=1, eps=eps, delta=delta, qtype="closeness", gap=gap
+        )
+
+    def _enqueue(
+        self, target, *, k, eps, delta, qtype: str = "topk", gap: float = 0.0
+    ) -> int:
         rid = self._next_rid
         self._next_rid += 1
         self.pending.append(
@@ -364,13 +436,15 @@ class MatchServer:
                 eps=eps,
                 delta=delta,
                 submit_time=time.perf_counter(),
+                qtype=qtype,
+                gap=gap,
             )
         )
         if self.telemetry is not None:
             self._c_submitted.inc(1)
             self.telemetry.tracer.emit(
                 "query_enqueue", rid=rid, k=k, eps=eps, delta=delta,
-                queued=len(self.pending),
+                qtype=qtype, gap=gap, queued=len(self.pending),
             )
         return rid
 
@@ -378,7 +452,10 @@ class MatchServer:
         """Fill free slots from the queue (the scheduler's on_round hook)."""
         while self.pending and self.scheduler.free_slots:
             q = self.pending.popleft()
-            qid = self.scheduler.admit(q.target, k=q.k, eps=q.eps, delta=q.delta)
+            qid = self.scheduler.admit(
+                q.target, k=q.k, eps=q.eps, delta=q.delta,
+                qtype=q.qtype, gap=q.gap,
+            )
             self._rid_of_qid[qid] = q.rid
             self._submit_time[q.rid] = q.submit_time
         self._collect()
@@ -416,6 +493,7 @@ class MatchServer:
             passes=out.passes,
             degraded=out.degraded,
             eps_effective=out.eps_effective,
+            qtype=out.qtype,
         )
 
     # -- warm-start persistence --------------------------------------------

@@ -184,6 +184,24 @@ class TestRegistryPersistence:
         assert not loaded.tau and not loaded.ingest
         assert loaded.tau_plan(64, 300, 4) == autotune.DEFAULT_TAU
 
+    def test_pre_metric_schema1_warns_and_defaults(self, tmp_path, clean_warnings):
+        # The exact committed shape BEFORE the metric axis (PR <= 8):
+        # schema 1, tau keys without a metric= field. Such files must
+        # warn once and serve defaults — old keys must never be
+        # misread as plans for the current schema.
+        path = tmp_path / "cpu.json"
+        path.write_text(json.dumps({
+            "schema": 1,
+            "backend": "cpu",
+            "tau": {"vz=256,vx=256,q=4,dtype=float32": {"variant": "pallas"}},
+            "ingest": {"vz=256,vx=256": {"fused": True}},
+        }))
+        with pytest.warns(UserWarning, match="schema"):
+            loaded = autotune.PlanRegistry.load(path=path, backend="cpu")
+        assert not loaded.tau and not loaded.ingest
+        assert loaded.tau_plan(256, 256, 4) == autotune.DEFAULT_TAU
+        assert loaded.ingest_plan(256, 256) == autotune.DEFAULT_INGEST
+
     def test_corrupt_json_warns_and_defaults(self, tmp_path, clean_warnings):
         path = tmp_path / "cpu.json"
         path.write_text("{not json")
