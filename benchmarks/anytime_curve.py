@@ -1,0 +1,215 @@
+"""Anytime serving curve: progressive answers, SLA stops, native pruning.
+
+One top-k workload is served per non-l1 registry metric under three
+bound arms on the SAME seeded stream:
+
+  conservative — bounds_mode="conservative": the uniform per-metric l1
+      budgets (chi2: eps/3, hellinger: eps^2/4) of the original metric
+      layer.
+  native       — bounds_mode="native": tau-aware Canonne-style budgets
+      (core/bounds.py `metric_native_l1_budget`). Native budgets
+      dominate the uniform ones BY CONSTRUCTION (each is a max over
+      the uniform budget and tighter tau-aware routes), so termination
+      can only come earlier — gated as ``native_no_slower_*``.
+  native+prune — native + early-reject pruning (`deviations.prune_far`):
+      candidates provably far from the split stop being marked for
+      I/O. Soundness (a pruned candidate never re-enters the best set,
+      and the final answer is unchanged vs the native arm) is gated as
+      ``prune_sound_*``; the pruned count is reported.
+
+The anytime API itself is exercised two ways:
+
+  * every arm is driven through `MatchServer.iter_results`, recording
+    the (round, tuples, delta_upper) confidence trajectory — the
+    reported ``curve_*`` arrays are the benchmark's namesake plot;
+  * one query runs under a tuples `StopPolicy` next to an unstopped
+    twin stepped to the same round; the stopped answer must be
+    bit-identical to the twin's `poll_result` at that round
+    (``stop_poll_identical``, gated exact).
+
+Set ANYTIME_BENCH_SMOKE=1 for the CI configuration (same code paths,
+smaller dataset; exits non-zero via ``ok`` if a contract fails).
+Machine-readable report: benchmarks/results/BENCH_anytime.json,
+regression-gated on the deterministic keys by check_regression.py.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks.common import env_stamp
+from benchmarks.metrics_matrix import _brute
+from repro.data.layout import block_layout
+from repro.data.synth import SynthSpec, make_dataset
+from repro.serve.fastmatch_server import MatchServer, StopPolicy
+
+SMOKE = bool(int(os.environ.get("ANYTIME_BENCH_SMOKE", "0")))
+K, DELTA, SEED = 5, 0.05, 3
+LOOKAHEAD = 16 if SMOKE else 64
+# Same comparable-radius table as metrics_matrix (chi2 taus live in
+# [0, 2], squared-Hellinger in [0, 1]).
+EPS = {"chi2": 0.15, "hellinger": 0.25}
+ARMS = ("conservative", "native", "native+prune")
+
+SPEC = SynthSpec(
+    v_z=48, v_x=16, num_tuples=120_000 if SMOKE else 600_000, k=K, n_close=6,
+    close_distance=0.03, far_distance=0.4, zipf_a=1.0, seed=SEED,
+)
+
+RESULTS = pathlib.Path(__file__).parent / "results"
+
+
+def _serve_arm(blocked, ds, metric: str, arm: str) -> dict:
+    """One query through `iter_results`; returns counters + trajectory
+    + pruning soundness evidence."""
+    srv = MatchServer(
+        blocked, max_queries=2, lookahead=LOOKAHEAD, seed=SEED, metric=metric,
+        bounds_mode="conservative" if arm == "conservative" else "native",
+        prune=arm == "native+prune",
+    )
+    rid = srv.submit(ds.target, k=K, eps=EPS[metric], delta=DELTA)
+    t0 = time.perf_counter()
+    curve = []
+    best_sets = []
+    pruned_masks = []
+    for ans in srv.iter_results(rid):
+        curve.append(
+            [ans.round, ans.tuples, round(float(ans.delta_upper), 6)]
+        )
+        if ans.status == "live":
+            best_sets.append(set(ans.ids.tolist()))
+            pruned_masks.append(srv.scheduler._pruned_host[0].copy())
+    wall = time.perf_counter() - t0
+    res = srv.results[rid]
+
+    # Pruning soundness: sticky mask, and a pruned candidate never
+    # reappears in ANY later best set (including the final answer).
+    sticky = all(
+        not (a & ~b).any() for a, b in zip(pruned_masks, pruned_masks[1:])
+    )
+    final_set = set(res.ids.tolist())
+    disjoint = all(
+        not (set(np.flatnonzero(m).tolist()) & later)
+        for i, m in enumerate(pruned_masks)
+        for later in best_sets[i:] + [final_set]
+    )
+    want = set(
+        np.argsort(_brute(ds.true_hists, ds.target, metric), kind="stable")[
+            :K
+        ].tolist()
+    )
+    return {
+        "rounds": int(res.rounds),
+        "tuples": int(res.tuples_read),
+        "exact": bool(res.exact),
+        "recall": len(final_set & want) / K,
+        "ids": sorted(final_set),
+        "pruned_count": int(pruned_masks[-1].sum()) if pruned_masks else 0,
+        "prune_sticky": bool(sticky),
+        "prune_disjoint": bool(disjoint),
+        "curve": curve,
+        "wall_s": round(wall, 4),
+    }
+
+
+def _stop_vs_poll(blocked, ds) -> dict:
+    """A tuples-SLA stop vs an unstopped twin polled at the same round:
+    the two statements must agree bit for bit."""
+    budget = 6 * LOOKAHEAD * 512  # fires mid-stream, well before exhaustion
+    kw = dict(max_queries=2, lookahead=LOOKAHEAD, seed=SEED)
+    a = MatchServer(blocked, **kw)
+    rid_a = a.submit(ds.target, k=K, eps=0.02, delta=0.01,
+                     stop=StopPolicy(tuples=budget))
+    res = a.run_until_idle()[rid_a]
+    ans_a = a.poll_result(rid_a)
+
+    b = MatchServer(blocked, **kw)
+    rid_b = b.submit(ds.target, k=K, eps=0.02, delta=0.01)
+    while b.scheduler.rounds < ans_a.round and rid_b not in b.results:
+        b.step()
+    ans_b = b.poll_result(rid_b)
+    identical = (
+        ans_a.round == ans_b.round
+        and ans_a.tuples == ans_b.tuples
+        and ans_a.ids.tobytes() == ans_b.ids.tobytes()
+        and ans_a.tau.tobytes() == ans_b.tau.tobytes()
+        and ans_a.margin.tobytes() == ans_b.margin.tobytes()
+        and ans_a.split == ans_b.split
+        and ans_a.delta_upper == ans_b.delta_upper
+        and ans_a.n_min == ans_b.n_min
+    )
+    # free the twin's slot so the process exits cleanly
+    b.run_until_idle()
+    return {
+        "stop_poll_identical": bool(identical),
+        "stop_reason": res.stop_reason,
+        "stop_round": int(ans_a.round),
+        "stop_tuples": int(res.tuples_read),
+        "stop_delta_upper": round(float(ans_a.delta_upper), 6),
+        "stopped_not_exact": bool(res.stopped and not res.exact),
+    }
+
+
+def run(rows: list) -> None:
+    ds = make_dataset(SPEC)
+    blocked = block_layout(
+        ds.z, ds.x, v_z=SPEC.v_z, v_x=SPEC.v_x, block_size=512, seed=SEED
+    )
+    report = {
+        "config": {
+            "v_z": SPEC.v_z, "v_x": SPEC.v_x, "num_tuples": SPEC.num_tuples,
+            "k": K, "delta": DELTA, "lookahead": LOOKAHEAD, "seed": SEED,
+            "smoke": SMOKE, "eps": EPS, **env_stamp(),
+        },
+    }
+    ok = True
+    for metric in EPS:
+        arms = {arm: _serve_arm(blocked, ds, metric, arm) for arm in ARMS}
+        report[metric] = arms
+        no_slower = arms["native"]["rounds"] <= arms["conservative"]["rounds"]
+        prune_sound = (
+            arms["native+prune"]["prune_sticky"]
+            and arms["native+prune"]["prune_disjoint"]
+            and arms["native+prune"]["ids"] == arms["native"]["ids"]
+        )
+        # flat keys for check_regression gates
+        report[f"native_no_slower_{metric}"] = bool(no_slower)
+        report[f"prune_sound_{metric}"] = bool(prune_sound)
+        report[f"recall_{metric}_native"] = arms["native"]["recall"]
+        report[f"rounds_{metric}_native"] = arms["native"]["rounds"]
+        report[f"pruned_{metric}"] = arms["native+prune"]["pruned_count"]
+        ok = ok and no_slower and prune_sound
+        ok = ok and arms["native"]["recall"] >= 0.8
+        for arm in ARMS:
+            m = arms[arm]
+            rows.append({
+                "name": f"anytime_{metric}_{arm.replace('+', '_')}",
+                "us_per_call": m["wall_s"] * 1e6,
+                "derived": (
+                    f"rounds={m['rounds']} recall={m['recall']:.2f} "
+                    f"pruned={m['pruned_count']}"
+                ),
+            })
+
+    stop = _stop_vs_poll(blocked, ds)
+    report.update(stop)
+    ok = ok and stop["stop_poll_identical"] and stop["stopped_not_exact"]
+    rows.append({
+        "name": "anytime_stop_sla",
+        "us_per_call": 0.0,
+        "derived": (
+            f"reason={stop['stop_reason']} round={stop['stop_round']} "
+            f"identical={stop['stop_poll_identical']}"
+        ),
+    })
+
+    report["ok"] = bool(ok)
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "BENCH_anytime.json").write_text(json.dumps(report, indent=2))
+    if not ok:
+        raise SystemExit("anytime_curve: a deterministic contract failed")

@@ -117,6 +117,21 @@ GATES = {
         Gate("trace_events", "min", 0.25),  # seeded event count
         Gate("ok", "exact"),
     ]),
+    # Anytime serving: the bit-identity of SLA stops vs polls, native
+    # no-slower-than-conservative, and pruning soundness are exact per
+    # config; native-arm recall is a seeded float floor. Curve shapes
+    # and rounds are reported, never gated.
+    "anytime": ("BENCH_anytime.json", [
+        Gate("stop_poll_identical", "exact"),
+        Gate("stopped_not_exact", "exact"),
+        Gate("native_no_slower_chi2", "exact"),
+        Gate("native_no_slower_hellinger", "exact"),
+        Gate("prune_sound_chi2", "exact"),
+        Gate("prune_sound_hellinger", "exact"),
+        Gate("recall_chi2_native", "min", 0.15),
+        Gate("recall_hellinger_native", "min", 0.15),
+        Gate("ok", "exact"),
+    ]),
     # Tuner winners are timing-dependent (never gated); the persistence
     # contracts and the tuned key counts are deterministic.
     "autotune": ("BENCH_autotune.json", [

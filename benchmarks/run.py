@@ -14,6 +14,7 @@ import sys
 import time
 
 from benchmarks import (
+    anytime_curve,
     autotune_smoke,
     fault_recovery,
     fig4_bound_ratio,
@@ -44,6 +45,7 @@ SUITES = {
     "restart": warm_restart.run,
     "pump": pump_throughput.run,
     "telemetry": telemetry_overhead.run,
+    "anytime": anytime_curve.run,
     "autotune": autotune_smoke.run,
     "faults": fault_recovery.run,
     "metrics": metrics_matrix.run,

@@ -66,6 +66,53 @@ clearly-far candidates is emergent there — a candidate far outside
 hence drops out of the active sampling set after few samples, which is
 the engine-shaped analogue of the Diakonikolas-Kane closeness testers'
 "cheap rejection of far distributions".
+
+Metric-native bounds (`metric_native_*`, default since the anytime PR):
+
+The uniform budgets above hold for EVERY (p, q) pair, which makes them
+worst-case — the chi2 constant 3 is attained only at tau = 2 and the
+Hellinger square-root modulus only matters near tau = 1. The native
+family sharpens them with the candidate's own OBSERVED distance tau,
+in the spirit of the instance-near-optimal identity testers of Canonne
+et al. (2022): each metric's `native_l1_budget(eps, tau)` is a max
+over several independently valid ℓ1 budgets, so it dominates the
+uniform `l1_budget(eps)` pointwise BY CONSTRUCTION (never fewer
+samples, usually far fewer).
+
+  chi2       max(eps/3, (sqrt(tau+eps) - sqrt(tau))^2).
+             chi2(p,q) here is the triangular discrimination
+             Δ(p,q) = sum (p-q)^2/(p+q) ∈ [0,2]; LC = Δ/2 is the
+             Le Cam divergence and sqrt(LC) is a metric satisfying
+             sqrt(LC) <= sqrt(l1/2) [since Δ <= l1]. The triangle
+             inequality in sqrt(LC) space gives: an ℓ1 learning error
+             of b moves Δ by at most (sqrt(tau + eps') - sqrt(tau))
+             ... inverted: b = (sqrt(tau+eps) - sqrt(tau))^2 keeps the
+             Δ deviation within eps at observed distance tau. At
+             tau = 0 this is eps — 3x the uniform budget, 9x fewer
+             samples for the near candidates the top-k set actually
+             needs resolved.
+  hellinger  max(eps^2/4, (sqrt(1+2 eps) - 1)^2,
+                 2 (sqrt(tau+eps) - sqrt(tau))^2).
+             The middle term is the EXACT inverse of the Cauchy-
+             Schwarz modulus sqrt(b) + b/2 <= eps (solve the
+             quadratic), ~eps^2 for small eps — 4x the conservative
+             floor. The last is the triangle inequality in the
+             Hellinger metric H <= sqrt(l1/2) at observed tau = H^2;
+             at tau = 0 it is 2 eps.
+
+Both tau-dependent budgets use the observed (empirical) tau exactly
+the way the engine already uses the empirical split point to set
+eps_i — the same plug-in convention, applied to the tail bound's
+radius. `metric_native_log_delta(..., metric="l1")` short-circuits to
+`theorem1_log_delta` at the PYTHON level: the l1 arm compiles the
+exact pre-anytime program, bit-identical.
+
+`metric_native_epsilon` is the inverse direction (host-side, for
+anytime confidence statements and pruning): given the ℓ1 radius
+b = theorem1_epsilon(n, delta), the guaranteed metric-space deviation
+is the min over the inverted moduli —
+  l1: b; chi2: min(3 b, b + 2 sqrt(tau b));
+  hellinger: min(sqrt(b) + b/2, b/2 + sqrt(2 tau b)).
 """
 
 from __future__ import annotations
@@ -83,6 +130,9 @@ __all__ = [
     "metric_l1_budget",
     "metric_log_delta",
     "metric_epsilon",
+    "metric_native_l1_budget",
+    "metric_native_log_delta",
+    "metric_native_epsilon",
     "BOUNDED_METRICS",
     "waggoner_epsilon",
     "slowmatch_epsilon",
@@ -165,6 +215,55 @@ def metric_epsilon(n, delta, v_x: int, metric: str = "l1"):
         return 3.0 * eps1
     if metric == "hellinger":
         return 2.0 * jnp.sqrt(eps1)
+    raise ValueError(f"unknown metric {metric!r}; have {BOUNDED_METRICS}")
+
+
+def metric_native_l1_budget(eps, tau, metric: str = "l1"):
+    """Observation-aware ℓ1 budget for a ``metric`` deviation of ``eps``
+    at observed distance ``tau`` (derivations in the module docstring).
+    A max over independently valid budgets, so it dominates the uniform
+    `metric_l1_budget` pointwise by construction. Metrics without a
+    native budget (l1 itself) fall back to the uniform one — for l1
+    that is the identity, zero extra ops.
+    """
+    mdef = _metrics.coerce_metric(metric)
+    if mdef.native_l1_budget is None:
+        return mdef.l1_budget(eps)
+    return mdef.native_l1_budget(eps, tau)
+
+
+def metric_native_log_delta(eps, n, v_x: int, *, tau, metric: str = "l1") -> jax.Array:
+    """log failure probability for a metric-space deviation ``eps`` at
+    observed distance ``tau`` — Theorem 1 at the native ℓ1 budget.
+    The l1 arm short-circuits at the Python level to
+    `theorem1_log_delta` (bit-identical to the pre-anytime program);
+    other metrics get log-deltas <= the conservative `metric_log_delta`
+    (budget dominance), i.e. retirement never later, usually earlier.
+    """
+    mdef = _metrics.coerce_metric(metric)
+    if mdef.native_l1_budget is None:
+        return theorem1_log_delta(mdef.l1_budget(eps), n, v_x)
+    return theorem1_log_delta(mdef.native_l1_budget(eps, tau), n, v_x)
+
+
+def metric_native_epsilon(n, delta, v_x: int, *, tau, metric: str = "l1"):
+    """Metric-space deviation guaranteed w.p. > 1 - delta after n
+    samples at observed distance ``tau`` — the inverse direction of
+    `metric_native_log_delta`, used by anytime confidence statements
+    and far-candidate pruning. Min over the inverted moduli (module
+    docstring), so it never exceeds the uniform `metric_epsilon`.
+    Host-side helper; accepts numpy arrays and jnp scalars.
+    """
+    b = theorem1_epsilon(n, delta, v_x)
+    if metric == "l1":
+        return b
+    t = jnp.maximum(jnp.asarray(tau, jnp.float32), 0.0)
+    if metric == "chi2":
+        return jnp.minimum(3.0 * b, b + 2.0 * jnp.sqrt(t * b))
+    if metric == "hellinger":
+        return jnp.minimum(
+            jnp.sqrt(b) + 0.5 * b, 0.5 * b + jnp.sqrt(2.0 * t * b)
+        )
     raise ValueError(f"unknown metric {metric!r}; have {BOUNDED_METRICS}")
 
 

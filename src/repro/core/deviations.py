@@ -40,9 +40,26 @@ __all__ = [
     "assign_deviations",
     "assign_deviations_dynamic",
     "assign_closeness",
+    "prune_far",
     "split_point",
     "top_k_mask",
 ]
+
+
+def _metric_log_delta(eps_i, tau, n, v_x, metric, bounds_mode):
+    """Route the failure bound: conservative uniform budget vs the
+    tau-aware native one (`bounds.metric_native_log_delta`). The l1 arm
+    is Theorem 1 verbatim under EITHER mode — the native family only
+    changes the compiled program for chi2/hellinger."""
+    if bounds_mode == "conservative":
+        return bounds.metric_log_delta(eps_i, n, v_x, metric=metric)
+    if bounds_mode == "native":
+        return bounds.metric_native_log_delta(
+            eps_i, n, v_x, tau=tau, metric=metric
+        )
+    raise ValueError(
+        f"bounds_mode must be 'native' or 'conservative', got {bounds_mode!r}"
+    )
 
 
 class DeviationState(NamedTuple):
@@ -123,6 +140,7 @@ def assign_deviations_dynamic(
     criterion: str = "histsim",
     k_cap: Optional[int] = None,
     metric: str = "l1",
+    bounds_mode: str = "native",
 ) -> DeviationState:
     """`assign_deviations` with traced (k, eps, delta) — vmappable.
 
@@ -152,6 +170,13 @@ def assign_deviations_dynamic(
     assigned eps_i are in THAT metric's space, and the failure bounds
     go through `bounds.metric_log_delta` (identity budget for "l1" —
     zero extra ops, bit-identical to the pre-metric-layer path).
+
+    bounds_mode: "native" (default) evaluates the failure bounds at the
+    observation-aware ℓ1 budget `bounds.metric_native_log_delta(...,
+    tau=tau_i)` — never more conservative than the uniform budget, and
+    much tighter for chi2/hellinger candidates at small tau.
+    "conservative" keeps the PR-9 uniform budgets. The l1 metric is
+    bit-identical under both modes.
     """
     if criterion not in ("histsim", "slowmatch"):
         raise ValueError(criterion)
@@ -187,7 +212,7 @@ def assign_deviations_dynamic(
     eps_out = tau - jnp.maximum(s - 0.5 * eps, 0.0)
     eps_i = jnp.maximum(jnp.where(in_m, eps_in, eps_out), 0.0)
 
-    log_delta_i = bounds.metric_log_delta(eps_i, n, v_x, metric=metric)
+    log_delta_i = _metric_log_delta(eps_i, tau, n, v_x, metric, bounds_mode)
     if criterion == "slowmatch":
         # Every candidate individually at confidence delta/V_Z (Sec 5.2).
         delta_upper = float(v_z) * jnp.exp(jnp.max(log_delta_i))
@@ -242,6 +267,7 @@ def assign_closeness(
     delta: jax.Array,
     v_x: int,
     metric: str = "l1",
+    bounds_mode: str = "native",
 ) -> DeviationState:
     """Tolerant closeness test over the shared counts matrix — the
     second retirement rule, in the same DeviationState shape as top-k.
@@ -284,7 +310,7 @@ def assign_closeness(
     threshold = eps + 0.5 * gap
     close = tau <= threshold
     margin = jnp.maximum(jnp.maximum(tau - eps, (eps + gap) - tau), 0.0)
-    log_delta_i = bounds.metric_log_delta(margin, n, v_x, metric=metric)
+    log_delta_i = _metric_log_delta(margin, tau, n, v_x, metric, bounds_mode)
     delta_upper = jnp.sum(jnp.exp(log_delta_i))
     log_threshold = jnp.log(delta / float(v_z))
     return DeviationState(
@@ -296,3 +322,41 @@ def assign_closeness(
         delta_upper=delta_upper,
         active=log_delta_i > log_threshold,
     )
+
+
+def prune_far(
+    tau: jax.Array,
+    n: jax.Array,
+    *,
+    far_edge: jax.Array,
+    delta: jax.Array,
+    v_x: int,
+    metric: str = "l1",
+) -> jax.Array:
+    """Early-reject mask: candidates whose LOWER confidence bound
+    already clears ``far_edge`` — the engine-shaped analogue of the
+    closeness testers' cheap rejection of far distributions.
+
+    conf_i = metric_native_epsilon(n_i, delta/V_Z, tau_i) is the
+    metric-space deviation guaranteed w.p. > 1 - delta/V_Z, so
+    ``tau_i - conf_i > far_edge`` certifies (at individual confidence
+    delta/V_Z, union-bounded by the caller's sticky OR over rounds
+    within the same delta budget the retirement math already spends)
+    that the true distance exceeds far_edge: the candidate can never
+    re-enter the answer set. Callers pass far_edge = eps + gap for
+    closeness (certified "far") and the current split + eps/2 for
+    top-k (certified outside M's reach). Fixed-shape, branch-free —
+    safe inside the fused round.
+
+    The returned mask only SHRINKS the I/O marking (which blocks get
+    read); the failure bounds keep summing over every candidate, so
+    the Theorem-1 union bound is untouched — pruning is a pure
+    sampling-effort optimization, never a correctness shortcut.
+    """
+    tau = jnp.asarray(tau, jnp.float32)
+    v_z = tau.shape[0]
+    conf = bounds.metric_native_epsilon(
+        n, jnp.asarray(delta, jnp.float32) / float(v_z), v_x, tau=tau,
+        metric=metric,
+    )
+    return (tau - conf) > jnp.asarray(far_edge, jnp.float32)

@@ -124,6 +124,7 @@ def multi_state_pspecs(model_axis: str = "model") -> MultiQueryState:
         active_words=P(),
         union_words=P(),
         in_top_k=P(),
+        pruned=P(),
         occupied=P(),
         round_idx=P(),
     )

@@ -132,6 +132,12 @@ class MatchResult:
     # Query type this result answers: "topk" (ids = the k matches) or
     # "closeness" (ids = every candidate labeled close, tau order).
     qtype: str = "topk"
+    # SLA early stop (see multiquery.StopPolicy): True when a stop
+    # policy or supervisor deadline retired the query before its
+    # statistical bound fired — the result is the honest anytime
+    # answer at that poll (exact=False, achieved delta_upper).
+    stopped: bool = False
+    stop_reason: str = ""  # "confidence" | "tuples" | "wall_ms" | "deadline"
 
     @property
     def delta_upper(self) -> float:
@@ -152,6 +158,8 @@ def _to_match_result(out: QueryOutcome, t0: float) -> MatchResult:
         degraded=out.degraded,
         eps_effective=out.eps_effective,
         qtype=out.qtype,
+        stopped=out.stopped,
+        stop_reason=out.stop_reason,
     )
 
 

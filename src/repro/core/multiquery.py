@@ -98,6 +98,7 @@ from repro.kernels import autotune, ops
 from repro.obs.telemetry import Telemetry
 
 __all__ = [
+    "AnytimeAnswer",
     "CacheSnapshot",
     "MultiQuerySpec",
     "MultiQueryState",
@@ -106,6 +107,7 @@ __all__ = [
     "QueryOutcome",
     "SampleCursor",
     "SharedCountsScheduler",
+    "StopPolicy",
     "apply_stats",
     "cache_config_hash",
     "fused_round",
@@ -129,6 +131,57 @@ QTYPE_CLOSENESS = 1
 
 
 @dataclasses.dataclass(frozen=True)
+class StopPolicy:
+    """SLA-driven early stopping for one query (or a whole scheduler via
+    ``MultiQuerySpec.default_stop``). A stopped query retires with its
+    honest anytime answer — ``exact=False``, ``terminated=False``, the
+    achieved ``delta_upper`` attached — bit-identical to what
+    `SharedCountsScheduler.peek` would have reported at that poll.
+
+    Fields left None never fire; the statistical retirement rule
+    (delta_upper < delta) always takes precedence, so a query that
+    converges before its SLA returns the normal terminated answer.
+
+      wall_ms    — stop once the query has been live this many ms
+                   (evaluated at poll boundaries, so the overshoot is
+                   bounded by one poll interval, like PR-8 deadlines).
+      confidence — stop once 1 - delta_upper reaches this level (a
+                   weaker-than-delta "good enough" bound).
+      tuples     — stop once this many tuples were read while live
+                   (a hard sampling-cost SLA).
+    """
+
+    wall_ms: Optional[float] = None
+    confidence: Optional[float] = None
+    tuples: Optional[int] = None
+
+    def __post_init__(self):
+        if self.wall_ms is None and self.confidence is None and self.tuples is None:
+            raise ValueError(
+                "StopPolicy needs at least one of wall_ms/confidence/tuples"
+            )
+        if self.wall_ms is not None and not self.wall_ms >= 0.0:
+            raise ValueError(f"need wall_ms >= 0, got {self.wall_ms}")
+        if self.confidence is not None and not (0.0 < self.confidence <= 1.0):
+            raise ValueError(f"need 0 < confidence <= 1, got {self.confidence}")
+        if self.tuples is not None and not self.tuples >= 0:
+            raise ValueError(f"need tuples >= 0, got {self.tuples}")
+
+    def fired(self, *, wall_s: float, confidence: float, tuples: int) -> str:
+        """The reason this policy fires on the given live-query gauges,
+        or "" if it does not. Checked cheapest-guarantee-loss first:
+        a confidence stop yields the strongest answer, so when several
+        criteria fire at the same poll that is the reason reported."""
+        if self.confidence is not None and confidence >= self.confidence:
+            return "confidence"
+        if self.tuples is not None and tuples >= self.tuples:
+            return "tuples"
+        if self.wall_ms is not None and wall_s * 1000.0 >= self.wall_ms:
+            return "wall_ms"
+        return ""
+
+
+@dataclasses.dataclass(frozen=True)
 class MultiQuerySpec:
     """Static shape/criterion/metric configuration shared by all query
     slots."""
@@ -147,6 +200,24 @@ class MultiQuerySpec:
     # like the kernel plan. "l1" reproduces the pre-metric-layer
     # program bit for bit.
     metric: str = "l1"
+    # Failure-bound routing: "native" evaluates Theorem 1 at the
+    # observation-aware ℓ1 budget (tighter for chi2/hellinger, never
+    # looser; the l1 arm is bit-identical under both modes),
+    # "conservative" keeps the PR-9 uniform budgets.
+    bounds_mode: str = "native"
+    # Early-reject pruning: retire clearly-far candidates from the
+    # union-active set (I/O marking only — the failure bounds keep
+    # summing over everyone). False compiles the exact pre-pruning
+    # active-set expression; the flag is static, so flipping it is a
+    # (deliberate) recompile, never a mid-stream shape change.
+    prune: bool = False
+    # Scheduler-wide default StopPolicy for queries admitted without
+    # their own. compare=False keeps it out of __eq__/__hash__: stop
+    # policies are host-loop decisions, so two specs differing only
+    # here share every jit cache entry.
+    default_stop: Optional[StopPolicy] = dataclasses.field(
+        default=None, compare=False
+    )
 
     def __post_init__(self):
         if self.max_queries < 1:
@@ -155,6 +226,17 @@ class MultiQuerySpec:
             raise ValueError(self.criterion)
         if self.k_cap is not None and not (0 < self.k_cap <= self.v_z):
             raise ValueError(f"need 0 < k_cap <= V_Z, got k_cap={self.k_cap}")
+        if self.bounds_mode not in ("native", "conservative"):
+            raise ValueError(
+                f"bounds_mode must be 'native' or 'conservative', "
+                f"got {self.bounds_mode!r}"
+            )
+        if self.default_stop is not None and not isinstance(
+            self.default_stop, StopPolicy
+        ):
+            raise TypeError(
+                f"default_stop must be a StopPolicy, got {self.default_stop!r}"
+            )
         from repro.kernels import metrics as _metrics
 
         _metrics.coerce_metric(self.metric)  # fail construction, not trace
@@ -179,6 +261,10 @@ class MultiQueryState(NamedTuple):
     active_words: jax.Array  # (Q, W) uint32 packed per-query active masks
     union_words: jax.Array  # (W,) uint32 — OR over slots; drives block marking
     in_top_k: jax.Array  # (Q, V_Z) bool — per-query matching set M
+    # Sticky early-reject mask (all-False unless spec.prune): candidates
+    # certified clearly-far, dropped from the I/O marking only — the
+    # failure bounds keep summing over every candidate.
+    pruned: jax.Array  # (Q, V_Z) bool
     occupied: jax.Array  # (Q,) bool — slot holds a live query
     round_idx: jax.Array  # () i32 — statistics iterations so far
 
@@ -296,6 +382,7 @@ def init_multi_state(spec: MultiQuerySpec) -> MultiQueryState:
         active_words=jnp.zeros((q, w), jnp.uint32),
         union_words=jnp.zeros((w,), jnp.uint32),
         in_top_k=jnp.zeros((q, v_z), bool),
+        pruned=jnp.zeros((q, v_z), bool),
         occupied=jnp.zeros((q,), bool),
         round_idx=jnp.asarray(0, jnp.int32),
     )
@@ -331,6 +418,7 @@ def admit_slot(
         delta=state.delta.at[slot].set(jnp.asarray(delta, jnp.float32)),
         gap=state.gap.at[slot].set(jnp.asarray(gap, jnp.float32)),
         qtype=state.qtype.at[slot].set(jnp.asarray(qtype, jnp.int32)),
+        pruned=state.pruned.at[slot].set(False),
         occupied=state.occupied.at[slot].set(True),
     )
 
@@ -353,6 +441,7 @@ def clear_slot(state: MultiQueryState, slot: jax.Array, *, spec: MultiQuerySpec)
         delta_upper=state.delta_upper.at[slot].set(0.0),
         gap=state.gap.at[slot].set(0.0),
         qtype=state.qtype.at[slot].set(QTYPE_TOPK),
+        pruned=state.pruned.at[slot].set(False),
         union_words=_or_reduce(active_words),
     )
 
@@ -404,22 +493,42 @@ def apply_stats(
     pass) and per-slot selected, so mixing query types never
     recompiles. The select is value-exact: an all-top-k workload
     produces bit-identical results to the pre-closeness engine.
+
+    With ``spec.prune`` the sticky per-slot ``pruned`` mask is OR-grown
+    with `dev.prune_far` — candidates whose lower confidence bound
+    clears the far edge (eps + gap for closeness, split + eps/2 for
+    top-k) — and subtracted from the I/O marking. A Python-level
+    branch: prune=False compiles the exact pre-pruning active-set
+    expression, and the mask is fixed-shape so flipping candidates
+    never recompiles.
     """
 
-    def one(tau_q, k, eps, delta, gap, qtype, occupied):
+    def one(tau_q, k, eps, delta, gap, qtype, occupied, pruned_q):
         d_top = dev.assign_deviations_dynamic(
             tau_q, n, k=k, eps=eps, delta=delta, v_x=spec.v_x,
             criterion=spec.criterion, k_cap=spec.k_cap, metric=spec.metric,
+            bounds_mode=spec.bounds_mode,
         )
         d_close = dev.assign_closeness(
             tau_q, n, eps=eps, gap=gap, delta=delta, v_x=spec.v_x,
-            metric=spec.metric,
+            metric=spec.metric, bounds_mode=spec.bounds_mode,
         )
         is_close = qtype == QTYPE_CLOSENESS
         d = jax.tree.map(
             lambda a, b: jnp.where(is_close, a, b), d_close, d_top
         )
-        active = d.active & occupied
+        if spec.prune:
+            far_edge = jnp.where(is_close, eps + gap, d.split + 0.5 * eps)
+            pruned_q = pruned_q | (
+                dev.prune_far(
+                    tau_q, n, far_edge=far_edge, delta=delta, v_x=spec.v_x,
+                    metric=spec.metric,
+                )
+                & occupied
+            )
+            active = d.active & occupied & ~pruned_q
+        else:
+            active = d.active & occupied
         return (
             d.eps_i,
             d.log_delta_i,
@@ -427,11 +536,14 @@ def apply_stats(
             active,
             pack_active_mask(active),
             d.in_top_k & occupied,
+            pruned_q,
         )
 
-    eps_i, log_delta_i, delta_upper, active, words, in_top_k = jax.vmap(one)(
-        tau, state.k, state.eps, state.delta, state.gap, state.qtype,
-        state.occupied,
+    eps_i, log_delta_i, delta_upper, active, words, in_top_k, pruned = (
+        jax.vmap(one)(
+            tau, state.k, state.eps, state.delta, state.gap, state.qtype,
+            state.occupied, state.pruned,
+        )
     )
     return state._replace(
         tau=tau,
@@ -442,6 +554,7 @@ def apply_stats(
         active_words=words,
         union_words=_or_reduce(words),
         in_top_k=in_top_k,
+        pruned=pruned,
         round_idx=state.round_idx + 1,
     )
 
@@ -604,6 +717,7 @@ class _Ticket:
     admit_blocks_read: int
     admit_blocks_considered: int
     admit_tuples_read: int
+    stop: Optional[StopPolicy] = None  # SLA policy; None = run to the bound
 
 
 @dataclasses.dataclass
@@ -636,6 +750,73 @@ class QueryOutcome:
     eps_effective: float = float("nan")
     blocks_quarantined: int = 0
     qtype: str = "topk"  # "topk" | "closeness"
+    # SLA early stop: ``stopped`` is True when a StopPolicy (or a
+    # supervisor deadline) retired the query before its statistical
+    # bound fired; the answer is then exactly the anytime statement at
+    # that poll (exact=False, terminated=False, achieved delta_upper).
+    stopped: bool = False
+    stop_reason: str = ""  # "confidence" | "tuples" | "wall_ms" | "deadline"
+    # The poll-boundary anytime statement assembled at retirement by
+    # `SharedCountsScheduler.peek` — the SAME host code path serving
+    # live polls, so a stopped answer is bit-identical to what
+    # poll_result would have said at that round.
+    anytime: Optional["AnytimeAnswer"] = None
+
+
+@dataclasses.dataclass
+class AnytimeAnswer:
+    """A progressive (poll-boundary) answer with its Theorem-1-style
+    confidence statement — what `MatchServer.poll_result` returns.
+
+    The statement reads: "the current best set is ``ids`` (closest
+    first); every candidate's empirical distance is within ``eps_n`` of
+    its true one w.p. > 1 - delta/|V_Z| each, the probability that the
+    set is not (eps, k)-correct is at most ``delta_upper``, and each
+    listed candidate would have to move by its ``margin`` (in metric
+    space) for its membership promise to break."
+
+    All quantities are the CURVE_COLUMNS trajectory quantities promoted
+    from telemetry to API (`curve_point` is the inverse promotion), so
+    a recorded confidence curve and a sequence of polls agree exactly.
+    """
+
+    qid: int
+    qtype: str  # "topk" | "closeness"
+    status: str  # "queued" | "live" | "done"
+    ids: np.ndarray  # current best set, closest first
+    tau: np.ndarray  # (len(ids),) empirical distances of the best set
+    margin: np.ndarray  # (len(ids),) per-candidate decision margin
+    split: float  # current split point / closeness threshold
+    n_min: float  # weakest per-candidate sample count
+    tau_min: float
+    eps_n: float  # metric-space eps(n_min) at per-candidate budget delta/V_Z
+    delta_upper: float  # union failure bound of the CURRENT labeling
+    confidence: float  # max(0, 1 - delta_upper)
+    round: int
+    tuples: int
+    tuples_live: int  # tuples read while this query was live
+    eps: float
+    delta: float
+    metric: str
+    exact: bool = False
+    stopped: bool = False
+    stop_reason: str = ""
+    result: Optional[object] = None  # final MatchResult once status == "done"
+
+    def curve_point(self) -> dict:
+        """This answer as a CURVE_COLUMNS trajectory point — the exact
+        dict `Telemetry.record_curve_point` stores, so polls can be
+        appended to the same confidence curves telemetry records."""
+        return dict(
+            round=self.round,
+            tuples=self.tuples,
+            tuples_live=self.tuples_live,
+            n_min=self.n_min,
+            tau_min=self.tau_min,
+            eps_n=self.eps_n,
+            delta_upper=self.delta_upper,
+            confidence=self.confidence,
+        )
 
 
 def _theorem1_eps_np(n: float, delta_i: float, v_x: int) -> float:
@@ -817,6 +998,12 @@ class SharedCountsScheduler:
         self.blocks_considered = 0
         self.tuples_read = 0
         self._delta_upper = np.zeros(spec.max_queries, np.float32)
+        # Anytime-answer mirrors (always refreshed — `peek` assembles
+        # progressive answers from these between dispatches).
+        self._tel_tau = np.ones((spec.max_queries, spec.v_z), np.float32)
+        self._tel_n = np.zeros(spec.v_z, np.float32)
+        self._in_top_k_host = np.zeros((spec.max_queries, spec.v_z), bool)
+        self._pruned_host = np.zeros((spec.max_queries, spec.v_z), bool)
         # Quarantine state (host-side — quarantined blocks never reach a
         # device dispatch, they are simply excluded from every future
         # pass order). All-False in the fault-free path, in which case
@@ -840,8 +1027,6 @@ class SharedCountsScheduler:
         self.telemetry = telemetry
         if telemetry is not None:
             reg = telemetry.registry
-            self._tel_tau = np.ones((spec.max_queries, spec.v_z), np.float32)
-            self._tel_n = np.zeros(spec.v_z, np.float32)
             self._tel_last = {"rounds": 0, "blocks": 0, "tuples": 0, "passes": 0}
             # Poll-time recording is two appends (see `_record_poll`);
             # everything dict/registry-shaped happens in
@@ -979,18 +1164,19 @@ class SharedCountsScheduler:
         loop performs. Retirement snapshots (`retire`) transfer result
         data per retired query and are not part of the loop cadence.
         """
-        if self.telemetry is None:
-            cursor, delta_upper = jax.device_get((self.cursor, self.state.delta_upper))
-        else:
-            # Same single batched poll, two extra (small) leaves: the
-            # per-slot tau matrix and per-candidate n feed the
-            # confidence-trajectory points. Pure reads — device state
-            # and the dispatch sequence are untouched.
-            cursor, delta_upper, tau, n = jax.device_get(
-                (self.cursor, self.state.delta_upper, self.state.tau, self.state.n)
-            )
-            self._tel_tau = np.asarray(tau)
-            self._tel_n = np.asarray(n)
+        # ONE batched poll. Beyond the cursor + bounds the host loop
+        # decides on, the per-slot tau/n/in_top_k/pruned leaves feed the
+        # anytime `peek` assembly and the confidence-trajectory points —
+        # pure reads riding the same transfer, so device state and the
+        # dispatch sequence are untouched whether or not anyone polls.
+        cursor, delta_upper, tau, n, in_top_k, pruned = jax.device_get(
+            (self.cursor, self.state.delta_upper, self.state.tau,
+             self.state.n, self.state.in_top_k, self.state.pruned)
+        )
+        self._tel_tau = np.asarray(tau)
+        self._tel_n = np.asarray(n)
+        self._in_top_k_host = np.asarray(in_top_k)
+        self._pruned_host = np.asarray(pruned)
         self.read_mask = np.asarray(cursor.read_mask)
         self.rounds = int(cursor.rounds)
         self.blocks_read = int(cursor.blocks_read)
@@ -1187,8 +1373,14 @@ class SharedCountsScheduler:
         delta: float,
         qtype: str = "topk",
         gap: float = 0.0,
+        stop: Optional[StopPolicy] = None,
     ) -> int:
         """Place a query into a free slot; returns its qid.
+
+        ``stop`` attaches an SLA `StopPolicy` (None inherits
+        ``spec.default_stop``; pass a policy explicitly to override
+        per query). Stop criteria are evaluated at poll boundaries,
+        after the statistical rule.
 
         The immediate `stats_step` makes the query see the accumulated
         shared counts — with its full shared ``n_i`` — before the next
@@ -1257,6 +1449,7 @@ class SharedCountsScheduler:
             admit_blocks_read=self.blocks_read,
             admit_blocks_considered=self.blocks_considered,
             admit_tuples_read=self.tuples_read,
+            stop=stop if stop is not None else self.spec.default_stop,
         )
         if self.telemetry is not None:
             self._c_admitted.inc(1)
@@ -1277,7 +1470,77 @@ class SharedCountsScheduler:
             )
         return qid
 
-    def retire(self, slot: int, *, exact: bool, terminated: bool) -> QueryOutcome:
+    def peek(self, slot: int) -> AnytimeAnswer:
+        """The current anytime answer for a LIVE slot, assembled purely
+        from the last-polled host mirrors — no device work, no
+        dispatch, so polling between rounds never perturbs the loop.
+
+        Selection and margins mirror the device statistics in f32 with
+        the device's exact tie rule (np stable argsort ascending ==
+        `lax.top_k(-tau)`: equal values lower-index first) and the
+        device's exact operation association, so at a poll boundary the
+        assembled set is bit-identical to what retirement would report.
+        `retire` itself calls this with the same fresh mirrors — a
+        stopped query's final answer IS the poll at its stopping round.
+        """
+        t = self.tickets[slot]
+        tau = self._tel_tau[slot]
+        du = float(self._delta_upper[slot])
+        eps32 = np.float32(t.eps)
+        if t.qtype == "closeness":
+            close = np.flatnonzero(self._in_top_k_host[slot])
+            ids = close[np.argsort(tau[close], kind="stable")]
+            gap32 = np.float32(t.gap)
+            split32 = eps32 + np.float32(0.5) * gap32
+            sel = tau[ids]
+            margin = np.maximum(
+                np.maximum(sel - eps32, (eps32 + gap32) - sel), np.float32(0.0)
+            )
+        else:
+            order = np.argsort(tau, kind="stable")
+            ids = order[: t.k].copy()
+            if t.k >= self.spec.v_z:
+                split32 = np.float32(tau.max())
+            else:
+                split32 = np.float32(0.5) * (tau[order[t.k - 1]] + tau[order[t.k]])
+            sel = tau[ids]
+            margin = np.maximum(
+                np.minimum(eps32, (split32 + np.float32(0.5) * eps32) - sel),
+                np.float32(0.0),
+            )
+        n_min = float(self._tel_n.min())
+        return AnytimeAnswer(
+            qid=t.qid,
+            qtype=t.qtype,
+            status="live",
+            ids=ids,
+            tau=sel.copy(),
+            margin=margin,
+            split=float(split32),
+            n_min=n_min,
+            tau_min=float(tau.min()),
+            eps_n=_metric_eps_np(
+                n_min, t.delta / self.spec.v_z, self.spec.v_x, self.spec.metric
+            ),
+            delta_upper=du,
+            confidence=max(0.0, 1.0 - du),
+            round=self.rounds,
+            tuples=self.tuples_read,
+            tuples_live=self.tuples_read - t.admit_tuples_read,
+            eps=t.eps,
+            delta=t.delta,
+            metric=self.spec.metric,
+        )
+
+    def retire(
+        self,
+        slot: int,
+        *,
+        exact: bool,
+        terminated: bool,
+        stopped: bool = False,
+        stop_reason: str = "",
+    ) -> QueryOutcome:
         """Snapshot a slot's answer, free the slot, record the outcome.
 
         ``exact`` is forced True whenever the whole surviving population
@@ -1286,7 +1549,12 @@ class SharedCountsScheduler:
         with quarantined blocks "complete" means complete over the
         survivors and the outcome says so via ``degraded``). Callers
         must be at a poll boundary (mirrors fresh, i.e. after `_sync`).
+
+        ``stopped``/``stop_reason`` record an SLA early stop (StopPolicy
+        or supervisor deadline); the outcome then carries the honest
+        anytime statement of that poll.
         """
+        anytime = self.peek(slot)
         t = self.tickets.pop(slot)
         degraded = self.blocks_quarantined > 0
         if degraded:
@@ -1328,7 +1596,14 @@ class SharedCountsScheduler:
             eps_effective=t.eps + (self.eps_inflation if degraded else 0.0),
             blocks_quarantined=self.blocks_quarantined,
             qtype=t.qtype,
+            stopped=stopped,
+            stop_reason=stop_reason,
+            anytime=anytime,
         )
+        anytime.status = "done"
+        anytime.exact = outcome.exact
+        anytime.stopped = stopped
+        anytime.stop_reason = stop_reason
         self.state = clear_slot(self.state, jnp.asarray(slot, jnp.int32), spec=self.spec)
         self.outcomes[t.qid] = outcome
         if self.telemetry is not None:
@@ -1342,18 +1617,37 @@ class SharedCountsScheduler:
                 passes=outcome.passes, blocks=outcome.blocks_read,
                 tuples=outcome.tuples_read,
                 delta_upper=outcome.delta_upper, wall_s=outcome.wall_time_s,
+                stopped=outcome.stopped, stop_reason=outcome.stop_reason,
             )
         return outcome
 
     def _poll_terminated(self) -> None:
         """Retire every live query whose termination bound has fired
-        (judged on the last-polled bounds — call after `_sync`)."""
+        (judged on the last-polled bounds — call after `_sync`), then
+        every one whose SLA StopPolicy fires. The statistical rule is
+        checked FIRST, so a query that converges at the same poll its
+        SLA would trip returns the normal terminated answer."""
         if not self.tickets:
             return
         du = self._delta_upper
+        now = time.perf_counter()
         for slot in list(self.tickets):
-            if du[slot] < self.tickets[slot].delta:
+            t = self.tickets[slot]
+            if du[slot] < t.delta:
                 self.retire(slot, exact=False, terminated=True)
+                continue
+            if t.stop is None:
+                continue
+            reason = t.stop.fired(
+                wall_s=now - t.admit_time,
+                confidence=max(0.0, 1.0 - float(du[slot])),
+                tuples=self.tuples_read - t.admit_tuples_read,
+            )
+            if reason:
+                self.retire(
+                    slot, exact=False, terminated=False,
+                    stopped=True, stop_reason=reason,
+                )
 
     # -- the loop ----------------------------------------------------------
 

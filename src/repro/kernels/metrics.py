@@ -15,7 +15,7 @@ registry instance (`ops.l1_distance_multi` is now a thin alias; its
 output is bit-identical to the pre-metric-layer kernels because the l1
 instance emits the exact same op sequence).
 
-Registry entries are `(score, l1_budget, bytes_model)` triples:
+Registry entries are `(score, l1_budget, native_l1_budget, bytes_model)`:
 
   score      — the elementwise lane term (runs inside the kernels);
   l1_budget  — the deviation half of the metric: an inverse modulus of
@@ -24,6 +24,12 @@ Registry entries are `(score, l1_budget, bytes_model)` triples:
                `core.bounds.metric_log_delta` reuse Theorem 1's ℓ1
                concentration bound for every metric (see bounds.py for
                the derivations — conservative for chi2/hellinger);
+  native_l1_budget — the metric-native refinement: the same inverse
+               modulus made OBSERVATION-AWARE (it may read the measured
+               tau), always >= l1_budget by construction (each form is
+               a max over independently valid budgets), so the implied
+               sample complexity never exceeds the conservative one.
+               Derivations in `core/bounds.py`.
   bytes_model — analytic HBM traffic per tau round. All three metrics
                stream the same bytes (they differ in VPU flops only),
                so they share `streaming_tau_bytes`; the field exists so
@@ -49,7 +55,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -125,6 +131,12 @@ class MetricDef:
     # tau of a candidate with zero sampled mass (r_hat = 0 vs a
     # normalized target): documentation + oracle value for tests.
     empty_row_tau: float = 1.0
+    # Observation-aware inverse modulus (eps, tau) -> ℓ1 budget; None
+    # falls back to the uniform `l1_budget`. Must dominate `l1_budget`
+    # pointwise (it is a max over valid budgets including the uniform
+    # one), so switching the engine to native bounds can only retire
+    # queries EARLIER, never claim less than the conservative family.
+    native_l1_budget: Optional[Callable] = None
 
 
 def _budget_l1(eps):
@@ -145,11 +157,49 @@ def _budget_hellinger(eps):
     return 0.25 * eps * eps
 
 
+def _native_budget_chi2(eps, tau):
+    # max of two independently valid ℓ1 budgets for a chi2 deviation of
+    # eps (derivations in core/bounds.py):
+    #   eps/3                        — the uniform 3-Lipschitz modulus
+    #                                  (tight at tau = 2, cannot be
+    #                                  uniformly improved);
+    #   (sqrt(tau+eps) - sqrt(tau))^2 — via the Le Cam metric sqrt(Δ/2)
+    #                                  and the observed tau (-> eps at
+    #                                  tau = 0: 3x the uniform budget,
+    #                                  9x fewer samples for close
+    #                                  candidates).
+    t = jnp.maximum(tau, 0.0)
+    tri = jnp.square(jnp.sqrt(t + eps) - jnp.sqrt(t))
+    return jnp.maximum(eps / 3.0, tri)
+
+
+def _native_budget_hellinger(eps, tau):
+    # max of three independently valid ℓ1 budgets for a squared-
+    # Hellinger deviation of eps (derivations in core/bounds.py):
+    #   eps^2/4                       — the conservative PR-9 floor;
+    #   (sqrt(1+2 eps) - 1)^2         — EXACT inverse of the Cauchy-
+    #                                   Schwarz modulus sqrt(l1)+l1/2
+    #                                   (~eps^2 for small eps, 4x the
+    #                                   floor);
+    #   2 (sqrt(tau+eps)-sqrt(tau))^2 — via the Hellinger metric,
+    #                                   H <= sqrt(l1/2), and the
+    #                                   observed tau (-> 2 eps at
+    #                                   tau = 0).
+    t = jnp.maximum(tau, 0.0)
+    cs = jnp.square(jnp.sqrt(1.0 + 2.0 * eps) - 1.0)
+    tri = 2.0 * jnp.square(jnp.sqrt(t + eps) - jnp.sqrt(t))
+    return jnp.maximum(jnp.maximum(0.25 * eps * eps, cs), tri)
+
+
 METRICS = {
     "l1": MetricDef("l1", _score_l1, _budget_l1, empty_row_tau=1.0),
-    "chi2": MetricDef("chi2", _score_chi2, _budget_chi2, empty_row_tau=1.0),
+    "chi2": MetricDef(
+        "chi2", _score_chi2, _budget_chi2, empty_row_tau=1.0,
+        native_l1_budget=_native_budget_chi2,
+    ),
     "hellinger": MetricDef(
-        "hellinger", _score_hellinger, _budget_hellinger, empty_row_tau=0.5
+        "hellinger", _score_hellinger, _budget_hellinger, empty_row_tau=0.5,
+        native_l1_budget=_native_budget_hellinger,
     ),
 }
 METRIC_NAMES = tuple(METRICS)

@@ -7,8 +7,9 @@ Bundles the three concerns every instrumented layer needs:
   curves   — per-query confidence trajectories: the (tuples, eps(n),
              delta_upper) points the scheduler records at every poll
              boundary, i.e. the tuples-to-confidence curve of each
-             query (the measurable form of Theorem 1's n ↦ eps(n) and
-             the precursor of the ROADMAP's anytime API)
+             query (the measurable form of Theorem 1's n ↦ eps(n); the
+             anytime API's `AnytimeAnswer.curve_point` speaks the same
+             column vocabulary — see `record_anytime`)
 
 A `MatchServer(telemetry=True)` owns one instance and threads it into
 its scheduler/pump, each `PrefetchSource`, and the `CheckpointManager`;
@@ -94,6 +95,18 @@ class Telemetry:
                 self.curve_drops += 1
                 return
             pts.append(point)
+
+    def record_anytime(self, qid: int, answer) -> None:
+        """Append an `AnytimeAnswer`'s curve point to its trajectory.
+
+        The anytime API (`MatchServer.poll_result`) and the telemetry
+        curve store describe the same poll boundary; this keeps them in
+        the same column vocabulary — ``answer.curve_point()`` emits
+        exactly `CURVE_COLUMNS`, so an externally polled statement lands
+        on the query's confidence curve like any scheduler-recorded one
+        (same dedup on repeat polls, same per-query cap).
+        """
+        self.record_curve_point(qid, answer.curve_point())
 
     def trajectory(self, qid: int) -> List[dict]:
         """The recorded points for one query (oldest first)."""

@@ -86,85 +86,49 @@ bit-identical counts/tau/result to an uninterrupted one
 (tests/test_warm_restart.py; benchmarks/warm_restart.py measures the
 tuples-per-query gap vs a cold restart).
 
-Failure modes and the degradation contract
-------------------------------------------
+Anytime serving (progressive results + SLA stopping)
+----------------------------------------------------
 
-The serving stack classifies faults into four tiers, each with an
-explicit, observable response (`repro.io.faults` is the boundary
-layer; `repro.serve.supervisor.ServeSupervisor` the recovery layer):
+Every live query has a valid Theorem-1-style statement at every poll
+boundary, not just at retirement. `poll_result(rid)` returns the
+current `AnytimeAnswer` — best set so far (closest first), per-
+candidate margin, ``eps_n`` (the metric-space deviation guaranteed at
+the per-candidate budget delta/|V_Z|), ``delta_upper`` and
+``confidence`` — assembled host-side from the last poll's mirrors, so
+polling never dispatches device work or perturbs the loop.
+`iter_results(rid)` drives `step()` and yields each answer as it
+tightens, ending with the ``status="done"`` final answer; the fully
+converged stream ends bit-identically to the blocking result.
 
-  transient I/O   — a fetch raises `TransientIOError` / `TimeoutError`
-                    / `ConnectionError` / `EOFError` (flaky storage,
-                    dropped connection). `ResilientSource` retries with
-                    bounded exponential backoff + seeded jitter; a
-                    retry that succeeds re-reads the same immutable
-                    blocks, so a run whose faults all heal is
-                    BIT-IDENTICAL to a fault-free run (the
-                    FASTMATCH_CHAOS CI lane pins this).
-  permanent I/O   — retries/deadline exhausted, or the window fails
-                    `validate_window` integrity validation (shape,
-                    dtype, bitmap/valid-mask consistency — corrupt
-                    bytes must never reach `ingest`, because the
-                    shared counts matrix is DURABLE via the checkpoint
-                    cache). The window's blocks are quarantined: a
-                    structured ``window_quarantine`` /
-                    ``blocks_quarantine`` event fires, the scheduler
-                    drops them from every future pass order, and all
-                    later guarantees are derived over the surviving
-                    population. Results then carry ``degraded=True``
-                    and ``eps_effective = eps + 2q`` (q = quarantined
-                    tuple fraction): the strict (eps, delta) statement
-                    holds over the survivors, and because the layout
-                    pre-shuffle assigns tuples to blocks independently
-                    of content, eps + 2q is the honest L1 radius
-                    against the FULL dataset. ``exact`` likewise means
-                    a complete read of the survivors. Serving degrades;
-                    it does not block, and it does not lie.
-  crash           — an unrecoverable round failure
-                    (`UnrecoverableIOError`, a device loss, a poisoned
-                    jit). `ServeSupervisor` restores the last
-                    `CheckpointManager` snapshot and re-submits every
-                    incomplete query — lossless, because sampling is
-                    target-independent (the same property that makes
-                    warm restarts exact). Recovery wall time and
-                    restart counters flow through `repro.obs`.
-  overload        — more work than slots + deadlines allow. The
-                    supervisor sheds load explicitly (bounded queue,
-                    per-query deadlines) rather than queueing forever;
-                    shed queries are reported as shed, never silently
-                    dropped (``queries_shed`` in `metrics`).
+SLA-driven stopping: pass ``stop=StopPolicy(wall_ms=...,
+confidence=..., tuples=...)`` to `submit`/`submit_closeness` (or
+``default_stop=`` at construction for a server-wide default). A
+stopped query retires with the honest anytime answer of its stopping
+poll — ``exact=False``, ``stopped=True`` with the reason, the achieved
+``delta_upper`` attached — bit-identical to what `poll_result` would
+have said at that round. The statistical rule always wins a tie, and
+supervisor deadline shedding (`ServeSupervisor`) composes as
+``stop_reason="deadline"``.
+
+Guarantees and failure modes
+----------------------------
+
+The complete guarantee contract — Theorem-1 (eps, delta), the
+closeness promise band [eps, eps+gap], metric-native vs conservative
+bounds (``bounds_mode``), early-reject pruning (``prune``), SLA
+early-stop semantics, quarantine degradation (``eps_effective = eps +
+2q``) and the four-tier fault taxonomy (transient I/O retries that
+stay bit-identical, permanent-I/O quarantine, crash recovery via
+`ServeSupervisor`, overload shedding) — lives in ``docs/guarantees.md``
+with exactly which server knobs weaken which guarantee. The short
+version: serving degrades honestly, it never blocks and never lies;
+every weakened answer says so on the result (``exact`` / ``degraded``
+/ ``stopped`` / ``eps_effective``).
 
 `metrics` exposes the health surface: ``last_error`` (most recent
 crash/shed cause, "" when healthy), ``queries_shed``,
 ``blocks_quarantined``, ``degraded`` and ``eps_inflation`` (the 2q
 widening every in-flight guarantee currently carries).
-
-Non-l1 metrics: what changes and what degrades
-----------------------------------------------
-
-With ``metric="chi2"`` or ``"hellinger"`` the (eps, delta) guarantee is
-stated in THAT metric, via `repro.core.bounds.metric_log_delta` — a
-composition of Theorem 1 with the metric's worst-case ℓ1 budget
-(chi²: eps/3; squared Hellinger: eps²/4; derivations in
-`core/bounds.py`). Three consequences callers should expect:
-
-  * conservatism — the budgets are uniform worst-case moduli, not
-    metric-native tail bounds, so non-l1 queries retire LATER (more
-    samples) than a specialized tester would need; Hellinger, with its
-    square-root modulus, is the most sample-hungry. The guarantee
-    itself stays valid — only efficiency degrades.
-  * eps scale — chi² taus live in [0, 2] and squared-Hellinger in
-    [0, 1], and a fixed eps costs ~(3/eps)² resp. ~(4/eps²)² times the
-    samples of the same l1 eps. Budget accordingly (the
-    `benchmarks/metrics_matrix.py` rounds-to-retire matrix quantifies
-    this); an eps chosen for l1 will usually be too tight for
-    hellinger on small datasets — such queries simply run to the exact
-    fallback (complete read) rather than returning a wrong answer.
-  * degraded-mode widening — the quarantine inflation ``2q`` is an ℓ1
-    radius; `QueryOutcome.eps_effective` adds it to a non-l1 eps
-    unconverted, so under quarantine treat non-l1 ``eps_effective`` as
-    a diagnostic, not a tight bound (the strict statement over the
-    surviving population is unaffected).
 """
 
 from __future__ import annotations
@@ -181,15 +145,50 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.core.engine import MatchResult
 from repro.core.multiquery import (
+    AnytimeAnswer,
     MultiQuerySpec,
     QueryOutcome,
     SharedCountsScheduler,
+    StopPolicy,
     cache_config_hash,
 )
 from repro.io import as_block_source, maybe_chaos
 from repro.obs import Telemetry
 
-__all__ = ["MatchQuery", "MatchServer"]
+__all__ = [
+    "AnytimeAnswer",
+    "MatchQuery",
+    "MatchServer",
+    "StopPolicy",
+    "answer_from_result",
+]
+
+
+def answer_from_result(res: MatchResult, *, metric: str) -> AnytimeAnswer:
+    """Degrade a blocking `MatchResult` to a ``status="done"`` anytime
+    answer.
+
+    Used when only the retired result survives — e.g. polling a query
+    resolved before a supervisor crash rebuild. The per-round fields the
+    retirement poll would have carried (split, eps_n, the query's
+    eps/delta) are not recoverable from the result alone and come back
+    NaN; the set, tau, margin and delta_upper are exact.
+    """
+    ids = np.asarray(res.ids)
+    tau_full = np.asarray(res.state.tau)
+    du = float(res.delta_upper)
+    return AnytimeAnswer(
+        qid=-1, qtype=res.qtype, status="done", ids=ids,
+        tau=tau_full[ids], margin=np.asarray(res.state.eps_i)[ids],
+        split=float("nan"), n_min=float(np.asarray(res.state.n).min()),
+        tau_min=float(tau_full.min()), eps_n=float("nan"),
+        delta_upper=du, confidence=max(0.0, 1.0 - du),
+        round=res.rounds, tuples=res.tuples_read,
+        tuples_live=res.tuples_read, eps=float("nan"),
+        delta=float("nan"), metric=metric,
+        exact=res.exact, stopped=res.stopped,
+        stop_reason=res.stop_reason, result=res,
+    )
 
 
 @dataclasses.dataclass
@@ -205,6 +204,7 @@ class MatchQuery:
     submit_time: float
     qtype: str = "topk"  # "topk" | "closeness"
     gap: float = 0.0  # closeness promise gap
+    stop: Optional[StopPolicy] = None  # SLA policy; None = server default
 
 
 class MatchServer:
@@ -235,6 +235,9 @@ class MatchServer:
         telemetry=None,
         kernel_plans=None,
         metric: str = "l1",
+        bounds_mode: str = "native",
+        prune: bool = False,
+        default_stop: Optional[StopPolicy] = None,
     ):
         # k_cap: static bound on any query's k — lets the per-slot
         # deviation assignment use a (k_cap+1)-element top_k instead of
@@ -272,8 +275,16 @@ class MatchServer:
         #
         # metric: the registry distance every query on this server is
         # stated in ("l1" | "chi2" | "hellinger") — static per server,
-        # like the kernel plan; see the failure-modes note above for
-        # what to expect from non-l1 bounds.
+        # like the kernel plan; see docs/guarantees.md for what to
+        # expect from non-l1 bounds.
+        #
+        # bounds_mode: "native" (default) routes failure bounds through
+        # the observation-aware per-metric budgets (never looser than
+        # the uniform ones; l1 is bit-identical either way);
+        # "conservative" keeps the PR-9 uniform budgets. prune: enable
+        # early-reject pruning of clearly-far candidates from the I/O
+        # marking (static flag — flipping it recompiles). default_stop:
+        # server-wide SLA StopPolicy for queries submitted without one.
         if telemetry is True:
             telemetry = Telemetry()
         elif telemetry is False:
@@ -296,6 +307,9 @@ class MatchServer:
                 criterion=criterion,
                 k_cap=k_cap,
                 metric=metric,
+                bounds_mode=bounds_mode,
+                prune=prune,
+                default_stop=default_stop,
             )
             self.scheduler = DistributedPump(
                 dataset,
@@ -332,6 +346,9 @@ class MatchServer:
                 criterion=criterion,
                 k_cap=k_cap,
                 metric=metric,
+                bounds_mode=bounds_mode,
+                prune=prune,
+                default_stop=default_stop,
             )
             self.scheduler = SharedCountsScheduler(
                 source,
@@ -368,6 +385,10 @@ class MatchServer:
         self.last_error = ""
         self.queries_shed = 0
         self._rid_of_qid: Dict[int, int] = {}
+        self._qid_of_rid: Dict[int, int] = {}  # live queries only
+        # Retirement-time anytime statements, kept so poll_result on a
+        # done query replays the exact final answer.
+        self._anytime: Dict[int, AnytimeAnswer] = {}
         self._submit_time: Dict[int, float] = {}
         self._next_rid = 0
         # step()'s pass cursor (None = start a fresh pass next step)
@@ -385,11 +406,21 @@ class MatchServer:
 
     # -- request queue -----------------------------------------------------
 
-    def submit(self, target: np.ndarray, *, k: int, eps: float = 0.06, delta: float = 0.01) -> int:
+    def submit(
+        self,
+        target: np.ndarray,
+        *,
+        k: int,
+        eps: float = 0.06,
+        delta: float = 0.01,
+        stop: Optional[StopPolicy] = None,
+    ) -> int:
         """Queue a top-k query; returns a request id resolved in `results`.
 
         Validates here, at the caller's call site — a malformed request
-        must not sit in the queue and blow up mid-drain.
+        must not sit in the queue and blow up mid-drain. ``stop``
+        attaches an SLA `StopPolicy` (None inherits the server's
+        ``default_stop``).
         """
         target = np.asarray(target, np.float64).ravel()
         if target.shape != (self.spec.v_x,):
@@ -398,10 +429,16 @@ class MatchServer:
             raise ValueError(f"need 0 < k <= V_Z={self.spec.v_z}, got k={k}")
         if self.spec.k_cap is not None and k > self.spec.k_cap:
             raise ValueError(f"k={k} exceeds the server's k_cap={self.spec.k_cap}")
-        return self._enqueue(target, k=k, eps=eps, delta=delta)
+        return self._enqueue(target, k=k, eps=eps, delta=delta, stop=stop)
 
     def submit_closeness(
-        self, target: np.ndarray, *, eps: float, gap: float, delta: float = 0.01
+        self,
+        target: np.ndarray,
+        *,
+        eps: float,
+        gap: float,
+        delta: float = 0.01,
+        stop: Optional[StopPolicy] = None,
     ) -> int:
         """Queue a tolerant closeness test; returns a request id.
 
@@ -420,11 +457,13 @@ class MatchServer:
         if not eps >= 0.0:
             raise ValueError(f"closeness needs eps >= 0, got eps={eps}")
         return self._enqueue(
-            target, k=1, eps=eps, delta=delta, qtype="closeness", gap=gap
+            target, k=1, eps=eps, delta=delta, qtype="closeness", gap=gap,
+            stop=stop,
         )
 
     def _enqueue(
-        self, target, *, k, eps, delta, qtype: str = "topk", gap: float = 0.0
+        self, target, *, k, eps, delta, qtype: str = "topk", gap: float = 0.0,
+        stop: Optional[StopPolicy] = None,
     ) -> int:
         rid = self._next_rid
         self._next_rid += 1
@@ -438,6 +477,7 @@ class MatchServer:
                 submit_time=time.perf_counter(),
                 qtype=qtype,
                 gap=gap,
+                stop=stop,
             )
         )
         if self.telemetry is not None:
@@ -454,9 +494,10 @@ class MatchServer:
             q = self.pending.popleft()
             qid = self.scheduler.admit(
                 q.target, k=q.k, eps=q.eps, delta=q.delta,
-                qtype=q.qtype, gap=q.gap,
+                qtype=q.qtype, gap=q.gap, stop=q.stop,
             )
             self._rid_of_qid[qid] = q.rid
+            self._qid_of_rid[q.rid] = qid
             self._submit_time[q.rid] = q.submit_time
         self._collect()
 
@@ -466,8 +507,12 @@ class MatchServer:
             rid = self._rid_of_qid.pop(qid, None)
             if rid is None:
                 continue  # already collected
+            self._qid_of_rid.pop(rid, None)
             del self.scheduler.outcomes[qid]
             res = self.results[rid] = self._to_result(rid, out)
+            if out.anytime is not None:
+                out.anytime.result = res
+                self._anytime[rid] = out.anytime
             self._retired_since_save += 1
             if self.telemetry is not None:
                 # The rid↔qid join point: query_enqueue events carry the
@@ -494,6 +539,8 @@ class MatchServer:
             degraded=out.degraded,
             eps_effective=out.eps_effective,
             qtype=out.qtype,
+            stopped=out.stopped,
+            stop_reason=out.stop_reason,
         )
 
     # -- warm-start persistence --------------------------------------------
@@ -646,6 +693,74 @@ class MatchServer:
                     self.scheduler.retire(slot, exact=False, terminated=False)
             self._collect()
         return dict(self.results)
+
+    # -- anytime API -------------------------------------------------------
+
+    def poll_result(self, rid: int) -> AnytimeAnswer:
+        """The current progressive answer for ``rid`` — valid at any
+        poll boundary, host-only (never dispatches device work).
+
+        status="live": the best set so far with its Theorem-1-style
+        statement, assembled by `SharedCountsScheduler.peek` from the
+        last poll's mirrors. status="queued": a vacuous statement
+        (delta_upper=1, empty set) — the query is waiting for a slot.
+        status="done": the exact final statement of the retirement
+        poll, with ``.result`` holding the blocking `MatchResult`.
+        Unknown (or shed) request ids raise KeyError.
+        """
+        self._collect()  # fold already-retired outcomes; host-only
+        if rid in self._anytime:
+            return self._anytime[rid]
+        if rid in self.results:
+            # Retired through a path that predates anytime bookkeeping
+            # (e.g. results dict populated by a restore) — degrade to a
+            # minimal done statement rather than failing the poll.
+            return answer_from_result(self.results[rid], metric=self.spec.metric)
+        qid = self._qid_of_rid.get(rid)
+        if qid is not None:
+            sched = self.scheduler
+            for slot, t in sched.tickets.items():
+                if t.qid == qid:
+                    return sched.peek(slot)
+        for q in self.pending:
+            if q.rid == rid:
+                return AnytimeAnswer(
+                    qid=-1, qtype=q.qtype, status="queued",
+                    ids=np.zeros(0, np.int64), tau=np.zeros(0, np.float32),
+                    margin=np.zeros(0, np.float32), split=float("nan"),
+                    n_min=0.0, tau_min=float("nan"), eps_n=float("inf"),
+                    delta_upper=1.0, confidence=0.0,
+                    round=self.scheduler.rounds,
+                    tuples=self.scheduler.tuples_read, tuples_live=0,
+                    eps=q.eps, delta=q.delta, metric=self.spec.metric,
+                )
+        raise KeyError(f"unknown request id {rid}")
+
+    def iter_results(self, rid: int, *, max_steps: int = 100_000):
+        """Stream progressively refining answers for ``rid``.
+
+        Drives the incremental serving unit `step()` between polls (so
+        OTHER queued/live queries advance too) and yields an
+        `AnytimeAnswer` each time the statement changes — tighter
+        delta_upper, a new round, or a different best set — ending with
+        the ``status="done"`` final answer, which for a fault-free
+        converged query is bit-identical to the blocking result.
+        ``max_steps`` bounds the drive (the generator just stops
+        yielding if it is exhausted; the query keeps its slot).
+        """
+        last = None
+        for _ in range(max_steps):
+            ans = self.poll_result(rid)
+            key = (ans.status, ans.round, ans.delta_upper, ans.ids.tobytes())
+            if key != last:
+                last = key
+                yield ans
+            if ans.status == "done":
+                return
+            self.step()
+        ans = self.poll_result(rid)
+        if ans.status == "done":
+            yield ans
 
     # -- observability -----------------------------------------------------
 

@@ -49,7 +49,12 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.core.engine import MatchResult
-from repro.serve.fastmatch_server import MatchServer
+from repro.serve.fastmatch_server import (
+    AnytimeAnswer,
+    MatchServer,
+    StopPolicy,
+    answer_from_result,
+)
 
 __all__ = ["ServeSupervisor", "SupervisorPolicy"]
 
@@ -84,6 +89,7 @@ class _Request:
     delta: float
     deadline: Optional[float]  # absolute monotonic time, None = none
     submit_time: float
+    stop: Optional[StopPolicy] = None  # SLA stop policy, survives rebuilds
     server_rid: Optional[int] = None  # rid on the CURRENT server
 
 
@@ -170,7 +176,7 @@ class ServeSupervisor:
             if req.rid in self.results or req.rid in self.shed:
                 continue
             req.server_rid = self.server.submit(
-                req.target, k=req.k, eps=req.eps, delta=req.delta
+                req.target, k=req.k, eps=req.eps, delta=req.delta, stop=req.stop
             )
             resubmitted += 1
         recovery_s = time.perf_counter() - t0
@@ -187,9 +193,17 @@ class ServeSupervisor:
     # -- requests ----------------------------------------------------------
 
     def submit(self, target, *, k: int, eps: float = 0.06, delta: float = 0.01,
-               deadline_s: Optional[float] = None) -> int:
+               deadline_s: Optional[float] = None,
+               stop: Optional[StopPolicy] = None) -> int:
         """Queue a supervised query; returns a supervisor rid resolved
-        in ``results`` (answered) or ``shed`` (refused/expired)."""
+        in ``results`` (answered) or ``shed`` (refused/expired).
+
+        ``stop`` is the per-query SLA policy (see `StopPolicy`); it is
+        carried on the supervised request and re-applied on crash
+        re-submission. Supervisor deadlines compose with it: whichever
+        fires first retires the query (a live deadline retirement is
+        reported as ``stop_reason="deadline"``).
+        """
         rid = self._next_rid
         self._next_rid += 1
         if deadline_s is None:
@@ -199,7 +213,7 @@ class ServeSupervisor:
             rid=rid, target=np.asarray(target, np.float64).ravel(),
             k=k, eps=eps, delta=delta,
             deadline=None if deadline_s is None else now + deadline_s,
-            submit_time=now,
+            submit_time=now, stop=stop,
         )
         self._requests[rid] = req
         if (
@@ -208,7 +222,8 @@ class ServeSupervisor:
         ):
             self._shed(req, "overload")
             return rid
-        req.server_rid = self.server.submit(target, k=k, eps=eps, delta=delta)
+        req.server_rid = self.server.submit(target, k=k, eps=eps, delta=delta,
+                                            stop=stop)
         return rid
 
     def _shed(self, req: _Request, reason: str) -> None:
@@ -253,7 +268,8 @@ class ServeSupervisor:
                     sched._sync()  # fresh mirrors: retire() runs on them
                     retired_any = True
                 fired = bool(sched._delta_upper[slot] < sched.tickets[slot].delta)
-                sched.retire(slot, exact=False, terminated=fired)
+                sched.retire(slot, exact=False, terminated=fired,
+                             stopped=True, stop_reason="deadline")
                 if self.telemetry is not None:
                     self.telemetry.tracer.emit(
                         "query_deadline_retire", rid=req.rid, qid=qid,
@@ -270,6 +286,28 @@ class ServeSupervisor:
                 continue
             if req.server_rid is not None and req.server_rid in srv_results:
                 self.results[req.rid] = srv_results[req.server_rid]
+
+    def poll_result(self, rid: int) -> AnytimeAnswer:
+        """The current anytime answer for supervisor request ``rid``.
+
+        Passthrough to `MatchServer.poll_result` on the live server. A
+        shed request (overload or queued-at-deadline) has no answer —
+        it never consumed I/O — and raises KeyError, as does an unknown
+        rid. A request resolved before a crash rebuild is answered from
+        the stored `MatchResult` (the rebuilt server no longer knows
+        its rid).
+        """
+        if rid in self.shed:
+            raise KeyError(f"request {rid} was shed ({self.shed[rid]})")
+        req = self._requests[rid]
+        if rid in self.results:
+            ans = self.server._anytime.get(req.server_rid)
+            if ans is not None and ans.result is self.results[rid]:
+                return ans
+            return answer_from_result(
+                self.results[rid], metric=self.server.spec.metric
+            )
+        return self.server.poll_result(req.server_rid)
 
     # -- the supervised loop -----------------------------------------------
 

@@ -1,0 +1,376 @@
+"""Golden suite for the anytime serving API (PR 10).
+
+Five contracts, each pinned here:
+
+  1. STOP == POLL — an SLA-stopped query's answer at round r is
+     bit-identical to what `poll_result` reports at round r on an
+     unstopped twin of the same seeded stream (`retire` assembles the
+     stopped answer through `SharedCountsScheduler.peek`, the same
+     host code path serving live polls).
+  2. STREAM ENDS AT BLOCKING — a converged `iter_results` stream's
+     final answer matches the blocking `run_until_idle` result bit for
+     bit (ids, tau, delta_upper, exact) on an identical twin.
+  3. PRUNE SOUND — with early-reject pruning on, the pruned mask is
+     sticky and a pruned candidate never reappears in any later best
+     set (polled every round), and the final answer matches the
+     unpruned run.
+  4. NATIVE <= CONSERVATIVE — the tau-aware native budget family
+     dominates the uniform per-metric budgets pointwise (so the sample
+     requirement never exceeds the conservative one), collapses to the
+     l1 arm bit-identically, and its epsilon inversion round-trips.
+  5. SLA PLUMBING — StopPolicy validation/ordering, supervisor
+     threading (deadline composition, crash-resubmission carry,
+     shed-poll KeyError), and the CURVE_COLUMNS vocabulary equality
+     between polls and telemetry.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bounds
+from repro.core.multiquery import AnytimeAnswer, StopPolicy
+from repro.data.layout import block_layout
+from repro.data.synth import SynthSpec, make_dataset
+from repro.obs import CURVE_COLUMNS
+from repro.serve.fastmatch_server import MatchServer
+from repro.serve.supervisor import ServeSupervisor, SupervisorPolicy
+
+jax.config.update("jax_platform_name", "cpu")
+
+K, DELTA, SEED = 5, 0.05, 3
+
+
+@pytest.fixture(scope="module")
+def served():
+    spec = SynthSpec(
+        v_z=48, v_x=16, num_tuples=120_000, k=K, n_close=6,
+        close_distance=0.03, far_distance=0.4, zipf_a=1.0, seed=SEED,
+    )
+    ds = make_dataset(spec)
+    blocked = block_layout(
+        ds.z, ds.x, v_z=48, v_x=16, block_size=512, seed=SEED
+    )
+    return ds, blocked
+
+
+def _server(blocked, **kw):
+    kw.setdefault("max_queries", 2)
+    kw.setdefault("lookahead", 8)
+    kw.setdefault("seed", SEED)
+    return MatchServer(blocked, **kw)
+
+
+# ---------------------------------------------------------------------------
+# 1. STOP == POLL
+# ---------------------------------------------------------------------------
+
+
+class TestStopEqualsPoll:
+    def test_stopped_answer_is_the_poll_at_that_round(self, served):
+        ds, blocked = served
+        budget = 20_000
+        a = _server(blocked)
+        rid_a = a.submit(ds.target, k=K, eps=0.02, delta=0.01,
+                         stop=StopPolicy(tuples=budget))
+        res = a.run_until_idle()[rid_a]
+        assert res.stopped and res.stop_reason == "tuples" and not res.exact
+        assert res.tuples_read >= budget
+        ans_a = a.poll_result(rid_a)
+        assert ans_a.status == "done" and ans_a.result is res
+
+        # unstopped twin of the same seeded stream, stepped to the
+        # stopping round, then polled: bit-identical statement
+        b = _server(blocked)
+        rid_b = b.submit(ds.target, k=K, eps=0.02, delta=0.01)
+        while b.scheduler.rounds < ans_a.round and rid_b not in b.results:
+            b.step()
+        ans_b = b.poll_result(rid_b)
+        assert ans_b.status == "live" and ans_b.round == ans_a.round
+        assert ans_a.ids.tobytes() == ans_b.ids.tobytes()
+        assert ans_a.tau.tobytes() == ans_b.tau.tobytes()
+        assert ans_a.margin.tobytes() == ans_b.margin.tobytes()
+        assert ans_a.split == ans_b.split
+        assert ans_a.delta_upper == ans_b.delta_upper
+        assert ans_a.n_min == ans_b.n_min
+        assert ans_a.tuples == ans_b.tuples
+        assert ans_a.eps_n == ans_b.eps_n
+        b.run_until_idle()
+
+    def test_result_mirrors_the_anytime_statement(self, served):
+        ds, blocked = served
+        srv = _server(blocked)
+        rid = srv.submit(ds.target, k=K, eps=0.02, delta=0.01,
+                         stop=StopPolicy(tuples=15_000))
+        res = srv.run_until_idle()[rid]
+        ans = srv.poll_result(rid)
+        assert np.array_equal(ans.ids, np.asarray(res.ids))
+        assert ans.stopped and ans.stop_reason == res.stop_reason
+        assert not ans.exact
+
+    def test_statistical_convergence_beats_the_sla(self, served):
+        # a policy that would fire is ignored when the bound fires
+        # first at the same poll: the answer retires as terminated
+        ds, blocked = served
+        srv = _server(blocked, lookahead=64)
+        rid = srv.submit(ds.target, k=K, eps=0.08, delta=DELTA,
+                         stop=StopPolicy(tuples=10**9))
+        res = srv.run_until_idle()[rid]
+        assert not res.stopped and res.stop_reason == ""
+
+
+# ---------------------------------------------------------------------------
+# 2. STREAM ENDS AT BLOCKING
+# ---------------------------------------------------------------------------
+
+
+class TestStreamEndsAtBlocking:
+    @pytest.mark.parametrize("metric", ["l1", "chi2"])
+    def test_converged_stream_matches_blocking_twin(self, served, metric):
+        ds, blocked = served
+        eps = 0.08 if metric == "l1" else 0.15
+
+        a = _server(blocked, metric=metric)
+        rid_a = a.submit(ds.target, k=K, eps=eps, delta=DELTA)
+        stream = list(a.iter_results(rid_a))
+        final = stream[-1]
+        assert final.status == "done"
+        assert [s.status for s in stream[:-1]].count("done") == 0
+
+        b = _server(blocked, metric=metric)
+        rid_b = b.submit(ds.target, k=K, eps=eps, delta=DELTA)
+        blocking = b.run_until_idle()[rid_b]
+        # ids: exact same candidates in the same order (the outcome's
+        # device ids are int32, the poll's host ids int64 — value-exact)
+        assert final.ids.tolist() == np.asarray(blocking.ids).tolist()
+        assert final.result.state.tau.tobytes() == blocking.state.tau.tobytes()
+        assert final.delta_upper == blocking.delta_upper
+        assert final.exact == blocking.exact
+        assert final.round == a.scheduler.rounds == b.scheduler.rounds
+
+    def test_stream_is_at_poll_granularity_and_dedups(self, served):
+        ds, blocked = served
+        srv = _server(blocked)
+        rid = srv.submit(ds.target, k=K, eps=0.08, delta=DELTA)
+        rounds = [a.round for a in srv.iter_results(rid) if a.status == "live"]
+        assert rounds == sorted(set(rounds))  # strictly refining polls
+
+    def test_queued_statement_is_vacuous(self, served):
+        ds, blocked = served
+        srv = _server(blocked, max_queries=1, lookahead=64)
+        ra = srv.submit(ds.target, k=K, eps=0.08, delta=DELTA)
+        rb = srv.submit(ds.target, k=3, eps=0.08, delta=DELTA)
+        srv.step()
+        live, queued = srv.poll_result(ra), srv.poll_result(rb)
+        assert live.status == "live" and live.ids.size == K
+        assert queued.status == "queued"
+        assert queued.delta_upper == 1.0 and queued.confidence == 0.0
+        assert queued.ids.size == 0 and queued.n_min == 0.0
+        with pytest.raises(KeyError):
+            srv.poll_result(999)
+        srv.run_until_idle()
+
+    def test_curve_vocabulary_matches_telemetry(self, served):
+        ds, blocked = served
+        srv = _server(blocked, lookahead=64, telemetry=True)
+        rid = srv.submit(ds.target, k=K, eps=0.08, delta=DELTA)
+        polls = []
+        for ans in srv.iter_results(rid):
+            assert tuple(ans.curve_point()) == CURVE_COLUMNS
+            polls.append(ans)
+            if ans.status != "queued":  # queued statements are vacuous
+                srv.telemetry.record_anytime(99, ans)  # side curve, poll-fed
+        # an externally recorded poll point equals the scheduler's own
+        # trajectory point at the same round
+        own = {p["round"]: p for p in srv.telemetry.trajectory(0)}
+        fed = srv.telemetry.trajectory(99)
+        assert fed, "polled points must land on the side curve"
+        for p in fed:
+            if p["round"] in own and p["tuples"] == own[p["round"]]["tuples"]:
+                assert p == own[p["round"]]
+
+
+# ---------------------------------------------------------------------------
+# 3. PRUNE SOUND
+# ---------------------------------------------------------------------------
+
+
+class TestPruneSound:
+    def test_pruned_never_reappears_and_answer_unchanged(self, served):
+        ds, blocked = served
+        runs = {}
+        for prune in (False, True):
+            srv = _server(blocked, metric="chi2", prune=prune)
+            rid = srv.submit(ds.target, k=K, eps=0.15, delta=DELTA)
+            best_sets, masks = [], []
+            for ans in srv.iter_results(rid):
+                if ans.status == "live":
+                    best_sets.append(set(ans.ids.tolist()))
+                    masks.append(srv.scheduler._pruned_host[0].copy())
+            runs[prune] = (srv.results[rid], best_sets, masks)
+
+        res, best_sets, masks = runs[True]
+        assert masks[-1].any(), "chi2 at this radius must actually prune"
+        # sticky: the mask only grows
+        for a, b in zip(masks, masks[1:]):
+            assert not (a & ~b).any()
+        # a pruned candidate is out of every later best set, final included
+        final_set = set(res.ids.tolist())
+        for i, m in enumerate(masks):
+            pruned = set(np.flatnonzero(m).tolist())
+            for later in best_sets[i:] + [final_set]:
+                assert not (pruned & later)
+        # and pruning changed no answer
+        assert sorted(res.ids.tolist()) == sorted(runs[False][0].ids.tolist())
+
+    def test_prune_off_is_the_default_and_mask_stays_empty(self, served):
+        ds, blocked = served
+        srv = _server(blocked)
+        assert srv.spec.prune is False
+        rid = srv.submit(ds.target, k=K, eps=0.08, delta=DELTA)
+        srv.run_until_idle()
+        assert not srv.scheduler._pruned_host.any()
+        assert rid in srv.results
+
+
+# ---------------------------------------------------------------------------
+# 4. NATIVE <= CONSERVATIVE
+# ---------------------------------------------------------------------------
+
+
+class TestNativeBounds:
+    EPS_GRID = np.asarray([0.01, 0.05, 0.15, 0.3, 0.6, 1.0], np.float32)
+    TAU_GRID = np.asarray([0.0, 0.02, 0.1, 0.3, 0.8, 1.5], np.float32)
+
+    @pytest.mark.parametrize("metric", ["chi2", "hellinger"])
+    def test_native_budget_dominates_uniform(self, metric):
+        for eps in self.EPS_GRID:
+            uni = float(bounds.metric_l1_budget(eps, metric))
+            for tau in self.TAU_GRID:
+                nat = float(bounds.metric_native_l1_budget(eps, tau, metric))
+                # bigger l1 budget == fewer samples needed
+                assert nat >= uni - 1e-7, (metric, eps, tau, nat, uni)
+                assert bounds.theorem1_samples(nat, 1e-3, 16) <= (
+                    bounds.theorem1_samples(uni, 1e-3, 16)
+                )
+
+    @pytest.mark.parametrize("metric", ["chi2", "hellinger"])
+    def test_native_strictly_better_somewhere(self, metric):
+        # the tau-aware route must actually buy something at small tau
+        eps = 0.3
+        uni = float(bounds.metric_l1_budget(eps, metric))
+        nat = float(bounds.metric_native_l1_budget(eps, 0.0, metric))
+        assert nat > uni * 1.5
+
+    def test_l1_arm_is_bit_identical(self):
+        eps = jnp.asarray(self.EPS_GRID)
+        n = jnp.asarray([10.0, 100.0, 5000.0])[:, None]
+        old = bounds.theorem1_log_delta(eps, n, 16)
+        new = bounds.metric_native_log_delta(eps, n, 16, tau=0.5, metric="l1")
+        assert np.asarray(old).tobytes() == np.asarray(new).tobytes()
+
+    @pytest.mark.parametrize("metric", ["l1", "chi2", "hellinger"])
+    def test_epsilon_inversion_round_trips(self, metric):
+        # eps(n) must be spendable: plugging it back yields <= delta
+        for tau in self.TAU_GRID:
+            for delta_i in (1e-2, 1e-4):
+                n = jnp.asarray([50.0, 500.0, 20_000.0])
+                eps = bounds.metric_native_epsilon(
+                    n, delta_i, 16, tau=tau, metric=metric
+                )
+                ld = bounds.metric_native_log_delta(
+                    eps, n, 16, tau=tau, metric=metric
+                )
+                assert np.all(np.asarray(ld) <= np.log(delta_i) + 1e-4)
+
+    @pytest.mark.parametrize("metric", ["chi2", "hellinger"])
+    def test_serving_native_no_slower_same_answer(self, served, metric):
+        ds, blocked = served
+        eps = {"chi2": 0.15, "hellinger": 0.25}[metric]
+        got = {}
+        for mode in ("conservative", "native"):
+            srv = _server(blocked, metric=metric, bounds_mode=mode)
+            rid = srv.submit(ds.target, k=K, eps=eps, delta=DELTA)
+            got[mode] = srv.run_until_idle()[rid]
+        assert got["native"].rounds <= got["conservative"].rounds
+        assert sorted(got["native"].ids.tolist()) == sorted(
+            got["conservative"].ids.tolist()
+        )
+
+    def test_bounds_mode_rejects_unknown(self, served):
+        ds, blocked = served
+        with pytest.raises(ValueError, match="bounds_mode"):
+            _server(blocked, bounds_mode="optimistic")
+
+
+# ---------------------------------------------------------------------------
+# 5. SLA PLUMBING
+# ---------------------------------------------------------------------------
+
+
+class TestStopPolicy:
+    def test_needs_at_least_one_criterion(self):
+        with pytest.raises(ValueError):
+            StopPolicy()
+
+    @pytest.mark.parametrize(
+        "kw", [dict(wall_ms=-1), dict(confidence=1.5), dict(tuples=-1)]
+    )
+    def test_rejects_bad_ranges(self, kw):
+        with pytest.raises(ValueError):
+            StopPolicy(**kw)
+
+    def test_fired_prefers_strongest_answer_first(self):
+        p = StopPolicy(wall_ms=1.0, confidence=0.5, tuples=100)
+        assert p.fired(wall_s=1.0, confidence=0.9, tuples=200) == "confidence"
+        assert p.fired(wall_s=1.0, confidence=0.1, tuples=200) == "tuples"
+        assert p.fired(wall_s=1.0, confidence=0.1, tuples=50) == "wall_ms"
+        assert p.fired(wall_s=1e-6, confidence=0.1, tuples=50) == ""
+
+
+class TestSupervisorSLA:
+    def test_stop_threads_through_and_shed_polls_raise(self, served):
+        ds, blocked = served
+        sup = ServeSupervisor(
+            blocked, policy=SupervisorPolicy(max_queue=1),
+            max_queries=1, lookahead=8, seed=SEED,
+        )
+        r1 = sup.submit(ds.target, k=K, eps=0.03, delta=DELTA,
+                        stop=StopPolicy(tuples=15_000))
+        r2 = sup.submit(ds.target, k=K, eps=0.03, delta=DELTA)
+        sup.run_until_idle()
+        res = sup.results[r1]
+        assert res.stopped and res.stop_reason == "tuples"
+        ans = sup.poll_result(r1)
+        assert ans.status == "done" and ans.stopped
+        assert np.array_equal(ans.ids, np.asarray(res.ids))
+        assert sup.shed.get(r2) == "overload"
+        with pytest.raises(KeyError, match="shed"):
+            sup.poll_result(r2)
+
+    def test_deadline_retire_reports_deadline_reason(self, served):
+        ds, blocked = served
+        sup = ServeSupervisor(blocked, max_queries=1, lookahead=8, seed=SEED)
+        rid = sup.submit(ds.target, k=K, eps=0.02, delta=0.01,
+                         deadline_s=0.0)
+        sup.server.step()  # admit, then the deadline fires on the next tick
+        sup.run_until_idle()
+        res = sup.results[rid]
+        assert res.stopped and res.stop_reason == "deadline"
+        assert not res.exact
+        assert sup.poll_result(rid).stop_reason == "deadline"
+
+
+class TestAnytimeAnswerShape:
+    def test_default_flags(self):
+        ans = AnytimeAnswer(
+            qid=0, qtype="topk", status="live", ids=np.zeros(0, np.int64),
+            tau=np.zeros(0, np.float32), margin=np.zeros(0, np.float32),
+            split=0.0, n_min=0.0, tau_min=0.0, eps_n=1.0, delta_upper=1.0,
+            confidence=0.0, round=0, tuples=0, tuples_live=0, eps=0.1,
+            delta=0.05, metric="l1",
+        )
+        assert not ans.exact and not ans.stopped and ans.result is None
+        assert set(ans.curve_point()) == set(CURVE_COLUMNS)

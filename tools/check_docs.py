@@ -1,0 +1,72 @@
+"""Execute every fenced ```python block in README.md and docs/*.md.
+
+Documentation that shows code rots the moment an API drifts; this
+gate keeps the user-facing docs layer honest by actually running it.
+Rules:
+
+  * only blocks fenced exactly as ```python are executed — use ```text
+    (diagrams, shell transcripts) or ```bash for anything illustrative;
+  * blocks within one file share a namespace and run top to bottom, so
+    a document can build an example incrementally (imports first,
+    results later) the way a reader reads it;
+  * each FILE gets a fresh namespace — no cross-document coupling;
+  * any exception fails the run (non-zero exit), with the file name
+    and block number in the traceback.
+
+CI runs this from the repo root on the tier-1 lane:
+
+    PYTHONPATH=src python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+import time
+import traceback
+
+FENCE = re.compile(r"^```python[ \t]*\r?\n(.*?)^```[ \t]*$", re.M | re.S)
+
+
+def python_blocks(path: pathlib.Path) -> list:
+    return [m.group(1) for m in FENCE.finditer(path.read_text())]
+
+
+def run_file(path: pathlib.Path) -> int:
+    """Execute one document's blocks in a shared namespace; returns the
+    number of failed blocks."""
+    blocks = python_blocks(path)
+    if not blocks:
+        print(f"# {path.name}: no python blocks")
+        return 0
+    ns: dict = {"__name__": f"docs_{path.stem}"}
+    failures = 0
+    for i, block in enumerate(blocks, 1):
+        label = f"{path.name} block {i}/{len(blocks)}"
+        t0 = time.perf_counter()
+        try:
+            exec(compile(block, f"<{label}>", "exec"), ns)
+        except Exception:
+            traceback.print_exc()
+            print(f"# {label}: FAILED")
+            failures += 1
+        else:
+            print(f"# {label}: ok ({time.perf_counter() - t0:.1f}s)")
+    return failures
+
+
+def main() -> None:
+    root = pathlib.Path(__file__).resolve().parents[1]
+    files = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+    missing = [f.name for f in files[:1] if not f.exists()]
+    if missing:
+        sys.exit(f"missing: {missing}")
+    failures = sum(run_file(f) for f in files if f.exists())
+    if failures:
+        sys.exit(f"{failures} documentation block(s) failed")
+    print("# docs: all executable blocks passed")
+
+
+if __name__ == "__main__":
+    main()
